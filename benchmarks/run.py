@@ -1,0 +1,30 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived...`` CSV rows.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (collective_model, compressibility, decode_speed,
+                            kernels_bench, multi_lut, scheme_search)
+    modules = [compressibility, decode_speed, collective_model,
+               scheme_search, multi_lut, kernels_bench]
+    all_rows = []
+    for mod in modules:
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness running
+            rows = [{"name": f"{mod.__name__}_ERROR", "us_per_call": -1,
+                     "error": str(e)[:200]}]
+        all_rows.extend(rows)
+
+    for row in all_rows:
+        name = row.pop("name")
+        us = row.pop("us_per_call")
+        derived = ";".join(f"{k}={v}" for k, v in row.items())
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Root conftest: make `pytest tests/` work from a clean checkout
+(src/ layout + `tests.` package imports) regardless of PYTHONPATH."""
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,6 @@
+"""repro — Quad Length Codes (QLC) compressed-communication framework.
+
+A multi-pod JAX training/serving framework where QLC-compressed e4m3
+collectives are a first-class feature. See DESIGN.md.
+"""
+__version__ = "1.0.0"

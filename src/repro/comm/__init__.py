@@ -1,0 +1,26 @@
+"""Compressed collectives: QLC-coded e4m3 communication (paper §1)."""
+from repro.comm.compressed import (  # noqa: F401
+    CommConfig,
+    WirePayload,
+    compress_codes,
+    decompress_codes,
+    qlc_all_gather,
+    qlc_all_to_all,
+    qlc_psum,
+    qlc_reduce_scatter,
+    ref_all_gather,
+    ref_psum,
+    ref_reduce_scatter,
+    wire_bytes,
+)
+from repro.comm.planner import CommPlan, plan_for_tables  # noqa: F401
+from repro.comm.calibrate import (  # noqa: F401
+    calibrate_for_gradients,
+    calibrate_for_tensor,
+    histogram_of_quantized,
+)
+from repro.comm.weights import (  # noqa: F401
+    GroupWireCodec,
+    compress_groups,
+    wire_shape_structs,
+)

@@ -1,0 +1,100 @@
+"""Per-tensor-type codec calibration (paper §7: one LUT per tensor type,
+derived apriori from a histogram of the quantized data).
+
+Typical flow: run one (uncompressed) step, histogram the e4m3 symbols of
+the tensors you intend to compress, build tables + wire plan. The
+histogram kernel (``repro.kernels.ops.histogram``) does this on-device
+for production; here numpy suffices.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.compressed import CommConfig
+from repro.comm.planner import CommPlan, plan_for_tables
+from repro.core import adapt, entropy
+from repro.core.lut import CodecTables
+from repro.core.schemes import QLCScheme
+from repro.quant import e4m3
+
+
+def histogram_of_quantized(x: jnp.ndarray) -> np.ndarray:
+    """float tensor -> counts[256] of its block-32 e4m3 symbols."""
+    flat = jnp.asarray(x, jnp.float32).reshape(-1)
+    n = (flat.shape[0] // e4m3.BLOCK) * e4m3.BLOCK
+    codes, _ = e4m3.quantize_block32(flat[:n])
+    return np.bincount(np.asarray(codes).reshape(-1),
+                       minlength=256).astype(np.float64)
+
+
+def calibrate_for_tensor(x: jnp.ndarray, scheme: Optional[QLCScheme] = None,
+                         chunk_symbols: int = 1024,
+                         target_escape_prob: float = 1e-6,
+                         allow_search: bool = False,
+                         empirical: bool = True,
+                         ) -> Tuple[CodecTables, CommPlan]:
+    """Histogram a representative tensor and derive tables + wire plan.
+
+    ``empirical=True`` sizes the chunk slot from the *measured* per-chunk
+    bit-count distribution rather than an iid Hoeffding bound. Real
+    payloads (e.g. a whole gradient vector) are mixtures of tensor types
+    with very different local statistics, so chunk sums are far more
+    dispersed than iid sampling of the global PMF predicts; the quantile
+    + margin sizing keeps the escape rate at the target without giving
+    up the compressible bulk. (The paper's per-tensor-type LUTs, §7, are
+    the other half of the answer — the planner supports one plan per
+    tensor type.)
+    """
+    flat = jnp.asarray(x, jnp.float32).reshape(-1)
+    n = (flat.shape[0] // e4m3.BLOCK) * e4m3.BLOCK
+    codes, _ = e4m3.quantize_block32(flat[:n])
+    codes_np = np.asarray(codes).reshape(-1)
+    counts = np.maximum(
+        np.bincount(codes_np, minlength=256).astype(np.float64), 1e-6)
+    tables = adapt.calibrate_tables(counts, scheme=scheme,
+                                    allow_search=allow_search)
+    plan = plan_for_tables(tables, counts, chunk_symbols=chunk_symbols,
+                           target_escape_prob=target_escape_prob)
+    if empirical:
+        lens = tables.enc_len[codes_np].astype(np.int64)
+        n_chunks = len(lens) // chunk_symbols
+        if n_chunks >= 8:
+            sums = lens[:n_chunks * chunk_symbols].reshape(
+                n_chunks, chunk_symbols).sum(axis=1)
+            # 99.9th percentile + half-bit/symbol drift margin
+            q = float(np.quantile(sums, 0.999))
+            bits = min(8.0 * chunk_symbols,
+                       q + 0.5 * chunk_symbols)
+            cap_words = max(1, int(np.ceil(bits / 32)))
+            emp_escape = float((sums > cap_words * 32).mean())
+            plan = CommPlan(
+                chunk_symbols=chunk_symbols,
+                capacity_words=cap_words,
+                pool_slots_per_1k=max(
+                    8, int(np.ceil(emp_escape * 1024 * 8)) + 8),
+                expected_bits_per_symbol=plan.expected_bits_per_symbol,
+                escape_prob_bound=max(emp_escape, target_escape_prob),
+            )
+    return tables, plan
+
+
+def calibrate_for_gradients(model_cfg, params, batch,
+                            chunk_symbols: int = 1024,
+                            allow_search: bool = False,
+                            ) -> Tuple[CodecTables, CommPlan]:
+    """One backward pass -> gradient histogram -> tables + plan."""
+    from repro.models import next_token_loss  # local import (cycle)
+
+    def loss(p):
+        return next_token_loss(p, model_cfg, batch["tokens"],
+                               batch["labels"], batch.get("prefix_emb"))
+
+    grads = jax.grad(loss)(params)
+    flat = jnp.concatenate([g.reshape(-1).astype(jnp.float32)
+                            for g in jax.tree.leaves(grads)])
+    return calibrate_for_tensor(flat, chunk_symbols=chunk_symbols,
+                                allow_search=allow_search)

@@ -1,0 +1,87 @@
+"""Capacity / escape planning for compressed collectives.
+
+Chooses the static wire slot size per chunk from the calibration
+histogram: slot = mean code length plus a Hoeffding-bounded margin so
+the per-chunk escape probability is below ``target_escape_prob``, and an
+overflow pool sized so whole-payload fallback is ~never needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core import entropy
+from repro.core.lut import CodecTables
+
+MIN_CODE_BITS = 4
+MAX_CODE_BITS = 11
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """Static wire-format parameters for one tensor type."""
+    chunk_symbols: int
+    capacity_words: int          # QLC slot per chunk, 32-bit words
+    pool_slots_per_1k: int       # escape-pool slots per 1024 chunks (min 1)
+    expected_bits_per_symbol: float
+    escape_prob_bound: float
+
+    @property
+    def capacity_bits(self) -> int:
+        return self.capacity_words * 32
+
+    @property
+    def wire_bytes_per_symbol(self) -> float:
+        """Main-slot wire bytes per symbol (excl. scales/flags/pool)."""
+        return self.capacity_words * 4 / self.chunk_symbols
+
+    def pool_slots(self, n_chunks: int) -> int:
+        return max(1, math.ceil(n_chunks * self.pool_slots_per_1k / 1024))
+
+
+def hoeffding_margin_bits(chunk_symbols: int, target_prob: float,
+                          lo: float = MIN_CODE_BITS,
+                          hi: float = MAX_CODE_BITS) -> float:
+    """Per-symbol margin t with P(mean_len > mu + t) <= target_prob."""
+    return (hi - lo) * math.sqrt(math.log(1.0 / target_prob)
+                                 / (2.0 * chunk_symbols))
+
+
+def plan_for_tables(tables: CodecTables, counts: np.ndarray,
+                    chunk_symbols: int = 1024,
+                    target_escape_prob: float = 1e-6,
+                    capacity_factor: Optional[float] = None,
+                    pool_slots_per_1k: int = 8) -> CommPlan:
+    """Build a plan from calibrated tables + the calibration histogram.
+
+    ``capacity_factor`` (bytes-per-symbol / 1.0) overrides the Hoeffding
+    sizing when given — used by the perf loop to trade escape risk for
+    bandwidth.
+    """
+    pmf = entropy.normalize_counts(counts)
+    mu = float(np.dot(tables.enc_len.astype(np.float64), pmf))
+    if capacity_factor is None:
+        t = hoeffding_margin_bits(chunk_symbols, target_escape_prob)
+        bits_per_sym = min(8.0, mu + t)
+    else:
+        bits_per_sym = 8.0 * capacity_factor
+    cap_words = max(1, math.ceil(bits_per_sym * chunk_symbols / 32))
+    return CommPlan(
+        chunk_symbols=chunk_symbols,
+        capacity_words=cap_words,
+        pool_slots_per_1k=pool_slots_per_1k,
+        expected_bits_per_symbol=mu,
+        escape_prob_bound=target_escape_prob,
+    )
+
+
+def effective_compression_ratio(plan: CommPlan,
+                                scale_bytes_per_symbol: float = 2.0 / 32,
+                                baseline_bytes: float = 2.0) -> float:
+    """baseline (bf16) bytes / compressed wire bytes, incl. scale overhead."""
+    wire = plan.wire_bytes_per_symbol + scale_bytes_per_symbol \
+        + 1.0 / plan.chunk_symbols  # 1 flag byte per chunk
+    return baseline_bytes / wire

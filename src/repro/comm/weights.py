@@ -1,0 +1,187 @@
+"""QLC-compressed weight wire for serving (paper §7: per-tensor-type
+LUTs; FFN1/FFN2 *weights* are among the tensor types the paper's traces
+cover).
+
+Decode steps at production scale are collective-bound: with FSDP'd
+parameters every token gathers the sharded weights in bf16. Storing the
+layer-stack parameters as block-32 e4m3 symbols (+ QLC words) makes
+those gathers move ~0.46x (QLC) / ~0.53x (raw e4m3) of the bytes; the
+codec runs in-graph right after the gather, inside the layer scan — a
+compute-for-bandwidth trade that wins exactly when the roofline says
+the cell is collective-bound.
+
+Weights are static: for real parameters the slot capacity is the exact
+measured max chunk size — zero escapes, no pool, unconditionally
+lossless (relative to the e4m3 values). Embeddings / LM head stay in
+bf16 (token gathers touch single rows; whole-table decode would be
+absurd).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec
+from repro.core.lut import CodecTables
+from repro.quant import e4m3
+
+CHUNK = 1024
+MIN_COMPRESS_SIZE = 1 << 16      # per-group; leave norms etc. alone
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafMeta:
+    group_shape: Tuple[int, ...]   # shape of ONE group's slice
+    dtype: Any
+    n_symbols: int                 # per group
+    n_chunks: int                  # per group
+    capacity_words: int
+    mode: str                      # qlc | e4m3
+
+
+@dataclasses.dataclass
+class GroupWireCodec:
+    """Static recipe + tables to open wired group params in-graph."""
+    meta: Dict[str, LeafMeta]
+    tables: CodecTables
+
+    def open_group(self, pg):
+        def walk(node, prefix):
+            if isinstance(node, dict) and (
+                    set(node) == {"codes", "scales"}
+                    or set(node) == {"words", "scales"}):
+                return self._decode(node, self.meta[prefix])
+            if isinstance(node, dict):
+                return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                        for k, v in node.items()}
+            return node
+        return walk(pg, "")
+
+    def _decode(self, wire, m: LeafMeta) -> jnp.ndarray:
+        # One explicit gather of the wire (replicate), THEN decode: the
+        # codec loop must consume local data or GSPMD re-gathers every
+        # iteration.
+        import jax as _jax
+        from jax.sharding import PartitionSpec as _P
+        try:
+            wire = {k: _jax.lax.with_sharding_constraint(v, _P())
+                    for k, v in wire.items()}
+        except Exception:
+            pass
+        if m.mode == "e4m3":
+            codes_flat = wire["codes"].reshape(-1)
+        else:
+            codes_flat = codec.decode_chunks(
+                wire["words"], self.tables, CHUNK).reshape(-1)
+        padded = m.n_chunks * CHUNK
+        vals = e4m3.dequantize_block32(
+            codes_flat[:padded],
+            wire["scales"].reshape(-1).astype(jnp.float32))
+        return vals[:m.n_symbols].reshape(m.group_shape).astype(m.dtype)
+
+
+def _eligible(leaf_shape) -> bool:
+    if len(leaf_shape) < 2:
+        return False
+    per_group = int(np.prod(leaf_shape[1:]))
+    return per_group >= MIN_COMPRESS_SIZE
+
+
+def _geometry(leaf_shape, mode: str, capacity_words: int):
+    g = leaf_shape[0]
+    n = int(np.prod(leaf_shape[1:]))
+    padded = -(-n // CHUNK) * CHUNK           # CHUNK % BLOCK == 0
+    n_chunks = padded // CHUNK
+    return g, n, padded, n_chunks
+
+
+def compress_groups(groups, tables: CodecTables, mode: str = "qlc"
+                    ) -> Tuple[Any, GroupWireCodec]:
+    """Real-parameter transform (serving launcher path)."""
+    meta: Dict[str, LeafMeta] = {}
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        leaf = node
+        if not _eligible(leaf.shape):
+            return leaf
+        g, n, padded, n_chunks = _geometry(leaf.shape, mode, 0)
+        flat = leaf.reshape(g, -1).astype(jnp.float32)
+        flat = jnp.pad(flat, ((0, 0), (0, padded - n)))
+        codes, scales = e4m3.quantize_block32(flat)
+        scales = scales.astype(jnp.bfloat16)
+        if mode == "e4m3":
+            meta[prefix] = LeafMeta(leaf.shape[1:], leaf.dtype, n,
+                                    n_chunks, 0, "e4m3")
+            return {"codes": codes.reshape(g, n_chunks, CHUNK),
+                    "scales": scales}
+        chunks = codes.reshape(g * n_chunks, CHUNK)
+        nbits = codec.encode_chunk_bits(
+            chunks, jnp.asarray(tables.enc_len, jnp.uint32))
+        cap = int(np.ceil(float(jnp.max(nbits)) / 32))   # exact: 0 escapes
+        words, _ = codec.encode_chunks(chunks, tables, cap)
+        meta[prefix] = LeafMeta(leaf.shape[1:], leaf.dtype, n, n_chunks,
+                                cap, "qlc")
+        return {"words": words.reshape(g, n_chunks, cap),
+                "scales": scales}
+
+    wired = walk(groups, "")
+    return wired, GroupWireCodec(meta=meta, tables=tables)
+
+
+def wire_shape_structs(group_shapes, tables: CodecTables,
+                       capacity_words: int, mode: str = "qlc",
+                       mesh=None, wire_axes=("pod", "data")):
+    """Dry-run path: ShapeDtypeStructs of the wired groups (no data).
+
+    ``capacity_words`` comes from the planner (real serving measures the
+    exact max; the static wire size is what the roofline sees either
+    way).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    meta: Dict[str, LeafMeta] = {}
+
+    axes = tuple(a for a in wire_axes
+                 if mesh is None or a in mesh.axis_names)
+
+    def shard(shape, dim):
+        if mesh is None:
+            return None
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        spec = [None] * len(shape)
+        if shape[dim] % total == 0:
+            spec[dim] = axes
+        return NamedSharding(mesh, P(*spec))
+
+    def sds(shape, dtype, dim):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=shard(shape, dim))
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        leaf = node
+        if not _eligible(leaf.shape):
+            return leaf
+        g, n, padded, n_chunks = _geometry(leaf.shape, mode, capacity_words)
+        scales_sds = sds((g, padded // e4m3.BLOCK), jnp.bfloat16, 1)
+        if mode == "e4m3":
+            meta[prefix] = LeafMeta(tuple(leaf.shape[1:]), leaf.dtype, n,
+                                    n_chunks, 0, "e4m3")
+            return {"codes": sds((g, n_chunks, CHUNK), jnp.uint8, 1),
+                    "scales": scales_sds}
+        meta[prefix] = LeafMeta(tuple(leaf.shape[1:]), leaf.dtype, n,
+                                n_chunks, capacity_words, "qlc")
+        return {"words": sds((g, n_chunks, capacity_words), jnp.uint32, 1),
+                "scales": scales_sds}
+
+    wired = walk(group_shapes, "")
+    return wired, GroupWireCodec(meta=meta, tables=tables)

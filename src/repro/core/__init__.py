@@ -1,0 +1,16 @@
+"""Quad Length Codes — core library (the paper's contribution)."""
+from repro.core.schemes import (  # noqa: F401
+    NUM_SYMBOLS,
+    PAPER_SCHEMES,
+    QLCScheme,
+    TABLE1,
+    TABLE2,
+)
+from repro.core.lut import CodecTables, build_tables, identity_tables  # noqa: F401
+from repro.core.adapt import (  # noqa: F401
+    AdaptResult,
+    calibrate_tables,
+    default_scheme_for,
+    select_scheme,
+)
+from repro.core import codec, distributions, entropy, huffman, scheme_search  # noqa: F401

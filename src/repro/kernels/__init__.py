@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the QLC hot spots (decode, encode, histogram).
+
+Each kernel ships with a pure-jnp oracle in ref.py; ops.py exposes the
+padded/jit'd public API and dispatches interpret mode off-TPU.
+"""
+from repro.kernels import ops, ref  # noqa: F401

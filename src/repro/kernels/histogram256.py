@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: 256-bin histogram (codec LUT calibration).
+
+Formulated as a one-hot reduction: for a (TILE_ROWS, LANES) tile of
+symbols, counts[s] += sum(sym == s). The comparison+sum vectorizes on
+the VPU; per-grid-step accumulation uses the standard Pallas pattern of
+mapping every grid step to the same output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = (8, 128)
+
+
+def _hist_kernel(sym_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    sym = sym_ref[...].astype(jnp.int32)             # (TR, TL)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (256,), 0)
+    onehot = (sym.reshape(-1)[:, None] == bins[None, :]).astype(jnp.int32)
+    out_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def histogram256_pallas(symbols: jnp.ndarray, *, tile_rows: int = 8,
+                        interpret: bool = True) -> jnp.ndarray:
+    """uint8 [rows, 128*m] -> int32 [256] counts (ops.py pads/reshapes)."""
+    rows, cols = symbols.shape
+    assert rows % tile_rows == 0, (rows, tile_rows)
+    grid = (rows // tile_rows,)
+
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((256,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((256,), jnp.int32),
+        interpret=interpret,
+    )(symbols)

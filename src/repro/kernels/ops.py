@@ -1,0 +1,88 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, table marshaling, and backend
+dispatch: on TPU the compiled kernels run natively; elsewhere they run
+in interpret mode (bit-exact semantics, Python-speed execution) so the
+whole framework is runnable and testable on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lut import CodecTables
+from repro.kernels import qlc_decode, qlc_encode, histogram256 as _hist
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_default() -> bool:
+    return not _on_tpu()
+
+
+def _pad_rows(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+def decode(words: jnp.ndarray, tables: CodecTables, chunk_symbols: int,
+           *, tile_chunks: int = 8, interpret: bool | None = None
+           ) -> jnp.ndarray:
+    """Decode [n_chunks, CW] u32 -> [n_chunks, K] u8 via the Pallas kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n_chunks = words.shape[0]
+    padded = _pad_rows(words, tile_chunks)
+    out = qlc_decode.decode_pallas(
+        padded,
+        jnp.asarray(tables.dec_lut, dtype=jnp.int32),
+        jnp.asarray(tables.area_symbol_bits, dtype=jnp.int32),
+        jnp.asarray(tables.area_starts, dtype=jnp.int32),
+        chunk_symbols=chunk_symbols,
+        prefix_bits=tables.prefix_bits,
+        tile_chunks=tile_chunks,
+        interpret=interpret,
+    )
+    return out[:n_chunks]
+
+
+def encode(symbols: jnp.ndarray, tables: CodecTables, capacity_words: int,
+           *, tile_chunks: int = 8, interpret: bool | None = None):
+    """Encode [n_chunks, K] u8 -> ([n_chunks, CW] u32, [n_chunks] u32)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n_chunks = symbols.shape[0]
+    padded = _pad_rows(symbols, tile_chunks)
+    words, nbits = qlc_encode.encode_pallas(
+        padded,
+        jnp.asarray(tables.enc_code, dtype=jnp.uint32),
+        jnp.asarray(tables.enc_len, dtype=jnp.uint32),
+        capacity_words=capacity_words,
+        tile_chunks=tile_chunks,
+        interpret=interpret,
+    )
+    return words[:n_chunks], nbits[:n_chunks, 0]
+
+
+def histogram(symbols: jnp.ndarray, *, tile_rows: int = 8,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """uint8 array (any shape) -> [256] int32 counts via the Pallas kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    flat = symbols.reshape(-1)
+    lanes = 128
+    pad = (-flat.shape[0]) % (lanes * tile_rows)
+    # Pad with zeros, then subtract the padding from bin 0.
+    padded = jnp.pad(flat, (0, pad))
+    mat = padded.reshape(-1, lanes)
+    counts = _hist.histogram256_pallas(
+        mat, tile_rows=tile_rows, interpret=interpret)
+    return counts.at[0].add(-pad)

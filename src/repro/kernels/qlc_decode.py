@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: chunk-parallel QLC decode.
+
+TPU-native adaptation of the paper's hardware decoder (DESIGN.md §3):
+the 3-bit area code read from the bit window gives the code length in
+O(1) — no tree walk — and throughput comes from decoding a tile of
+chunks in lockstep (chunks map to vector lanes; the fori_loop over the
+K symbols of a chunk is the only sequential dimension).
+
+VMEM budget per program (defaults TILE_CHUNKS=8, K=1024, CW=384):
+  words   8*384*4   = 12 KiB
+  out     8*1024    =  8 KiB
+  LUTs    256*4*3   =  3 KiB
+well under the ~16 MiB/core VMEM of TPU v5e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_CHUNKS = 8
+
+
+def _decode_kernel(words_ref, dec_lut_ref, area_sb_ref, area_starts_ref,
+                   out_ref, *, chunk_symbols: int, prefix_bits: int):
+    words = words_ref[...]                       # (TC, CW) uint32
+    tc, cw = words.shape
+    dec = dec_lut_ref[...].astype(jnp.uint32)    # (256,)
+    sb_t = area_sb_ref[...].astype(jnp.uint32)   # (2**prefix,)
+    st_t = area_starts_ref[...].astype(jnp.uint32)
+    pmask = jnp.uint32((1 << prefix_bits) - 1)
+    pbits = jnp.uint32(prefix_bits)
+
+    def body(i, bitpos):
+        widx = (bitpos >> 5).astype(jnp.int32)               # (TC,)
+        shift = bitpos & jnp.uint32(31)
+        w0 = jnp.take_along_axis(words, widx[:, None], axis=1)[:, 0]
+        w1 = jnp.take_along_axis(
+            words, jnp.minimum(widx + 1, cw - 1)[:, None], axis=1)[:, 0]
+        window = (w0 >> shift) | jnp.where(
+            shift == 0, jnp.uint32(0), w1 << (jnp.uint32(32) - shift))
+        area = (window & pmask).astype(jnp.int32)
+        sb = jnp.take(sb_t, area)
+        payload = (window >> pbits) & ((jnp.uint32(1) << sb) - jnp.uint32(1))
+        rank = jnp.take(st_t, area) + payload
+        sym = jnp.take(dec, jnp.minimum(rank, jnp.uint32(255)).astype(jnp.int32))
+        out_ref[:, pl.dslice(i, 1)] = sym.astype(jnp.uint8)[:, None]
+        return bitpos + pbits + sb
+
+    bitpos0 = jnp.zeros((tc,), dtype=jnp.uint32)
+    jax.lax.fori_loop(0, chunk_symbols, body, bitpos0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk_symbols", "prefix_bits", "tile_chunks",
+                     "interpret"))
+def decode_pallas(words: jnp.ndarray, dec_lut: jnp.ndarray,
+                  area_sb: jnp.ndarray, area_starts: jnp.ndarray,
+                  *, chunk_symbols: int, prefix_bits: int = 3,
+                  tile_chunks: int = DEFAULT_TILE_CHUNKS,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Decode [n_chunks, capacity_words] u32 slots -> [n_chunks, K] u8.
+
+    n_chunks must be a multiple of tile_chunks (ops.py pads).
+    """
+    n_chunks, cw = words.shape
+    assert n_chunks % tile_chunks == 0, (n_chunks, tile_chunks)
+    grid = (n_chunks // tile_chunks,)
+
+    kernel = functools.partial(
+        _decode_kernel, chunk_symbols=chunk_symbols, prefix_bits=prefix_bits)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_chunks, cw), lambda i: (i, 0)),
+            pl.BlockSpec((dec_lut.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((area_sb.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((area_starts.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_chunks, chunk_symbols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, chunk_symbols), jnp.uint8),
+        interpret=interpret,
+    )(words, dec_lut, area_sb, area_starts)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: chunk-parallel QLC encode.
+
+Per chunk: gather (code, len) from the 256-entry encoder LUT, exclusive
+prefix-sum of lengths, then each <=11-bit code touches at most two
+consecutive 32-bit words of the slot -> two scatter-adds (disjoint bit
+ranges make add equivalent to or).
+
+VMEM per program (TILE_CHUNKS=8, K=1024, CW=384):
+  symbols 8 KiB, words 12 KiB, codes+lens+offsets 3*32 KiB ~= 116 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_CHUNKS = 8
+
+
+def _encode_kernel(sym_ref, enc_code_ref, enc_len_ref, words_ref, nbits_ref,
+                   *, capacity_words: int):
+    sym = sym_ref[...].astype(jnp.int32)            # (TC, K)
+    tc, k = sym.shape
+    enc_code = enc_code_ref[...]                    # (256,) u32
+    enc_len = enc_len_ref[...]                      # (256,) u32
+
+    codes = jnp.take(enc_code, sym)                 # (TC, K) u32
+    lens = jnp.take(enc_len, sym)                   # (TC, K) u32
+
+    nbits = jnp.sum(lens, axis=1, dtype=jnp.uint32)         # (TC,)
+    offsets = jnp.cumsum(lens, axis=1, dtype=jnp.uint32) - lens
+
+    word_idx = (offsets >> 5).astype(jnp.int32)
+    shift = offsets & jnp.uint32(31)
+    lo = codes << shift                              # u32 shift wraps
+    hi = jnp.where(shift == 0, jnp.uint32(0),
+                   codes >> (jnp.uint32(32) - shift))
+
+    word_idx = jnp.minimum(word_idx, capacity_words - 1)
+    hi_idx = jnp.minimum(word_idx + 1, capacity_words - 1)
+
+    words = jnp.zeros((tc, capacity_words), dtype=jnp.uint32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tc, k), 0)
+    words = words.at[rows, word_idx].add(lo, mode="drop")
+    words = words.at[rows, hi_idx].add(hi, mode="drop")
+
+    words_ref[...] = words
+    nbits_ref[...] = nbits[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("capacity_words", "tile_chunks", "interpret"))
+def encode_pallas(symbols: jnp.ndarray, enc_code: jnp.ndarray,
+                  enc_len: jnp.ndarray, *, capacity_words: int,
+                  tile_chunks: int = DEFAULT_TILE_CHUNKS,
+                  interpret: bool = True):
+    """Encode [n_chunks, K] u8 -> ([n_chunks, CW] u32, [n_chunks, 1] u32)."""
+    n_chunks, k = symbols.shape
+    assert n_chunks % tile_chunks == 0, (n_chunks, tile_chunks)
+    grid = (n_chunks // tile_chunks,)
+
+    kernel = functools.partial(_encode_kernel, capacity_words=capacity_words)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_chunks, k), lambda i: (i, 0)),
+            pl.BlockSpec((enc_code.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((enc_len.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_chunks, capacity_words), lambda i: (i, 0)),
+            pl.BlockSpec((tile_chunks, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_chunks, capacity_words), jnp.uint32),
+            jax.ShapeDtypeStruct((n_chunks, 1), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(symbols, enc_code, enc_len)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the single source of truth for kernel semantics; kernel tests
+sweep shapes/dtypes and assert_allclose (bit-exact for integer codecs)
+against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.lut import CodecTables
+
+
+def decode_ref(words: jnp.ndarray, tables: CodecTables,
+               chunk_symbols: int) -> jnp.ndarray:
+    """[n_chunks, capacity_words] u32 -> [n_chunks, K] u8."""
+    return codec.decode_chunks(words, tables, chunk_symbols)
+
+
+def encode_ref(symbols: jnp.ndarray, tables: CodecTables,
+               capacity_words: int):
+    """[n_chunks, K] u8 -> ([n_chunks, capacity_words] u32, [n_chunks] u32)."""
+    return codec.encode_chunks(symbols, tables, capacity_words)
+
+
+def histogram256_ref(symbols: jnp.ndarray) -> jnp.ndarray:
+    """uint8 array (any shape) -> [256] int32 counts."""
+    flat = symbols.reshape(-1).astype(jnp.int32)
+    onehot = (flat[:, None] == jnp.arange(256, dtype=jnp.int32)[None, :])
+    return jnp.sum(onehot.astype(jnp.int32), axis=0)

@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+A function (never a module-level constant) so importing this module
+never touches jax device state. Single pod = 256 chips as (16 data,
+16 model); multi-pod adds a leading "pod" axis (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, devices=None, model: int = 2):
+    """Small mesh over whatever devices exist (tests/examples)."""
+    import numpy as np
+    devs = devices if devices is not None else jax.devices()
+    n = len(devs)
+    model = min(model, n)
+    data = n // model
+    return jax.sharding.Mesh(
+        np.array(devs[:data * model]).reshape(data, model),
+        ("data", "model"))

@@ -1,0 +1,37 @@
+"""Re-run the roofline analysis over saved .hlo.gz dumps (no recompile).
+Usage: python -m repro.launch.reanalyze results/dryrun"""
+import glob
+import gzip
+import json
+import sys
+
+from repro.configs import get_config, shapes_for
+from repro.roofline import analysis
+
+
+def main(out_dir: str):
+    for jf in sorted(glob.glob(out_dir + "/*.json")):
+        hf = jf.replace(".json", ".hlo.gz")
+        try:
+            d = json.load(open(jf))
+            if not d.get("ok"):
+                continue
+            import os
+            if not os.path.exists(hf):
+                continue
+            with gzip.open(hf, "rt") as f:
+                hlo = f.read()
+            cfg = get_config(d["arch"])
+            shape = {s.name: s for s in shapes_for(cfg)}[d["shape"]]
+            terms = analysis.from_compiled(
+                d["arch"], shape, d["mesh"], d["chips"],
+                d.get("cost", {}), hlo, cfg, d.get("memory"))
+            d["roofline"] = terms.to_dict()
+            json.dump(d, open(jf, "w"), indent=1, default=str)
+            print("reanalyzed", jf)
+        except Exception as e:
+            print("skip", jf, e)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md roofline/dry-run tables from results/dryrun."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(out_dir: str):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def fmt_bytes(x):
+    if x is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}EB"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(cells, mesh_filter="single_pod_16x16",
+                   comm="baseline") -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | bound | "
+        "useful/HLO | roofline frac | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if not c.get("ok") or c.get("mesh") != mesh_filter:
+            continue
+        if c.get("comm", "baseline") != comm:
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant'][:4]}** | {r['useful_flops_fraction']:.3f} | "
+            f"{r['roofline_fraction']:.4f} | "
+            f"{fmt_bytes(r.get('peak_memory_per_device'))} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells) -> str:
+    rows = [
+        "| arch | shape | mesh | compile | args/dev | temp/dev | "
+        "coll bytes/dev | dominant coll |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if not c.get("ok") or c.get("comm", "baseline") != "baseline":
+            continue
+        r = c["roofline"]
+        mem = c.get("memory", {})
+        br = r.get("coll_breakdown") or {}
+        top = max(br, key=br.get) if br else "-"
+        mesh_short = "2x16x16" if "multi" in c["mesh"] else "16x16"
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {mesh_short} | "
+            f"{c.get('compile_s', '-')}s | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes'))} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes'))} | "
+            f"{fmt_bytes(r['coll_bytes_per_device'])} | {top} |")
+    return "\n".join(rows)
+
+
+def summary(cells) -> str:
+    n_ok = sum(1 for c in cells if c.get("ok"))
+    per_mesh = {}
+    for c in cells:
+        key = (c.get("mesh"), bool(c.get("ok")))
+        per_mesh[key] = per_mesh.get(key, 0) + 1
+    return (f"{n_ok}/{len(cells)} cells compiled. "
+            + "; ".join(f"{m}: {'ok' if ok else 'FAIL'}x{n}"
+                        for (m, ok), n in sorted(per_mesh.items())))
+
+
+if __name__ == "__main__":
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    cells = load(out_dir)
+    print(summary(cells))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table(cells))
+    print("\n## Dry-run\n")
+    print(dryrun_table(cells))

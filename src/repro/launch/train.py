@@ -1,0 +1,106 @@
+"""Production training launcher.
+
+On a real TPU cluster this is the per-host entry point (jax distributed
+init -> production mesh -> trainer). On CPU it runs reduced configs for
+verification. The dry-run (``repro.launch.dryrun``) is the compile-only
+counterpart for the full-size cells.
+
+Examples:
+  python -m repro.launch.train --arch deepseek-moe-16b --reduced \\
+      --steps 50 --comm qlc
+  python -m repro.launch.train --arch nemotron-4-340b --multi-pod \\
+      --steps 100000   # real cluster
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommConfig, calibrate_for_gradients
+from repro.configs import get_config, reduced as make_reduced
+from repro.data import DataConfig, SyntheticDataset
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models import init_params
+from repro.parallel import sharding as shd
+from repro.training import (OptConfig, Trainer, TrainerConfig, TrainConfig,
+                            init_compressed_opt_state, make_baseline_step,
+                            make_compressed_step)
+from repro.training import optimizer as optm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="small same-family config (CPU verification)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--comm", default="baseline",
+                    choices=["baseline", "qlc"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (cluster)")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO)
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+        mesh = make_test_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    seq = args.seq_len or (128 if args.reduced else 4096)
+    batch = args.global_batch or (8 if args.reduced else 256)
+
+    opt_cfg = OptConfig(lr=args.lr, total_steps=args.steps,
+                        warmup_steps=max(10, args.steps // 20))
+    train_cfg = TrainConfig(
+        microbatches=args.microbatches,
+        batch_axes=tuple(a for a in ("pod", "data")
+                         if a in mesh.axis_names))
+    data = SyntheticDataset(
+        DataConfig(vocab_size=cfg.vocab_size,
+                   seq_len=seq - cfg.frontend_prefix_len,
+                   global_batch=batch),
+        host_index=jax.process_index(), host_count=jax.process_count())
+
+    with shd.use_mesh(mesh):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        baseline = jax.jit(make_baseline_step(cfg, opt_cfg, train_cfg))
+        if args.comm == "qlc":
+            b0 = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+            tables, plan = calibrate_for_gradients(cfg, params, b0)
+            comm_cfg = CommConfig.from_plan(plan)
+            step = jax.jit(make_compressed_step(
+                cfg, opt_cfg, train_cfg, mesh, tables, comm_cfg))
+            opt_state = init_compressed_opt_state(
+                cfg, mesh, train_cfg, comm_cfg, opt_cfg)
+        else:
+            step = baseline
+            opt_state = optm.init_state(params, opt_cfg)
+
+        trainer = Trainer(
+            TrainerConfig(total_steps=args.steps,
+                          checkpoint_dir=args.checkpoint_dir),
+            step, fallback_step_fn=None)
+        params, opt_state, start = trainer.restore_or(params, opt_state)
+        trainer.run(params, opt_state, data, start_step=start)
+
+    losses = [h["loss"] for h in trainer.history]
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Composable model zoo covering the 10 assigned architectures."""
+from repro.models.transformer import (  # noqa: F401
+    prefill_logits,
+    decode_states_specs,
+    decode_step,
+    forward,
+    init_decode_states,
+    init_params,
+    next_token_loss,
+    param_specs,
+)
+from repro.models import attention, layers, moe, multimodal, ssm  # noqa: F401

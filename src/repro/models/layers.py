@@ -1,0 +1,115 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical_constraint
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(dt)
+
+
+def init_rms_norm(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype=dtype)
+
+
+# ---- rotary ---------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: [B, S, N, H]; positions: [B, S] int32. Rotates the first
+    ``fraction`` of head dims (chatglm3 uses 0.5: 'RoPE 2d' applied to
+    half the channels, the rest pass through)."""
+    b, s, n, h = x.shape
+    inv, rot = rope_freqs(h, theta, fraction)
+    if rot == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B, S, rot/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(b, s, n, rot)
+    return jnp.concatenate(
+        [rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ---- MLP ------------------------------------------------------------------
+
+def _act(name: str):
+    if name == "swiglu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(key, d: int, ff: int, activation: str, dtype):
+    gated = activation == "swiglu"
+    keys = jax.random.split(key, 3)
+    scale_in = 1.0 / (d ** 0.5)
+    scale_out = 1.0 / (ff ** 0.5)
+    p = {
+        "w_in": jax.random.normal(keys[0], (d, ff), dtype) * scale_in,
+        "w_out": jax.random.normal(keys[1], (ff, d), dtype) * scale_out,
+    }
+    if gated:
+        p["w_gate"] = jax.random.normal(keys[2], (d, ff), dtype) * scale_in
+    return p
+
+
+def mlp(params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """x: [B, S, D] -> [B, S, D]."""
+    act = _act(activation)
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+    if activation == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = logical_constraint(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype))
+
+
+def mlp_param_specs(activation: str):
+    specs = {"w_in": ("embed", "mlp"), "w_out": ("mlp", "embed")}
+    if activation == "swiglu":
+        specs["w_gate"] = ("embed", "mlp")
+    return specs
+
+
+# ---- embeddings -----------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    return jax.random.normal(key, (vocab, d), dtype) * (1.0 / d ** 0.5)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jnp.ndarray, x: jnp.ndarray, tied: bool
+            ) -> jnp.ndarray:
+    if tied:
+        return jnp.einsum("bsd,vd->bsv", x, table_or_head.astype(x.dtype))
+    return jnp.einsum("bsd,dv->bsv", x, table_or_head.astype(x.dtype))

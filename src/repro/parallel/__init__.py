@@ -1,0 +1,13 @@
+from repro.parallel.sharding import (  # noqa: F401
+    FSDP_PARAM_OVERRIDES,
+    is_spec_leaf,
+    make_rules,
+    DEFAULT_RULES,
+    ShardingRules,
+    get_rules,
+    logical_constraint,
+    named_sharding,
+    param_sharding,
+    set_rules,
+    use_mesh,
+)

@@ -1,0 +1,9 @@
+from repro.quant.e4m3 import (  # noqa: F401
+    E4M3_MAX_FINITE,
+    E4M3_MAX_FN,
+    decode_table,
+    dequantize_block32,
+    e4m3_decode,
+    e4m3_encode,
+    quantize_block32,
+)

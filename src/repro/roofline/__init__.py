@@ -1,0 +1,1 @@
+from repro.roofline import analysis, hlo_walk, hw  # noqa: F401

@@ -1,0 +1,167 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh) cell, in seconds:
+
+  compute    = HLO_FLOPs_total   / (chips × peak_FLOP/s)
+  memory     = HLO_bytes_total   / (chips × HBM_bw)
+  collective = coll_bytes_total  / (chips × link_bw)
+
+``compiled.cost_analysis()`` (post-SPMD) reports per-device numbers, so
+totals are per-device × chips — the two conventions cancel in the
+per-term division, but we report totals for readability.
+
+Collective bytes are NOT in cost_analysis: we parse the post-partition
+HLO text and sum the RESULT-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute /
+ragged-all-to-all instruction (bytes landing on each device per step —
+the wire-traffic proxy; convention noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<type>\([^)]*\)|[\w\[\],{}\s/#:.]+?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute|ragged-all-to-all)(?:-start|-done)?\(",
+    re.MULTILINE)
+
+_ARRAY_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _array_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes by collective op kind from post-SPMD HLO text.
+
+    ``*-start`` ops are counted; their ``-done`` twins are not (the
+    regex matches both but done ops have the same result type as start
+    — we dedupe by only counting lines whose op name does not end in
+    '-done')."""
+    out: Dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        out[op] = out.get(op, 0.0) + _array_bytes(m.group("type"))
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float            # 6·N(active)·tokens
+    peak_memory_per_device: float = 0.0
+    coll_breakdown: Optional[Dict[str, float]] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / hw.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / hw.ICI_LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs_total — remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound time — the score per cell."""
+        useful_s = (self.model_flops / self.chips) / hw.PEAK_FLOPS_BF16
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 useful_flops_fraction=self.useful_flops_fraction,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops_for(cfg, shape, n_tokens: Optional[int] = None) -> float:
+    """6·N_active·D for training; 2·N_active·D for inference steps."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def from_compiled(arch: str, shape, mesh_name: str, chips: int,
+                  cost: dict, hlo_text: str, cfg,
+                  memory_stats: Optional[dict] = None) -> RooflineTerms:
+    """Build terms from the loop-aware HLO walker (XLA cost_analysis
+    counts while bodies once — useless for scanned programs; the raw
+    numbers are preserved in the dry-run JSON for reference)."""
+    from repro.roofline import hlo_walk
+    walked = hlo_walk.analyze(hlo_text)
+    return RooflineTerms(
+        arch=arch,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=walked.flops,
+        bytes_per_device=walked.bytes,
+        coll_bytes_per_device=walked.coll_total,
+        model_flops=model_flops_for(cfg, shape),
+        peak_memory_per_device=float(
+            (memory_stats or {}).get("temp_size_in_bytes", 0.0)),
+        coll_breakdown=dict(walked.coll),
+    )

@@ -1,0 +1,307 @@
+"""Loop-aware HLO cost walker.
+
+``compiled.cost_analysis()`` visits each instruction once: a ``while``
+body (every ``lax.scan`` — our layer stacks, seq scans, microbatch
+accumulation) is counted a single time regardless of trip count, which
+understates FLOPs/bytes/collective-bytes by orders of magnitude for
+scanned programs. This walker parses the post-partition HLO text and
+multiplies through loop trip counts:
+
+  flops:  dot ops (2·batch·M·N·K, from operand shapes + contracting
+          dims), recursing into fusions / called computations / while
+          bodies (× trip).
+  bytes:  HBM-traffic first-order model: per *top-level* instruction,
+          operand bytes + result bytes (fusion internals are one kernel
+          => internals don't touch HBM), × trip for loop bodies.
+  coll:   result bytes of all-gather / all-reduce / reduce-scatter /
+          all-to-all / collective-permute, × trip.
+
+Trip counts are recovered from the loop condition computation
+(``compare(gte, constant(T)), direction=LT`` pattern emitted for every
+counted lax.scan/fori_loop). Numbers are per-device (the compiled
+module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "bf16": 2, "f16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute", "ragged-all-to-all")
+
+def _comp_header_name(stripped: str) -> Optional[str]:
+    """Computation headers end with '{' and contain '->'; the param list
+    may hold nested parens (tuple types), so parse positionally."""
+    if not stripped.endswith("{") or "->" not in stripped:
+        return None
+    s = stripped
+    if s.startswith("ENTRY"):
+        s = s[len("ENTRY"):].strip()
+    head = s.split("(")[0].strip()
+    if not head:
+        return None
+    return head.lstrip("%")
+# Result types are either one array ("f32[2,4096]{1,0}") or a tuple;
+# tuple types may contain "/*index=N*/" comments but never nested parens.
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\(.*?\)|[\w\[\],{}\s]+?)\s*"
+    r"(?P<op>[\w\-]+)\((?P<rest>.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BATCH = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_CONSTANT = re.compile(r"s(?:8|16|32|64)\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    type_str: str
+    rest: str
+
+    @property
+    def result_bytes(self) -> float:
+        return _shape_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll.values()))
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            name = _comp_header_name(stripped)
+            if name is not None:
+                cur = Computation(name, [], {})
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group("name"), m.group("op"),
+                        m.group("type"), m.group("rest"))
+            cur.instrs.append(ins)
+            cur.by_name[ins.name] = ins
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = 1
+    for d in _shape_dims(ins.type_str):
+        out_elems *= d
+    # contracted size from the lhs operand's shape
+    ops = _OPERAND.findall(ins.rest.split(")", 1)[0] + ")")
+    contract = _CONTRACT.search(ins.rest)
+    if not ops or contract is None:
+        return 2.0 * out_elems  # degenerate
+    lhs = comp.by_name.get(ops[0])
+    if lhs is None:
+        return 2.0 * out_elems
+    lhs_dims = _shape_dims(lhs.type_str)
+    k = 1
+    for idx in contract.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            k *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the condition computation."""
+    best = 1
+    for ins in cond.instrs:
+        for m in _CONSTANT.finditer(ins.type_str + " " + ins.op + "(" +
+                                    ins.rest):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_FLOW_OPS = {"fusion", "call", "while", "conditional", "map",
+             "reduce", "reduce-window", "sort", "scatter", "select-and-scatter"}
+
+
+def _fusion_io_bytes(ins: Instr, comp: Computation,
+                     comps: Dict[str, Computation]) -> float:
+    """HBM traffic of one fusion kernel, slice-aware.
+
+    XLA fuses the per-iteration dynamic-slice of a scan's stacked xs
+    into the consumer kernel: the kernel READS only the slice, not the
+    full array. Likewise a fusion whose root is dynamic-update-slice
+    WRITES only the update (in-place aliasing). Charging full operand /
+    result sizes over-counts scanned programs by ~trip_count x.
+    """
+    called_m = _CALLS.search(ins.rest)
+    ccomp = comps.get(called_m.group(1)) if called_m else None
+    if ccomp is None:
+        return ins.result_bytes + _operand_bytes(ins, comp)
+
+    # read side: parameters used only via (dynamic-)slice/gather are
+    # charged at the sliced size
+    params: Dict[str, float] = {}
+    for ci in ccomp.instrs:
+        if ci.op == "parameter":
+            params[ci.name] = ci.result_bytes
+    uses: Dict[str, list] = {name: [] for name in params}
+    for ci in ccomp.instrs:
+        if ci.op == "parameter":
+            continue
+        args = ci.rest.split(")", 1)[0]
+        for nm in _OPERAND.findall(args):
+            if nm in uses:
+                uses[nm].append(ci)
+    read = 0.0
+    for nm, full in params.items():
+        us = uses[nm]
+        if us and all(u.op in ("dynamic-slice", "slice", "gather")
+                      for u in us):
+            read += min(full, sum(u.result_bytes for u in us))
+        else:
+            read += full
+
+    # write side: a dynamic-update-slice root writes only the update
+    root = ccomp.instrs[-1] if ccomp.instrs else None
+    write = ins.result_bytes
+    if root is not None and root.op == "dynamic-update-slice":
+        ops = _OPERAND.findall(root.rest.split(")", 1)[0])
+        if len(ops) >= 2:
+            upd = ccomp.by_name.get(ops[1])
+            if upd is not None:
+                write = upd.result_bytes
+    return read + write
+
+
+def cost_of(comp_name: str, comps: Dict[str, Computation],
+            memo: Dict[str, Costs], top_level: bool = True) -> Costs:
+    if comp_name in memo:
+        return memo[comp_name]
+    comp = comps.get(comp_name)
+    total = Costs()
+    if comp is None:
+        return total
+
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            total.flops += _dot_flops(ins, comp)
+            total.bytes += ins.result_bytes + _operand_bytes(ins, comp)
+        elif ins.op == "while":
+            body_m = _CALLS.search(ins.rest)
+            cond_m = _COND.search(ins.rest)
+            trip = 1
+            if cond_m and cond_m.group(1) in comps:
+                trip = _trip_count(comps[cond_m.group(1)])
+            if body_m:
+                body_cost = cost_of(body_m.group(1), comps, memo,
+                                    top_level=True)
+                total.add(body_cost, mult=trip)
+        elif ins.op in ("fusion", "call", "map", "reduce", "scatter",
+                        "select-and-scatter", "reduce-window", "sort",
+                        "conditional"):
+            called = _CALLS.findall(ins.rest)
+            for c in called:
+                sub = cost_of(c, comps, memo, top_level=False)
+                total.flops += sub.flops
+                for k, v in sub.coll.items():
+                    total.coll[k] = total.coll.get(k, 0.0) + v
+            # fusion = one kernel; slice-aware HBM traffic
+            if ins.op == "fusion":
+                total.bytes += _fusion_io_bytes(ins, comp, comps)
+            else:
+                total.bytes += ins.result_bytes + _operand_bytes(ins, comp)
+        elif any(ins.op.startswith(c) for c in COLLECTIVE_OPS):
+            if ins.op.endswith("-done"):
+                continue
+            kind = next(c for c in COLLECTIVE_OPS if ins.op.startswith(c))
+            total.coll[kind] = total.coll.get(kind, 0.0) + ins.result_bytes
+            total.bytes += ins.result_bytes + _operand_bytes(ins, comp)
+        elif ins.op in ("parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast", "after-all"):
+            continue
+        elif ins.op in ("dynamic-slice", "slice", "gather"):
+            total.bytes += 2 * ins.result_bytes      # read slice + write
+        elif ins.op == "dynamic-update-slice":
+            ops = _OPERAND.findall(ins.rest.split(")", 1)[0])
+            upd = comp.by_name.get(ops[1]) if len(ops) >= 2 else None
+            total.bytes += 2 * (upd.result_bytes if upd is not None
+                                else ins.result_bytes)
+        else:
+            # copy / convert / broadcast / custom-call ...
+            total.bytes += ins.result_bytes + _operand_bytes(ins, comp)
+    memo[comp_name] = total
+    return total
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> float:
+    total = 0.0
+    args = ins.rest.split(")", 1)[0]
+    for name in _OPERAND.findall(args):
+        op_ins = comp.by_name.get(name)
+        if op_ins is not None and op_ins.op != "constant":
+            total += op_ins.result_bytes
+    return total
+
+
+def analyze(hlo_text: str) -> Costs:
+    comps, entry = parse_hlo(hlo_text)
+    if entry is None:
+        return Costs()
+    return cost_of(entry, comps, {})

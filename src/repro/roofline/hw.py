@@ -1,0 +1,7 @@
+"""Target-hardware constants (TPU v5e) for the roofline analysis."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link (~ per the brief)
+VMEM_BYTES = 16 * 2 ** 20       # per-core VMEM (approx)
+HBM_BYTES = 16 * 2 ** 30        # v5e HBM capacity

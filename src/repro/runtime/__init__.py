@@ -1,0 +1,1 @@
+from repro.runtime.fault import RetryPolicy, StragglerWatchdog  # noqa: F401

@@ -1,0 +1,76 @@
+"""Batched serving: prefill + decode with per-layer state caches.
+
+``prefill`` runs the full-sequence forward once per layer while
+collecting KV/SSM states (token-by-token scan for recurrent blocks,
+bulk write for attention); ``generate`` then decodes greedily. The
+decode step is the function the decode_* dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_decode_states
+from repro.models.transformer import apply_stack
+from repro.models import layers
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq_len: int
+    max_new_tokens: int = 32
+    greedy: bool = True
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            states, start_pos: int = 0):
+    """Feed a prompt through the decode path token by token (reference
+    implementation — correct for every block kind incl. recurrent).
+
+    tokens: [B, S]. Returns (last_logits [B, V], states).
+    """
+    b, s = tokens.shape
+
+    def body(carry, t):
+        st = carry
+        tok_t = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        lg, st = _one(params, cfg, tok_t,
+                      jnp.full((b, 1), start_pos, jnp.int32) + t, st)
+        return st, lg[:, 0]
+
+    states, logits_seq = jax.lax.scan(
+        body, states, jnp.arange(s, dtype=jnp.int32))
+    return logits_seq[-1], states
+
+
+def _one(params, cfg, tok, pos, states):
+    return decode_step(params, cfg, tok, states, pos)
+
+
+def generate(params, cfg: ModelConfig, prompts: jnp.ndarray,
+             serve_cfg: ServeConfig, rng: Optional[jax.Array] = None
+             ) -> jnp.ndarray:
+    """Greedy generation for a batch of equal-length prompts.
+
+    prompts: [B, S] int32. Returns [B, max_new_tokens].
+    """
+    b, s = prompts.shape
+    states = init_decode_states(cfg, b, serve_cfg.max_seq_len)
+    logits, states = prefill(params, cfg, prompts, states)
+
+    def body(carry, t):
+        tok, st = carry
+        lg, st = decode_step(params, cfg, tok, st,
+                             jnp.full((b, 1), s, jnp.int32) + t)
+        nxt = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, st), nxt[:, 0]
+
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    (_, _), toks = jax.lax.scan(
+        body, (first, states),
+        jnp.arange(serve_cfg.max_new_tokens - 1, dtype=jnp.int32))
+    return jnp.concatenate([first, toks.T], axis=1)

@@ -1,0 +1,8 @@
+from repro.training.optimizer import OptConfig  # noqa: F401
+from repro.training.train_step import (  # noqa: F401
+    TrainConfig,
+    init_compressed_opt_state,
+    make_baseline_step,
+    make_compressed_step,
+)
+from repro.training.trainer import Trainer, TrainerConfig  # noqa: F401

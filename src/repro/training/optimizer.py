@@ -1,0 +1,131 @@
+"""AdamW + LR schedules, built in-repo (no external optimizer dep).
+
+Two state layouts:
+  * pytree state (mirrors params) — baseline GSPMD path.
+  * flat sliced state [seg] — ZeRO-1 sharded optimizer used by the
+    compressed-communication train step (each (dp, model) rank updates
+    its slice of the flat parameter vector).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"   # bfloat16 halves optimizer memory
+
+
+def lr_at(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+# ---- pytree-state AdamW ---------------------------------------------------
+
+def init_state(params, cfg: OptConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_update(params, grads, state, cfg: OptConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return (newp.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---- flat-slice AdamW (ZeRO-1, used by the compressed train step) --------
+
+def init_flat_state(seg_len: int, cfg: OptConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.moment_dtype)
+    return {
+        "m": jnp.zeros((seg_len,), dt),
+        "v": jnp.zeros((seg_len,), dt),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_flat_update(p_seg, g_seg, state, cfg: OptConfig, gnorm
+                      ) -> Tuple[jnp.ndarray, Dict[str, Any], jnp.ndarray]:
+    """AdamW on a flat slice (clip uses the provided global grad norm)."""
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    g = g_seg.astype(jnp.float32) * scale
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    m32 = b1 * state["m"].astype(jnp.float32) + (1 - b1) * g
+    v32 = b2 * state["v"].astype(jnp.float32) + (1 - b2) * jnp.square(g)
+    delta = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+    if cfg.weight_decay:
+        delta = delta + cfg.weight_decay * p_seg.astype(jnp.float32)
+    new_p = p_seg.astype(jnp.float32) - lr * delta
+    new_state = {"m": m32.astype(state["m"].dtype),
+                 "v": v32.astype(state["v"].dtype), "step": step}
+    return new_p.astype(p_seg.dtype), new_state, lr

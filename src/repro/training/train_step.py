@@ -1,0 +1,320 @@
+"""Train steps.
+
+Two interchangeable implementations:
+
+* **baseline** — GSPMD end to end: FSDP+TP sharding rules, XLA inserts
+  all collectives (bf16/f32 wire). This is the roofline baseline and the
+  path that runs every dry-run cell.
+
+* **compressed** — the paper's technique integrated into training.
+  Stage 1 computes per-data-shard gradients under ``jax.shard_map`` with
+  only the dp axes manual (the model axis stays under GSPMD). Stage 2 is
+  a fully-manual shard_map that flattens each rank's local gradient
+  shard and performs a **hierarchical QLC-compressed reduce-scatter**
+  (intra-pod over "data", then cross-pod over "pod" — the cross-pod hop,
+  the scarcest bandwidth, moves 1/d_data of the data after the intra-pod
+  RS), a ZeRO-1 sharded AdamW update on the owned slice, and the
+  mirrored compressed all-gathers back. Gradient bytes on the wire
+  shrink ~2.1x vs bf16 (e4m3 + QLC at the planner's capacity).
+
+  The wire is lossless relative to the e4m3-quantized values; if the
+  escape pool ever overflows (``ok=False`` in metrics) the trainer
+  retries the step through the baseline path — numerics never silently
+  corrupt.
+
+Parameters in compressed mode are dp-replicated (TP-sharded only);
+archs too large for that (nemotron-340b, jamba-398b at full size) train
+via the baseline FSDP path (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.comm import CommConfig, qlc_all_gather, qlc_reduce_scatter
+from repro.configs.base import ModelConfig
+from repro.core.lut import CodecTables
+from repro.models import init_params, next_token_loss, param_specs
+from repro.parallel import sharding as shd
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    comm_mode: str = "baseline"      # baseline | compressed
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+
+
+def dp_axes_in(mesh: Mesh, cfg: TrainConfig) -> Tuple[str, ...]:
+    return tuple(a for a in cfg.batch_axes if a in mesh.axis_names)
+
+
+def dp_size_of(mesh: Mesh, cfg: TrainConfig) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes_in(mesh, cfg)],
+                       initial=1))
+
+
+def batch_pspec(mesh: Mesh, cfg: TrainConfig) -> P:
+    axes = dp_axes_in(mesh, cfg)
+    return P(axes if axes else None)
+
+
+def _loss_fn(model_cfg: ModelConfig):
+    def f(params, batch):
+        return next_token_loss(
+            params, model_cfg, batch["tokens"], batch["labels"],
+            batch.get("prefix_emb"))
+    return f
+
+
+def _microbatched_grads(loss_fn, params, batch, n_micro: int):
+    """Gradient accumulation over n_micro microbatches (scan)."""
+    if n_micro == 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    split = jax.tree.map(
+        lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+        batch)
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        l, g = jax.value_and_grad(loss_fn)(params, mb)
+        acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+        return (acc, loss_acc + l), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gacc, lacc), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), split)
+    inv = 1.0 / n_micro
+    return lacc * inv, jax.tree.map(lambda g: g * inv, gacc)
+
+
+# --------------------------------------------------------------------------
+# Baseline (GSPMD) step
+# --------------------------------------------------------------------------
+
+def make_baseline_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
+                       train_cfg: TrainConfig) -> Callable:
+    loss_fn = _loss_fn(model_cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = _microbatched_grads(
+            loss_fn, params, batch, train_cfg.microbatches)
+        new_params, new_state, info = opt.apply_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "ok": jnp.bool_(True), **info}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# Compressed-communication step
+# --------------------------------------------------------------------------
+
+def _manual_param_specs(model_cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpecs for params under manual model sharding
+    (dp-replicated), with shape-aware divisibility fallback."""
+    shapes = jax.eval_shape(
+        lambda k: init_params(model_cfg, k), jax.random.PRNGKey(0))
+    specs = param_specs(model_cfg)
+    with shd.use_mesh(mesh):
+        rules = shd.get_rules()
+        pspecs = jax.tree.map(
+            lambda spec, leaf: rules.spec(spec, shape=leaf.shape),
+            specs, shapes, is_leaf=shd.is_spec_leaf)
+    return pspecs, shapes
+
+
+def _local_numel(pspec: P, shape, mesh: Mesh) -> int:
+    n = 1
+    entries = tuple(pspec) + (None,) * (len(shape) - len(pspec))
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            n *= dim
+        else:
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            n *= dim // int(np.prod([mesh.shape[a] for a in axes]))
+    return n
+
+
+def _replication_factor(pspec: P, mesh: Mesh,
+                        model_axes=("model",)) -> float:
+    used = set()
+    for entry in tuple(pspec):
+        if entry is None:
+            continue
+        for a in ((entry,) if isinstance(entry, str) else entry):
+            used.add(a)
+    rep = 1
+    for a in model_axes:
+        if a in mesh.axis_names and a not in used:
+            rep *= mesh.shape[a]
+    return float(rep)
+
+
+def flat_geometry(model_cfg: ModelConfig, mesh: Mesh,
+                  train_cfg: TrainConfig, comm_cfg: CommConfig):
+    """(n_local, n_padded, seg, weight_vec) of the per-model-rank flat
+    parameter vector. ``weight_vec`` downweights model-replicated leaves
+    so the psum'd grad norm is exact."""
+    pspecs, shapes = _manual_param_specs(model_cfg, mesh)
+    dp_total = dp_size_of(mesh, train_cfg)
+    k = comm_cfg.chunk_symbols
+
+    leaves_spec = jax.tree.leaves(pspecs,
+                                  is_leaf=lambda s: isinstance(s, P))
+    leaves_shape = jax.tree.leaves(shapes)
+    sizes = [_local_numel(s, l.shape, mesh)
+             for s, l in zip(leaves_spec, leaves_shape)]
+    reps = [_replication_factor(s, mesh)
+            for s, l in zip(leaves_spec, leaves_shape)]
+    n_local = int(sum(sizes))
+    n_padded = -(-n_local // (dp_total * k)) * (dp_total * k)
+    seg = n_padded // dp_total
+    w = np.concatenate(
+        [np.full(n, 1.0 / r, np.float32) for n, r in zip(sizes, reps)]
+        + [np.zeros(n_padded - n_local, np.float32)])
+    return n_local, n_padded, seg, w
+
+
+def _flatten_local(tree) -> Tuple[jnp.ndarray, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    meta = (treedef, [(l.shape, l.dtype) for l in leaves])
+    return flat, meta
+
+
+def _unflatten_local(flat: jnp.ndarray, meta) -> Any:
+    treedef, shapes = meta
+    out, off = [], 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape, initial=1))
+        out.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
+                         train_cfg: TrainConfig, mesh: Mesh,
+                         tables: CodecTables, comm_cfg: CommConfig
+                         ) -> Callable:
+    """train_step(params, flat_opt_state, batch) for compressed mode."""
+    loss_fn = _loss_fn(model_cfg)
+    dp_axes = dp_axes_in(mesh, train_cfg)
+    dp_sizes = {a: mesh.shape[a] for a in dp_axes}
+    dp_total = dp_size_of(mesh, train_cfg)
+    rs_order = tuple(a for a in ("data", "pod") if a in dp_axes)
+
+    p_specs, _ = _manual_param_specs(model_cfg, mesh)
+    # Stacked-grad specs: stage 1 (model under auto) may only reference
+    # the manual dp axes; stage 2 (fully manual) names the model dims.
+    g_specs = jax.tree.map(
+        lambda s: P(*((dp_axes,) + tuple(s))), p_specs,
+        is_leaf=lambda s: isinstance(s, P))
+    g_specs_s1 = jax.tree.map(
+        lambda s: P(*((dp_axes,) + (None,) * len(tuple(s)))), p_specs,
+        is_leaf=lambda s: isinstance(s, P))
+    b_spec = batch_pspec(mesh, train_cfg)
+    n_local, n_padded, seg_len, weight_vec = flat_geometry(
+        model_cfg, mesh, train_cfg, comm_cfg)
+
+    # ---- stage 1: per-dp-shard gradients (model axis under GSPMD) -------
+    def grad_body(params, batch):
+        loss, grads = _microbatched_grads(
+            loss_fn, params, batch, train_cfg.microbatches)
+        return loss[None], jax.tree.map(lambda g: g[None], grads)
+
+    stage1 = jax.shard_map(
+        grad_body, mesh=mesh,
+        in_specs=(jax.tree.map(lambda s: P(), p_specs,
+                               is_leaf=lambda s: isinstance(s, P)), b_spec),
+        out_specs=(P(dp_axes), g_specs_s1),
+        axis_names=set(dp_axes), check_vma=False)
+
+    # ---- stage 2: hierarchical compressed RS + ZeRO-1 Adam + AG ---------
+    def sync_body(params, grads_stacked, flat_opt):
+        grads_local = jax.tree.map(lambda g: g[0], grads_stacked)
+        g_flat, meta = _flatten_local(grads_local)
+        p_flat, _ = _flatten_local(params)
+        pad = n_padded - n_local
+        g_flat = jnp.pad(g_flat, (0, pad))
+        p_flat = jnp.pad(p_flat, (0, pad))
+
+        seg = g_flat
+        ok = jnp.bool_(True)
+        for ax in rs_order:                     # intra-pod, then cross-pod
+            seg, ok_i = qlc_reduce_scatter(
+                seg, ax, dp_sizes[ax], tables, comm_cfg)
+            ok &= ok_i
+        seg = seg / dp_total                    # mean over dp
+
+        # exact global grad norm: weight out model-replication
+        idx = jnp.int32(0)
+        for ax in rs_order:
+            idx = idx * dp_sizes[ax] + jax.lax.axis_index(ax)
+        w_seg = jax.lax.dynamic_slice(
+            jnp.asarray(weight_vec), (idx * seg_len,), (seg_len,))
+        local_sq = jnp.sum(w_seg * jnp.square(seg))
+        gnorm = jnp.sqrt(jax.lax.psum(
+            local_sq, tuple(dp_axes) + ("model",)))
+
+        p_seg = jax.lax.dynamic_slice(p_flat, (idx * seg_len,), (seg_len,))
+        opt_local = {kk: (vv.reshape(vv.shape[-1:]) if vv.ndim else vv)
+                     for kk, vv in flat_opt.items()}
+        new_seg, new_opt, lr = opt.apply_flat_update(
+            p_seg, seg, opt_local, opt_cfg, gnorm)
+
+        full = new_seg
+        for ax in reversed(rs_order):           # cross-pod, then intra-pod
+            full, ok_i = qlc_all_gather(full, ax, tables, comm_cfg)
+            ok &= ok_i
+        new_params = _unflatten_local(full[:n_local], meta)
+        new_params = jax.tree.map(lambda a, old: a.astype(old.dtype),
+                                  new_params, params)
+        new_opt_out = {kk: new_opt[kk].reshape(flat_opt[kk].shape)
+                       for kk in flat_opt}
+        return new_params, new_opt_out, ok, gnorm, lr
+
+    opt_state_spec = {
+        "m": P(*(dp_axes + ("model", None))),
+        "v": P(*(dp_axes + ("model", None))),
+        "step": P(),
+    }
+
+    stage2 = jax.shard_map(
+        sync_body, mesh=mesh,
+        in_specs=(p_specs, g_specs, opt_state_spec),
+        out_specs=(p_specs, opt_state_spec, P(), P(), P()),
+        check_vma=False)
+
+    def train_step(params, flat_opt_state, batch):
+        loss_per_dp, grads_stacked = stage1(params, batch)
+        new_params, new_opt, ok, gnorm, lr = stage2(
+            params, grads_stacked, flat_opt_state)
+        metrics = {"loss": jnp.mean(loss_per_dp), "ok": ok,
+                   "grad_norm": gnorm, "lr": lr}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_compressed_opt_state(model_cfg: ModelConfig, mesh: Mesh,
+                              train_cfg: TrainConfig, comm_cfg: CommConfig,
+                              opt_cfg: opt.OptConfig):
+    """Global ZeRO-1 state arrays [*dp_dims, model, seg]."""
+    _, _, seg, _ = flat_geometry(model_cfg, mesh, train_cfg, comm_cfg)
+    dp_axes = dp_axes_in(mesh, train_cfg)
+    lead = tuple(mesh.shape[a] for a in dp_axes) + (mesh.shape["model"],)
+    dt = jnp.dtype(opt_cfg.moment_dtype)
+    return {
+        "m": jnp.zeros(lead + (seg,), dt),
+        "v": jnp.zeros(lead + (seg,), dt),
+        "step": jnp.zeros((), jnp.int32),
+    }

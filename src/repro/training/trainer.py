@@ -1,0 +1,86 @@
+"""Training loop: checkpoint/resume, straggler watchdog, comm-failure
+retry (compressed step -> baseline step), metrics."""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault import StragglerWatchdog
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 100
+    log_every: int = 10
+    keep_checkpoints: int = 3
+
+
+class Trainer:
+    """Drives a jitted train step over a dataset with fault handling.
+
+    ``step_fn(params, opt_state, batch) -> (params, opt_state, metrics)``.
+    If ``metrics["ok"]`` is False (compressed-wire escape-pool overflow),
+    the step is redone with ``fallback_step_fn`` — the paper's lossless
+    guarantee is preserved by retrying on the uncompressed path rather
+    than accepting corrupt gradients.
+    """
+
+    def __init__(self, cfg: TrainerConfig, step_fn: Callable,
+                 fallback_step_fn: Optional[Callable] = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.fallback_step_fn = fallback_step_fn
+        self.watchdog = StragglerWatchdog()
+        self.ckpt = (CheckpointManager(cfg.checkpoint_dir,
+                                       keep=cfg.keep_checkpoints)
+                     if cfg.checkpoint_dir else None)
+        self.history: list = []
+        self.comm_fallbacks = 0
+
+    def restore_or(self, params, opt_state, start_step: int = 0):
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            (params, opt_state), extra = self.ckpt.restore(
+                (params, opt_state))
+            start_step = int(extra.get("step", self.ckpt.latest_step()))
+            log.info("resumed from step %d", start_step)
+        return params, opt_state, start_step
+
+    def run(self, params, opt_state, dataset, start_step: int = 0):
+        step = start_step
+        while step < self.cfg.total_steps:
+            batch = dataset.batch_at(step)
+            t0 = time.time()
+            params2, opt2, metrics = self.step_fn(params, opt_state, batch)
+            ok = bool(np.asarray(metrics.get("ok", True)))
+            if not ok and self.fallback_step_fn is not None:
+                # escape-pool overflow: redo this step uncompressed
+                self.comm_fallbacks += 1
+                log.warning("comm escape overflow at step %d; retrying "
+                            "uncompressed", step)
+                params2, opt2, metrics = self.fallback_step_fn(
+                    params, opt_state, batch)
+            params, opt_state = params2, opt2
+            dt = time.time() - t0
+            self.watchdog.observe(step, dt)
+            step += 1
+
+            loss = float(np.asarray(metrics["loss"]))
+            self.history.append({"step": step, "loss": loss, "dt": dt})
+            if step % self.cfg.log_every == 0:
+                log.info("step %d loss %.4f (%.2fs)", step, loss, dt)
+            if self.ckpt is not None and (
+                    step % self.cfg.checkpoint_every == 0
+                    or step == self.cfg.total_steps):
+                self.ckpt.save(step, (params, opt_state),
+                               extra={"step": step})
+        return params, opt_state

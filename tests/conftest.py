@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: no XLA device-count override here — smoke tests
+and benches must see the single real CPU device. Multi-device tests spawn
+subprocesses that set XLA_FLAGS themselves (see tests/md_util.py)."""
+import numpy as np
+import pytest
+
+from repro.core import TABLE1, TABLE2, build_tables
+from repro.core import distributions
+
+
+@pytest.fixture(scope="session")
+def ffn1_counts():
+    return distributions.ffn1_counts(1 << 18, seed=0)
+
+
+@pytest.fixture(scope="session")
+def ffn2_counts():
+    return distributions.ffn2_counts(1 << 18, seed=1)
+
+
+@pytest.fixture(scope="session")
+def t1_tables(ffn1_counts):
+    return build_tables(ffn1_counts, TABLE1)
+
+
+@pytest.fixture(scope="session")
+def t2_tables(ffn2_counts):
+    return build_tables(ffn2_counts, TABLE2)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)

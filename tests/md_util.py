@@ -1,0 +1,35 @@
+"""Helper to run multi-device (fake-device CPU) checks in a subprocess.
+
+jax fixes the device count at first init, so tests needing N>1 devices
+spawn a fresh interpreter with XLA_FLAGS set before importing jax.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_md(code: str, n_devices: int = 8, timeout: int = 900) -> str:
+    """Run ``code`` in a subprocess with ``n_devices`` fake CPU devices.
+
+    The snippet should raise/assert on failure. Returns captured stdout.
+    """
+    import re as _re
+    env = dict(os.environ)
+    old = _re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                  env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + old).strip()
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multi-device subprocess failed\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr}")
+    return proc.stdout

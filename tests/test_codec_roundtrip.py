@@ -1,0 +1,128 @@
+"""Round-trip / property tests for the pure-JAX chunked codec.
+
+Losslessness is THE paper property: decode(encode(x)) == x bit-exactly,
+for any byte stream and any valid scheme/histogram.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TABLE1, TABLE2, build_tables, codec, distributions
+from repro.core.schemes import QLCScheme
+from repro.core.scheme_search import optimal_scheme
+from repro.core import entropy
+
+
+def roundtrip(symbols: np.ndarray, tables, chunk: int = 256) -> np.ndarray:
+    words, nbits, n = codec.encode_stream(
+        jnp.asarray(symbols, dtype=jnp.uint8), tables, chunk_symbols=chunk)
+    out = codec.decode_stream(words, tables, chunk, n)
+    return np.asarray(out)
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("chunk", [64, 256, 1024])
+    def test_ffn1_stream(self, t1_tables, chunk):
+        syms = distributions.ffn1_symbols(4096, seed=3)
+        assert (roundtrip(syms, t1_tables, chunk) == syms).all()
+
+    def test_ffn2_stream_table2(self, t2_tables):
+        syms = distributions.ffn2_symbols(4096, seed=4)
+        assert (roundtrip(syms, t2_tables) == syms).all()
+
+    def test_all_256_symbols(self, t1_tables):
+        syms = np.arange(256, dtype=np.uint8)
+        assert (roundtrip(syms, t1_tables, chunk=256) == syms).all()
+
+    def test_non_multiple_length(self, t1_tables):
+        syms = np.arange(1000, dtype=np.int64).astype(np.uint8)
+        assert (roundtrip(syms, t1_tables, chunk=256) == syms).all()
+
+    def test_single_symbol(self, t1_tables):
+        syms = np.array([177], dtype=np.uint8)
+        assert (roundtrip(syms, t1_tables, chunk=64) == syms).all()
+
+    def test_worst_case_all_longest(self, t1_tables):
+        # Stream of nothing but 11-bit codes must still fit the slot.
+        rank255_sym = int(np.argmax(t1_tables.enc_len))
+        syms = np.full(512, rank255_sym, dtype=np.uint8)
+        assert (roundtrip(syms, t1_tables, chunk=256) == syms).all()
+
+    @given(data=st.binary(min_size=1, max_size=2048))
+    @settings(max_examples=40, deadline=None)
+    def test_property_arbitrary_bytes_t1(self, data):
+        tables = build_tables(np.arange(256, 0, -1, dtype=np.float64), TABLE1)
+        syms = np.frombuffer(data, dtype=np.uint8)
+        assert (roundtrip(syms, tables, chunk=128) == syms).all()
+
+    @given(
+        counts=st.lists(st.integers(min_value=0, max_value=10_000),
+                        min_size=256, max_size=256),
+        data=st.binary(min_size=1, max_size=512),
+        table2=st.booleans(),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_arbitrary_histogram(self, counts, data, table2):
+        # Any histogram (incl. zeros/ties) must yield a lossless codec.
+        scheme = TABLE2 if table2 else TABLE1
+        tables = build_tables(np.asarray(counts, dtype=np.float64), scheme)
+        syms = np.frombuffer(data, dtype=np.uint8)
+        assert (roundtrip(syms, tables, chunk=64) == syms).all()
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_property_searched_schemes(self, seed):
+        rng = np.random.default_rng(seed)
+        pmf = rng.dirichlet(np.full(256, 0.3))
+        pmf_sorted = np.sort(pmf)[::-1]
+        scheme, _ = optimal_scheme(pmf_sorted, max_distinct_lengths=4)
+        tables = build_tables(pmf, scheme)
+        syms = rng.integers(0, 256, size=777, dtype=np.uint8)
+        assert (roundtrip(syms, tables, chunk=128) == syms).all()
+
+
+class TestSizes:
+    def test_nbits_matches_lut_lengths(self, t1_tables):
+        syms = distributions.ffn1_symbols(2048, seed=5)
+        words, nbits, n = codec.encode_stream(
+            jnp.asarray(syms), t1_tables, chunk_symbols=256)
+        expect = t1_tables.enc_len[syms.astype(np.int64)].reshape(
+            -1, 256).sum(axis=1)
+        assert (np.asarray(nbits) == expect).all()
+
+    def test_worst_case_words_bound(self):
+        assert codec.worst_case_words(1024, 11) == (1024 * 11 + 31) // 32 + 1
+        assert codec.raw_words(1024) == 256
+
+    def test_measured_compressibility_in_paper_band(self, t1_tables):
+        # Our synthetic FFN1 stream: QLC-T1 compressibility should be
+        # positive and within a few points of the paper's 13.9%.
+        syms = distributions.ffn1_symbols(1 << 18, seed=0)
+        c = codec.measured_compressibility(syms, t1_tables)
+        assert 0.10 < c < 0.22, c
+
+    def test_compressed_bits_helper(self, t1_tables):
+        syms = jnp.asarray(np.zeros(100, dtype=np.uint8))
+        bits = codec.compressed_bits(syms, t1_tables)
+        assert float(bits) == 100 * int(
+            t1_tables.enc_len[0])
+
+
+class TestEncoderLutSemantics:
+    def test_most_frequent_symbol_gets_shortest_code(self, ffn1_counts,
+                                                     t1_tables):
+        top = int(np.argmax(ffn1_counts))
+        assert t1_tables.enc_len[top] == 6
+        rare = int(np.argmin(ffn1_counts))
+        assert t1_tables.enc_len[rare] == 11
+
+    def test_dec_lut_inverts_ranking(self, ffn1_counts, t1_tables):
+        pmf_sorted, order = entropy.sort_pmf_desc(ffn1_counts)
+        assert (t1_tables.dec_lut == order.astype(np.uint8)).all()
+
+    def test_deterministic_tables(self, ffn1_counts):
+        a = build_tables(ffn1_counts, TABLE1)
+        b = build_tables(ffn1_counts.copy(), TABLE1)
+        assert (a.enc_code == b.enc_code).all()
+        assert (a.dec_lut == b.dec_lut).all()

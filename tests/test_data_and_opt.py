@@ -1,0 +1,86 @@
+"""Data pipeline determinism/host-sharding + optimizer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, SyntheticDataset
+from repro.training import optimizer as opt
+
+
+class TestSyntheticData:
+    def test_deterministic_and_resumable(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4)
+        d1 = SyntheticDataset(cfg)
+        d2 = SyntheticDataset(cfg)
+        b1 = d1.batch_at(7)
+        b2 = d2.batch_at(7)   # fresh instance, same step -> same batch
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_host_sharding_partitions_global_batch(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8)
+        hosts = [SyntheticDataset(cfg, host_index=i, host_count=4)
+                 for i in range(4)]
+        batches = [h.batch_at(3)["tokens"] for h in hosts]
+        assert all(b.shape == (2, 8) for b in batches)
+        # different hosts -> different data (replaceable, not duplicated)
+        assert not np.array_equal(batches[0], batches[1])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2)
+        b = SyntheticDataset(cfg).batch_at(0)
+        assert b["tokens"].shape == b["labels"].shape
+
+    def test_learnable_structure(self):
+        # motif planting => token t+1 is a function of token t half the
+        # time; verify the deterministic map appears frequently.
+        cfg = DataConfig(vocab_size=97, seq_len=64, global_batch=8)
+        b = SyntheticDataset(cfg).batch_at(0)
+        toks = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+        pred = (toks[:, :-1] * 31 + 7) % 97
+        frac = (pred == toks[:, 1:]).mean()
+        assert frac > 0.2
+
+
+class TestAdamW:
+    def test_matches_reference_adam(self):
+        cfg = opt.OptConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8,
+                            warmup_steps=0, total_steps=10**9,
+                            grad_clip=1e9, min_lr_frac=1.0)
+        params = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+        g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+        state = opt.init_state(params, cfg)
+        p1, s1, _ = opt.apply_update(params, g, state, cfg)
+        # hand-computed Adam step 1: m=g*(1-b1)/bc1=g; v=g^2 -> delta=g/|g|
+        expect = np.asarray([1.0, -2.0, 3.0]) - 1e-2 * np.sign(
+            np.asarray([0.1, 0.2, -0.3]))
+        np.testing.assert_allclose(np.asarray(p1["w"]), expect, rtol=1e-4)
+
+    def test_grad_clip(self):
+        g = {"w": jnp.asarray([30.0, 40.0])}   # norm 50
+        clipped, norm = opt.clip_by_global_norm(g, 5.0)
+        assert float(norm) == pytest.approx(50.0)
+        got = np.asarray(clipped["w"])
+        np.testing.assert_allclose(got, [3.0, 4.0], rtol=1e-5)
+
+    def test_flat_matches_pytree_update(self):
+        """ZeRO-1 flat-slice AdamW == pytree AdamW on the same values."""
+        cfg = opt.OptConfig(lr=3e-3, warmup_steps=0, grad_clip=1e9,
+                            total_steps=10**9, min_lr_frac=1.0)
+        rng = np.random.default_rng(0)
+        p = jnp.asarray(rng.standard_normal(64), jnp.float32)
+        g = jnp.asarray(rng.standard_normal(64), jnp.float32)
+        tree_p, tree_s, _ = opt.apply_update(
+            {"w": p}, {"w": g}, opt.init_state({"w": p}, cfg), cfg)
+        flat_s = opt.init_flat_state(64, cfg)
+        gnorm = jnp.sqrt(jnp.sum(g * g))
+        flat_p, _, _ = opt.apply_flat_update(p, g, flat_s, cfg, gnorm)
+        np.testing.assert_allclose(np.asarray(tree_p["w"]),
+                                   np.asarray(flat_p), rtol=1e-6)
+
+    def test_lr_schedule(self):
+        cfg = opt.OptConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                            min_lr_frac=0.1)
+        assert float(opt.lr_at(cfg, jnp.int32(0))) == 0.0
+        assert float(opt.lr_at(cfg, jnp.int32(10))) == pytest.approx(1.0)
+        assert float(opt.lr_at(cfg, jnp.int32(110))) == pytest.approx(0.1)

@@ -1,0 +1,74 @@
+"""e4m3 quantization substrate tests (paper §3 pipeline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import e4m3
+
+
+class TestCodeTable:
+    def test_all_256_finite(self):
+        table = e4m3.decode_table()
+        assert np.isfinite(table).all()          # eXmY all-finite variant
+        assert table.max() == 480.0
+        assert table.min() == -480.0
+
+    def test_sign_symmetry(self):
+        t = e4m3.decode_table()
+        np.testing.assert_array_equal(-t[:128], t[128:])
+
+    def test_monotone_magnitudes(self):
+        t = e4m3.decode_table()[:128]
+        assert (np.diff(t) > 0).all()
+
+    def test_encode_decode_identity_on_grid(self):
+        codes = jnp.arange(256, dtype=jnp.uint8)
+        vals = e4m3.e4m3_decode(codes)
+        back = e4m3.e4m3_encode(vals)
+        # -0.0 and +0.0 coincide in value; both map to a zero code
+        v2 = e4m3.e4m3_decode(back)
+        np.testing.assert_array_equal(np.asarray(v2), np.asarray(vals))
+
+    def test_round_to_nearest_even(self):
+        t = e4m3.decode_table()
+        # midpoint between code 8 and 9 must round to the even code 8
+        mid = (t[8] + t[9]) / 2
+        c = int(e4m3.e4m3_encode(jnp.asarray([mid]))[0])
+        assert c == 8
+
+    def test_saturation(self):
+        c = e4m3.e4m3_encode(jnp.asarray([1e9, -1e9, np.inf]))
+        v = np.asarray(e4m3.e4m3_decode(c))
+        assert v[0] == 480.0 and v[1] == -480.0 and v[2] == 480.0
+
+
+class TestBlockScaling:
+    @given(seed=st.integers(0, 2**31 - 1),
+           scale=st.floats(1e-3, 1e3))
+    @settings(max_examples=20, deadline=None)
+    def test_quantization_error_bound(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        x = (rng.standard_normal(256) * scale).astype(np.float32)
+        codes, scales = e4m3.quantize_block32(jnp.asarray(x))
+        back = np.asarray(e4m3.dequantize_block32(codes, scales))
+        # relative error bounded by half a mantissa step (2^-4 at 3 bits)
+        err = np.abs(back - x)
+        amax = np.abs(x).reshape(-1, 32).max(axis=1)
+        bound = np.repeat(amax, 32) * (2 ** -3)  # conservative
+        assert (err <= bound + 1e-7).all()
+
+    def test_zero_block(self):
+        x = jnp.zeros((64,), jnp.float32)
+        codes, scales = e4m3.quantize_block32(x)
+        back = e4m3.dequantize_block32(codes, scales)
+        np.testing.assert_array_equal(np.asarray(back), np.zeros(64))
+
+    def test_fn_variant_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (128,), jnp.float32)
+        codes, scales = e4m3.quantize_block32_fn(x)
+        back = np.asarray(e4m3.dequantize_block32_fn(codes, scales))
+        assert np.isfinite(back).all()
+        err = np.abs(back - np.asarray(x)) / np.maximum(np.abs(x), 1e-3)
+        assert np.median(err) < 0.08

@@ -1,0 +1,120 @@
+"""Pallas kernel validation: sweep shapes/schemes and compare bit-exactly
+against the ref.py pure-jnp oracles (interpret=True on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TABLE1, TABLE2, build_tables, codec, distributions
+from repro.core.scheme_search import optimal_scheme
+from repro.core import entropy
+from repro.kernels import ops, ref
+
+
+def _tables(scheme, seed=0):
+    return build_tables(distributions.ffn1_counts(1 << 14, seed=seed), scheme)
+
+
+CHUNK_SWEEP = [64, 128, 256, 1024]
+NCHUNK_SWEEP = [1, 7, 8, 32]
+
+
+class TestDecodeKernel:
+    @pytest.mark.parametrize("chunk", CHUNK_SWEEP)
+    @pytest.mark.parametrize("scheme", [TABLE1, TABLE2], ids=["t1", "t2"])
+    def test_chunk_sweep(self, chunk, scheme, rng):
+        tables = _tables(scheme)
+        syms = rng.integers(0, 256, size=(16, chunk), dtype=np.uint8)
+        cap = codec.worst_case_words(chunk, tables.max_code_length)
+        words, _ = ref.encode_ref(jnp.asarray(syms), tables, cap)
+        got = ops.decode(words, tables, chunk)
+        want = ref.decode_ref(words, tables, chunk)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(got), syms)
+
+    @pytest.mark.parametrize("n_chunks", NCHUNK_SWEEP)
+    def test_nonmultiple_tile_padding(self, n_chunks, rng):
+        tables = _tables(TABLE1)
+        syms = rng.integers(0, 256, size=(n_chunks, 128), dtype=np.uint8)
+        cap = codec.worst_case_words(128, tables.max_code_length)
+        words, _ = ref.encode_ref(jnp.asarray(syms), tables, cap)
+        got = ops.decode(words, tables, 128)
+        assert got.shape == (n_chunks, 128)
+        np.testing.assert_array_equal(np.asarray(got), syms)
+
+    def test_tile_chunks_variants(self, rng):
+        tables = _tables(TABLE1)
+        syms = rng.integers(0, 256, size=(12, 256), dtype=np.uint8)
+        cap = codec.worst_case_words(256, tables.max_code_length)
+        words, _ = ref.encode_ref(jnp.asarray(syms), tables, cap)
+        for tc in (1, 2, 4):
+            got = ops.decode(words, tables, 256, tile_chunks=tc)
+            np.testing.assert_array_equal(np.asarray(got), syms)
+
+
+class TestEncodeKernel:
+    @pytest.mark.parametrize("chunk", CHUNK_SWEEP)
+    @pytest.mark.parametrize("scheme", [TABLE1, TABLE2], ids=["t1", "t2"])
+    def test_matches_ref(self, chunk, scheme, rng):
+        tables = _tables(scheme, seed=1)
+        syms = rng.integers(0, 256, size=(16, chunk), dtype=np.uint8)
+        cap = codec.worst_case_words(chunk, tables.max_code_length)
+        w_ref, nb_ref = ref.encode_ref(jnp.asarray(syms), tables, cap)
+        w_k, nb_k = ops.encode(jnp.asarray(syms), tables, cap)
+        np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_ref))
+        np.testing.assert_array_equal(np.asarray(nb_k), np.asarray(nb_ref))
+
+    def test_roundtrip_through_kernels_only(self, rng):
+        tables = _tables(TABLE1)
+        syms = distributions.ffn1_symbols(4096, seed=21).reshape(-1, 256)
+        cap = codec.worst_case_words(256, tables.max_code_length)
+        words, _ = ops.encode(jnp.asarray(syms), tables, cap)
+        out = ops.decode(words, tables, 256)
+        np.testing.assert_array_equal(np.asarray(out), syms)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_property_random_scheme_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        pmf = np.sort(rng.dirichlet(np.full(256, 0.5)))[::-1]
+        scheme, _ = optimal_scheme(pmf, max_distinct_lengths=4)
+        tables = build_tables(rng.permutation(pmf), scheme)
+        syms = rng.integers(0, 256, size=(8, 128), dtype=np.uint8)
+        cap = codec.worst_case_words(128, tables.max_code_length)
+        words, _ = ops.encode(jnp.asarray(syms), tables, cap)
+        out = ops.decode(words, tables, 128)
+        np.testing.assert_array_equal(np.asarray(out), syms)
+
+
+class TestHistogramKernel:
+    @pytest.mark.parametrize("n", [128, 1024, 4096, 5000, 12345])
+    def test_matches_ref(self, n, rng):
+        syms = rng.integers(0, 256, size=n, dtype=np.uint8)
+        got = ops.histogram(jnp.asarray(syms))
+        want = ref.histogram256_ref(jnp.asarray(syms))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(
+            np.asarray(got), np.bincount(syms, minlength=256))
+
+    def test_matches_numpy_on_real_stream(self):
+        syms = distributions.ffn2_symbols(1 << 14, seed=3)
+        got = np.asarray(ops.histogram(jnp.asarray(syms)))
+        np.testing.assert_array_equal(got, np.bincount(syms, minlength=256))
+
+    def test_total_preserved_under_padding(self, rng):
+        syms = rng.integers(0, 256, size=999, dtype=np.uint8)
+        got = np.asarray(ops.histogram(jnp.asarray(syms)))
+        assert got.sum() == 999
+
+
+class TestCalibrationPipeline:
+    def test_kernel_histogram_feeds_table_build(self):
+        """End-to-end: histogram kernel -> tables -> codec round trip."""
+        syms = distributions.ffn1_symbols(1 << 14, seed=5)
+        counts = np.asarray(ops.histogram(jnp.asarray(syms))).astype(np.float64)
+        tables = build_tables(counts, TABLE1)
+        data = syms[:2048].reshape(-1, 256)
+        cap = codec.worst_case_words(256, tables.max_code_length)
+        words, _ = ops.encode(jnp.asarray(data), tables, cap)
+        out = ops.decode(words, tables, 256)
+        np.testing.assert_array_equal(np.asarray(out), data)

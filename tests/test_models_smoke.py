@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned arch instantiates a REDUCED same-family config (small
+width/depth, few experts, tiny vocab) and runs one forward + one train
+step on CPU, asserting output shapes and finiteness. Full configs are
+exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, reduced, shapes_for
+from repro.configs.base import LONG_500K
+from repro.models import (decode_step, forward, init_decode_states,
+                          init_params, next_token_loss)
+from repro.models.multimodal import stub_prefix_embeddings
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, batch=2, seq=32):
+    st = seq - cfg.frontend_prefix_len
+    tokens = jax.random.randint(KEY, (batch, st), 0, cfg.vocab_size)
+    labels = jax.random.randint(KEY, (batch, st), 0, cfg.vocab_size)
+    prefix = (stub_prefix_embeddings(KEY, cfg, batch)
+              if cfg.frontend else None)
+    return tokens, labels, prefix
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, KEY)
+        tokens, _, prefix = _inputs(cfg)
+        logits = forward(params, cfg, tokens, prefix)
+        assert logits.shape == (2, 32, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    def test_train_step_reduces_loss(self, arch):
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, KEY)
+        tokens, labels, prefix = _inputs(cfg)
+
+        loss_fn = lambda p: next_token_loss(p, cfg, tokens, labels, prefix)
+        l0, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+        assert np.isfinite(float(l0))
+        gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                    for g in jax.tree.leaves(grads)) ** 0.5
+        assert np.isfinite(gnorm) and gnorm > 0
+        # one SGD step on the same batch must reduce the loss
+        params2 = jax.tree.map(
+            lambda p, g: p - 0.03 * g.astype(p.dtype), params, grads)
+        l1 = float(jax.jit(loss_fn)(params2))
+        assert l1 < float(l0), (arch, float(l0), l1)
+
+    def test_decode_step(self, arch):
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, KEY)
+        states = init_decode_states(cfg, batch=2, max_len=64)
+        tok = jax.random.randint(KEY, (2, 1), 0, cfg.vocab_size)
+        logits, ns = decode_step(params, cfg, tok, states,
+                                 jnp.zeros((2, 1), jnp.int32))
+        logits2, _ = decode_step(params, cfg, tok, ns,
+                                 jnp.ones((2, 1), jnp.int32))
+        assert logits.shape == (2, 1, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+    def test_decode_consistent_with_forward(self, arch):
+        """Greedy decode logits must match teacher-forced forward logits.
+
+        Run in float32: this test validates the decode state machine;
+        under bf16 the tiny rounding differences between the batched and
+        step-wise paths can flip MoE routing decisions, which is inherent
+        numeric noise, not a state bug (verified: f32 agrees to ~5e-6).
+        MoE capacity is raised so no tokens drop (forward and decode see
+        different token counts, hence different capacities otherwise).
+        """
+        import dataclasses
+        cfg = reduced(get_config(arch), frontend_prefix_len=0, frontend=None,
+                      dtype="float32")
+        if cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(
+                    cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+        params = init_params(cfg, KEY)
+        b, s = 2, 8
+        tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+        full = forward(params, cfg, tokens)          # [B, S, V]
+
+        states = init_decode_states(cfg, batch=b, max_len=16)
+        outs = []
+        for t in range(s):
+            lg, states = decode_step(
+                params, cfg, tokens[:, t:t + 1], states,
+                jnp.full((b, 1), t, jnp.int32))
+            outs.append(lg[:, 0])
+        step = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(full, np.float32), np.asarray(step, np.float32),
+            rtol=1e-3, atol=1e-3)
+
+
+class TestShapeAssignments:
+    def test_long_context_only_for_subquadratic(self):
+        for arch in ASSIGNED:
+            cfg = get_config(arch)
+            shapes = shapes_for(cfg)
+            if cfg.family in ("ssm", "hybrid"):
+                assert LONG_500K in shapes, arch
+            else:
+                assert LONG_500K not in shapes, arch
+
+    def test_cell_count_is_40(self):
+        # 10 archs x 4 assigned shapes = 40 cells; 32 runnable + 8
+        # documented long-context skips.
+        total = sum(4 for _ in ASSIGNED)
+        runnable = sum(len(shapes_for(get_config(a))) for a in ASSIGNED)
+        assert total == 40
+        assert runnable == 32
+
+    def test_param_counts_match_published_sizes(self):
+        expect = {
+            "deepseek-coder-33b": 33e9,
+            "chatglm3-6b": 6e9,
+            "nemotron-4-340b": 340e9,
+            "phi3-mini-3.8b": 3.8e9,
+            "phi-3-vision-4.2b": 3.8e9,   # backbone only (stub frontend)
+            "musicgen-medium": 1.5e9,
+            "jamba-1.5-large-398b": 398e9,
+            "deepseek-moe-16b": 16e9,
+            "mixtral-8x22b": 141e9,
+            "xlstm-125m": 125e6,
+        }
+        for arch, n in expect.items():
+            got = get_config(arch).param_count()
+            assert 0.75 * n <= got <= 1.3 * n, (arch, got, n)
+
+    def test_moe_active_counts(self):
+        assert get_config("mixtral-8x22b").active_param_count() < 45e9
+        assert get_config("deepseek-moe-16b").active_param_count() < 4e9
+        j = get_config("jamba-1.5-large-398b")
+        assert 80e9 < j.active_param_count() < 110e9

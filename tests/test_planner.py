@@ -1,0 +1,77 @@
+"""Wire planner + calibration unit tests."""
+import numpy as np
+import pytest
+
+from repro.comm.planner import (CommPlan, effective_compression_ratio,
+                                hoeffding_margin_bits, plan_for_tables)
+from repro.comm.calibrate import calibrate_for_tensor
+from repro.core import TABLE1, build_tables, distributions
+
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return build_tables(distributions.ffn1_counts(1 << 18), TABLE1)
+
+
+class TestHoeffding:
+    def test_margin_shrinks_with_chunk_size(self):
+        m256 = hoeffding_margin_bits(256, 1e-6)
+        m1024 = hoeffding_margin_bits(1024, 1e-6)
+        m4096 = hoeffding_margin_bits(4096, 1e-6)
+        assert m256 > m1024 > m4096 > 0
+        assert m1024 == pytest.approx(m256 / 2)
+
+    def test_margin_grows_with_confidence(self):
+        assert (hoeffding_margin_bits(1024, 1e-9)
+                > hoeffding_margin_bits(1024, 1e-3))
+
+
+class TestPlan:
+    def test_capacity_between_mean_and_raw(self, tables):
+        counts = distributions.ffn1_counts(1 << 18)
+        plan = plan_for_tables(tables, counts, chunk_symbols=1024)
+        bits = plan.capacity_words * 32 / 1024
+        assert plan.expected_bits_per_symbol < bits <= 8.0 + 32 / 1024
+
+    def test_capacity_factor_override(self, tables):
+        counts = distributions.ffn1_counts(1 << 18)
+        plan = plan_for_tables(tables, counts, chunk_symbols=1024,
+                               capacity_factor=0.875)
+        assert plan.capacity_words == int(np.ceil(0.875 * 8 * 1024 / 32))
+
+    def test_effective_ratio_vs_bf16(self, tables):
+        counts = distributions.ffn1_counts(1 << 18)
+        plan = plan_for_tables(tables, counts, chunk_symbols=1024)
+        r = effective_compression_ratio(plan)
+        assert 1.5 < r < 2.5   # ~2x vs bf16 incl. scale/flag overhead
+
+    def test_pool_slots_scale(self, tables):
+        counts = distributions.ffn1_counts(1 << 18)
+        plan = plan_for_tables(tables, counts)
+        assert plan.pool_slots(1024) >= plan.pool_slots_per_1k
+        assert plan.pool_slots(1) >= 1
+
+
+class TestEmpiricalCalibration:
+    def test_quantile_capacity_covers_chunks(self):
+        import jax
+        x = jax.random.normal(jax.random.PRNGKey(0), (1 << 18,))
+        tables, plan = calibrate_for_tensor(x, chunk_symbols=1024)
+        # encode the SAME data: escapes must be at/below the bound
+        from repro.quant import e4m3
+        codes, _ = e4m3.quantize_block32(x.reshape(-1))
+        lens = tables.enc_len[np.asarray(codes)].astype(np.int64)
+        nch = len(lens) // 1024
+        sums = lens[:nch * 1024].reshape(nch, 1024).sum(1)
+        esc_rate = (sums > plan.capacity_words * 32).mean()
+        assert esc_rate <= max(plan.escape_prob_bound, 1e-3) + 2 / nch
+
+    def test_returns_valid_tables(self):
+        import jax
+        x = jax.random.normal(jax.random.PRNGKey(1), (1 << 16,))
+        tables, plan = calibrate_for_tensor(x)
+        assert tables.enc_len.min() >= 4
+        assert tables.enc_len.max() <= 11
+        assert plan.chunk_symbols == 1024

@@ -1,0 +1,94 @@
+"""Unit tests for QLC scheme definitions (paper §5-§6, Tables 1-2)."""
+import numpy as np
+import pytest
+
+from repro.core.schemes import (
+    NUM_SYMBOLS, QLCScheme, TABLE1, TABLE2, scheme_from_area_sizes)
+
+
+class TestPaperTables:
+    def test_table1_matches_paper(self):
+        # Paper Table 1: 5 areas of 8 (6b), 16 (7b), 32 (8b), 168 (11b).
+        assert TABLE1.areas == (
+            (8, 3), (8, 3), (8, 3), (8, 3), (8, 3), (16, 4), (32, 5), (168, 8))
+        assert TABLE1.distinct_lengths == (6, 7, 8, 11)
+        lengths = TABLE1.code_lengths
+        assert (lengths[:40] == 6).all()
+        assert (lengths[40:56] == 7).all()
+        assert (lengths[56:88] == 8).all()
+        assert (lengths[88:] == 11).all()
+
+    def test_table2_matches_paper(self):
+        assert TABLE2.areas == (
+            (2, 1), (8, 3), (8, 3), (8, 3), (8, 3), (32, 5), (32, 5), (158, 8))
+        assert TABLE2.distinct_lengths == (4, 6, 8, 11)
+        lengths = TABLE2.code_lengths
+        assert (lengths[:2] == 4).all()
+        assert (lengths[2:34] == 6).all()
+        assert (lengths[34:98] == 8).all()
+        assert (lengths[98:] == 11).all()
+
+    def test_quadness(self):
+        # "Quad": exactly 4 distinct code lengths (vs Huffman's 13 in Fig 2).
+        assert len(TABLE1.distinct_lengths) == 4
+        assert len(TABLE2.distinct_lengths) == 4
+
+
+class TestSchemeInvariants:
+    def test_codes_are_prefix_free(self):
+        for scheme in (TABLE1, TABLE2):
+            codes, lens = scheme.rank_codes()
+            seen = set()
+            for c, l in zip(codes, lens):
+                # LSB-first: the first l bits are the codeword.
+                key = (int(c) & ((1 << int(l)) - 1), int(l))
+                assert key not in seen
+                seen.add(key)
+            # Prefix-freeness: no codeword is a prefix of another.
+            by_bits = sorted(seen, key=lambda t: t[1])
+            for i, (c1, l1) in enumerate(by_bits):
+                for c2, l2 in by_bits[i + 1:]:
+                    if l1 < l2:
+                        assert (c2 & ((1 << l1) - 1)) != c1 or l1 == l2
+
+    def test_area_code_determines_length(self):
+        # The paper's decode-speed claim hinges on this.
+        for scheme in (TABLE1, TABLE2):
+            codes, lens = scheme.rank_codes()
+            area_of = codes & 7
+            for a in range(8):
+                area_lens = lens[area_of == a]
+                if area_lens.size:
+                    assert (area_lens == area_lens[0]).all()
+
+    def test_kraft_inequality(self):
+        for scheme in (TABLE1, TABLE2):
+            lengths = scheme.code_lengths.astype(np.float64)
+            assert (2.0 ** -lengths).sum() <= 1.0 + 1e-12
+
+    def test_validation_rejects_bad_layouts(self):
+        with pytest.raises(ValueError):
+            QLCScheme(areas=((8, 2),) + ((8, 3),) * 7)  # 8 > 2**2
+        with pytest.raises(ValueError):
+            QLCScheme(areas=((8, 3),) * 8)  # covers only 64
+        with pytest.raises(ValueError):
+            QLCScheme(areas=((0, 3), (256, 8)) + ((8, 3),) * 6)
+
+    def test_expected_bits_monotone_in_scheme_fit(self):
+        # Degenerate distribution: all mass on rank 0 -> T2 (4-bit head) wins.
+        pmf = np.zeros(NUM_SYMBOLS)
+        pmf[0] = 1.0
+        assert TABLE2.expected_bits(pmf) < TABLE1.expected_bits(pmf)
+        # Slowly decaying distribution (no dominant symbol — FFN1-like
+        # flat head): T1's 40-symbol 6-bit head beats T2's short head.
+        decay = 0.97 ** np.arange(NUM_SYMBOLS)
+        decay /= decay.sum()
+        assert TABLE1.expected_bits(decay) < TABLE2.expected_bits(decay)
+
+    def test_scheme_from_area_sizes(self):
+        s = scheme_from_area_sizes([8, 8, 8, 8, 8, 16, 32, 168])
+        assert s.areas == TABLE1.areas
+
+    def test_describe(self):
+        txt = TABLE1.describe()
+        assert "000" in txt and "168" in txt
