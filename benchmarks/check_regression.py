@@ -1,0 +1,86 @@
+"""CI benchmark gate: compare a --smoke --json run against the
+committed baseline.
+
+Usage:
+    python benchmarks/check_regression.py out.json \
+        [--baseline benchmarks/BENCH_baseline.json] [--threshold 10]
+
+Fails (exit 1) when
+  * any row in the current run is an ``*_ERROR`` row,
+  * a baseline row is missing from the current run (a benchmark was
+    silently dropped), or
+  * a row's ``us_per_call`` exceeds ``threshold`` x its baseline.
+
+The threshold is deliberately generous (default 10x): CI machines are
+noisy and interpret-mode kernel timings vary a lot; the gate exists to
+catch order-of-magnitude regressions and silently-deleted coverage,
+not single-digit-percent drift. Refresh the baseline with --update
+after intentional changes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+
+def _rows_by_name(payload):
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="JSON from benchmarks/run.py --json")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="allowed slowdown factor vs baseline")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the baseline with the current run")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = _rows_by_name(json.load(f))
+
+    failures = []
+    for name in current:
+        if name.endswith("_ERROR"):
+            failures.append(f"ERROR row: {name}: "
+                            f"{current[name].get('error', '')}")
+
+    if args.update:
+        if failures:
+            print("\n".join(failures), file=sys.stderr)
+            print("refusing to --update from a run with errors",
+                  file=sys.stderr)
+            return 1
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = _rows_by_name(json.load(f))
+
+    for name, base_row in baseline.items():
+        if name.endswith("_ERROR"):
+            continue                      # never canonize an error row
+        cur = current.get(name)
+        if cur is None:
+            failures.append(f"missing row vs baseline: {name}")
+            continue
+        base_us, cur_us = base_row["us_per_call"], cur["us_per_call"]
+        if base_us > 0 and cur_us > args.threshold * base_us:
+            failures.append(
+                f"regression: {name}: {cur_us:.1f}us vs baseline "
+                f"{base_us:.1f}us (> {args.threshold:.1f}x)")
+
+    if failures:
+        print("\n".join(failures), file=sys.stderr)
+        return 1
+    print(f"benchmark gate OK ({len(baseline)} baseline rows, "
+          f"threshold {args.threshold:.1f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

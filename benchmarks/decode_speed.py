@@ -66,7 +66,7 @@ def run(n: int = 1 << 16):
     huff_sps = n_h / t_huff
 
     # QLC python-sequential (single chunk stream)
-    chunk = 1 << 14
+    chunk = min(1 << 14, n)
     one = syms[:chunk].reshape(1, chunk)
     cap = codec.worst_case_words(chunk, tables.max_code_length)
     words1, _ = codec.encode_chunks(jnp.asarray(one), tables, cap)

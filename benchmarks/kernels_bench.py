@@ -1,6 +1,13 @@
-"""Benchmark: codec kernel throughput (jitted reference path on CPU;
-on TPU the Pallas kernels take over — interpret-mode numbers are NOT
-hardware-indicative and are reported only for plumbing validation)."""
+"""Benchmark: codec kernel throughput, fused vs unfused.
+
+Rows cover (a) the jitted pure-JAX reference codec, (b) the unfused
+kernel pipeline (separate quantize, encode, decode, dequantize
+dispatches) and (c) the fused Pallas pipeline (quantize+encode and
+decode+dequantize as one dispatch each). On CPU the kernels run in
+interpret mode — numbers there validate plumbing and relative fused
+gain, NOT hardware throughput; on TPU the same rows measure the
+compiled kernels.
+"""
 from __future__ import annotations
 
 import time
@@ -10,6 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import TABLE1, build_tables, codec, distributions
+from repro.kernels import ops
+from repro.quant import e4m3
 
 
 def _time(fn, repeats=3):
@@ -30,22 +39,66 @@ def run(n: int = 1 << 18):
     chunks = jnp.asarray(syms.reshape(-1, k))
     cap = codec.worst_case_words(k, tables.max_code_length)
 
+    rows = []
+
+    def row(name, t, **derived):
+        rows.append({"name": name, "us_per_call": t * 1e6,
+                     "symbols_per_s": round(n / t), **derived})
+
+    # --- jitted pure-JAX reference codec --------------------------------
     enc = jax.jit(lambda c: codec.encode_chunks(c, tables, cap))
     t_enc = _time(lambda: jax.block_until_ready(enc(chunks)))
+    row("encode_jit_cpu", t_enc)
     words, _ = enc(chunks)
     dec = jax.jit(lambda w: codec.decode_chunks(w, tables, k))
     t_dec = _time(lambda: jax.block_until_ready(dec(words)))
+    row("decode_jit_cpu", t_dec)
 
-    from repro.quant import e4m3
     vals = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
     q = jax.jit(lambda v: e4m3.quantize_block32(v))
     t_q = _time(lambda: jax.block_until_ready(q(vals)))
+    row("quantize_block32_cpu", t_q)
 
-    return [
-        {"name": "encode_jit_cpu", "us_per_call": t_enc * 1e6,
-         "symbols_per_s": round(n / t_enc)},
-        {"name": "decode_jit_cpu", "us_per_call": t_dec * 1e6,
-         "symbols_per_s": round(n / t_dec)},
-        {"name": "quantize_block32_cpu", "us_per_call": t_q * 1e6,
-         "symbols_per_s": round(n / t_q)},
-    ]
+    # --- unfused kernel pipeline (separate dispatches) ------------------
+    # jit the whole unfused chain so both sides pay identical dispatch
+    # cost and the rows isolate the fusion effect, not eager overhead.
+    x = vals.reshape(-1, k)
+
+    @jax.jit
+    def unfused_qe(v):
+        codes, scales = e4m3.quantize_block32(v)
+        w, nb = ops.encode(codes, tables, cap)
+        return w, nb, scales
+    t_uqe = _time(lambda: jax.block_until_ready(unfused_qe(x)))
+    row("unfused_quantize_encode", t_uqe)
+
+    kwords, _, kscales = unfused_qe(x)
+
+    @jax.jit
+    def unfused_dd(w, s):
+        sym = ops.decode(w, tables, k)
+        return e4m3.dequantize_block32(sym, s)
+    t_udd = _time(lambda: jax.block_until_ready(unfused_dd(kwords, kscales)))
+    row("unfused_decode_dequantize", t_udd)
+
+    # --- fused kernel pipeline (one dispatch per direction) -------------
+    # Outer-jitted like the unfused chain (and like the production
+    # callers — collectives and the weight wire run these inside jit).
+    fused_qe = jax.jit(lambda v: ops.quantize_encode(v, tables, cap))
+    t_fqe = _time(lambda: jax.block_until_ready(fused_qe(x)))
+    row("fused_quantize_encode", t_fqe,
+        speedup_vs_unfused=round(t_uqe / t_fqe, 3))
+
+    fused_dd = jax.jit(
+        lambda w, s: ops.decode_dequantize(w, s, tables, k))
+    t_fdd = _time(lambda: jax.block_until_ready(fused_dd(kwords, kscales)))
+    row("fused_decode_dequantize", t_fdd,
+        speedup_vs_unfused=round(t_udd / t_fdd, 3))
+
+    # sanity: fused output must match the unfused pipeline bit-exactly
+    fw, fnb, fsc = fused_qe(x)
+    uw, unb, usc = unfused_qe(x)
+    assert (np.asarray(fw) == np.asarray(uw)).all()
+    assert (np.asarray(fsc) == np.asarray(usc)).all()
+
+    return rows

@@ -15,7 +15,7 @@ import time
 
 import numpy as np
 
-from repro.core import adapt, distributions, entropy
+from repro.core import adapt, distributions
 from repro.core.lut import build_tables
 
 

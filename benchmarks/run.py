@@ -1,11 +1,37 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived...`` CSV rows.
+Prints ``name,us_per_call,derived...`` CSV rows. ``--smoke`` runs every
+module at reduced sizes (seconds, not minutes — the CI gate), exits
+nonzero if any module errored, and ``--json out.json`` additionally
+emits machine-readable rows for ``check_regression.py``.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 
-def main() -> None:
+# Self-sufficient when invoked as ``python benchmarks/run.py`` from a
+# clean checkout: put the repo root (benchmarks package) and src
+# (repro package) on the path.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+# Per-module element counts: (full, smoke).
+SIZES = {
+    "benchmarks.compressibility": (1 << 20, 1 << 15),
+    "benchmarks.decode_speed": (1 << 16, 1 << 14),
+    "benchmarks.collective_model": (1 << 20, 1 << 15),
+    "benchmarks.scheme_search": (1 << 20, 1 << 15),
+    "benchmarks.multi_lut": (1 << 19, 1 << 15),
+    "benchmarks.kernels_bench": (1 << 18, 1 << 15),
+}
+
+
+def collect_rows(smoke: bool = False):
     from benchmarks import (collective_model, compressibility, decode_speed,
                             kernels_bench, multi_lut, scheme_search)
     modules = [compressibility, decode_speed, collective_model,
@@ -13,18 +39,44 @@ def main() -> None:
     all_rows = []
     for mod in modules:
         try:
-            rows = mod.run()
+            n = SIZES[mod.__name__][1 if smoke else 0]
+            rows = mod.run(n=n)
         except Exception as e:  # keep the harness running
             rows = [{"name": f"{mod.__name__}_ERROR", "us_per_call": -1,
                      "error": str(e)[:200]}]
         all_rows.extend(rows)
+    return all_rows
 
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; exit nonzero on any *_ERROR row")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows as JSON to PATH")
+    args = ap.parse_args(argv)
+
+    all_rows = collect_rows(smoke=args.smoke)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": all_rows}, f, indent=1)
+
+    errors = 0
     for row in all_rows:
+        row = dict(row)
         name = row.pop("name")
         us = row.pop("us_per_call")
         derived = ";".join(f"{k}={v}" for k, v in row.items())
         print(f"{name},{us:.1f},{derived}")
+        if name.endswith("_ERROR"):
+            errors += 1
+
+    if errors and args.smoke:
+        print(f"{errors} benchmark module(s) errored", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

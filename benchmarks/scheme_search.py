@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core import TABLE1, TABLE2, distributions, entropy
 from repro.core.scheme_search import optimal_scheme

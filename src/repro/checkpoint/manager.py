@@ -9,12 +9,19 @@ Design (DESIGN.md §8):
   * a ``latest`` pointer file updated by atomic rename;
   * restore is mesh-agnostic: leaves are re-placed under whatever
     shardings the caller provides (elastic restart across pod counts);
-  * data-iterator state (step) and RNG key are part of the checkpoint.
+  * data-iterator state (step) and RNG key are part of the checkpoint;
+  * byte-width leaves (uint8 / int8 / fp8 — i.e. e4m3-quantized
+    weights and cached symbol streams) are QLC-compressed losslessly on
+    disk through the Pallas kernel entry points (``repro.kernels.ops``)
+    with per-leaf calibrated tables; the histogram rides in the
+    manifest and tables are rebuilt deterministically on restore. The
+    checksum covers the ORIGINAL bytes, so decode corruption is caught.
 """
 from __future__ import annotations
 
 import hashlib
 import json
+import math
 import os
 import shutil
 import tempfile
@@ -24,6 +31,9 @@ import jax
 import numpy as np
 
 SEP = "/"
+
+QLC_CHUNK = 1024                 # symbols per QLC chunk on disk
+QLC_MIN_BYTES = 4096             # below this, headers beat the savings
 
 
 def _flatten_with_paths(tree) -> Dict[str, Any]:
@@ -45,9 +55,12 @@ def _path_str(p) -> str:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 qlc_codes: bool = True, qlc_min_bytes: int = QLC_MIN_BYTES):
         self.dir = directory
         self.keep = keep
+        self.qlc_codes = qlc_codes
+        self.qlc_min_bytes = qlc_min_bytes
         os.makedirs(directory, exist_ok=True)
 
     # ---- save -----------------------------------------------------------
@@ -62,16 +75,21 @@ class CheckpointManager:
                 arr = np.asarray(leaf)
                 fname = hashlib.md5(key.encode()).hexdigest() + ".npy"
                 fpath = os.path.join(tmp, fname)
-                with open(fpath, "wb") as f:
-                    np.save(f, arr)
-                    f.flush()
-                    os.fsync(f.fileno())
-                manifest["leaves"][key] = {
+                meta = {
                     "file": fname,
                     "shape": list(arr.shape),
                     "dtype": str(arr.dtype),
                     "sum": _checksum(arr),
                 }
+                blob, qlc_meta = self._maybe_qlc(arr)
+                if qlc_meta is not None:
+                    meta["qlc"] = qlc_meta
+                    arr = blob
+                with open(fpath, "wb") as f:
+                    np.save(f, arr)
+                    f.flush()
+                    os.fsync(f.fileno())
+                manifest["leaves"][key] = meta
             mpath = os.path.join(tmp, "manifest.json")
             with open(mpath, "w") as f:
                 json.dump(manifest, f)
@@ -86,6 +104,52 @@ class CheckpointManager:
         except Exception:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
+
+    def _maybe_qlc(self, arr: np.ndarray):
+        """Losslessly QLC-compress a byte-width leaf, if it shrinks.
+
+        Returns ``(blob, meta)`` — the uint32 word array plus the
+        manifest entry (symbol histogram, geometry) needed to rebuild
+        the tables and decode on restore — or ``(arr, None)`` when the
+        leaf is ineligible or incompressible (kept raw).
+        """
+        if (not self.qlc_codes or arr.dtype.hasobject
+                or arr.dtype.itemsize != 1
+                or arr.nbytes < self.qlc_min_bytes):
+            return arr, None
+        syms = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+        counts = np.bincount(syms, minlength=256)
+
+        from repro.core import TABLE1, build_tables
+        from repro.kernels import ops as kops
+        tables = build_tables(counts.astype(np.float64), TABLE1)
+
+        n = syms.size
+        n_chunks = -(-n // QLC_CHUNK)
+        padded = np.zeros(n_chunks * QLC_CHUNK, dtype=np.uint8)
+        padded[:n] = syms
+        lens = tables.enc_len[padded]   # uint8 fancy-index: no int64 copy
+        cap = max(1, math.ceil(
+            int(lens.reshape(n_chunks, QLC_CHUNK).sum(axis=1).max()) / 32))
+        if n_chunks * cap * 4 >= syms.nbytes:     # incompressible leaf
+            return arr, None
+        words, _ = kops.encode(
+            jax.numpy.asarray(padded.reshape(n_chunks, QLC_CHUNK)),
+            tables, cap)
+        meta = {"counts": counts.tolist(), "n": int(n),
+                "chunk": QLC_CHUNK, "capacity_words": int(cap)}
+        return np.asarray(words), meta
+
+    @staticmethod
+    def _decode_qlc(words: np.ndarray, qlc_meta: Dict) -> np.ndarray:
+        """Inverse of ``_maybe_qlc``: words + manifest meta -> uint8."""
+        from repro.core import TABLE1, build_tables
+        from repro.kernels import ops as kops
+        tables = build_tables(
+            np.asarray(qlc_meta["counts"], dtype=np.float64), TABLE1)
+        syms = kops.decode(jax.numpy.asarray(words), tables,
+                           qlc_meta["chunk"])
+        return np.asarray(syms).reshape(-1)[:qlc_meta["n"]]
 
     def _update_latest(self, step: int):
         tmp = os.path.join(self.dir, ".latest_tmp")
@@ -140,6 +204,9 @@ class CheckpointManager:
             if meta is None:
                 raise KeyError(f"checkpoint missing leaf {key}")
             arr = np.load(os.path.join(cdir, meta["file"]))
+            if "qlc" in meta:
+                arr = self._decode_qlc(arr, meta["qlc"]).reshape(
+                    meta["shape"])
             if _checksum(arr) != meta["sum"]:
                 raise IOError(f"checksum mismatch for {key}")
             # np.load returns void dtypes for ml_dtypes arrays (bf16,

@@ -3,7 +3,9 @@ from repro.comm.compressed import (  # noqa: F401
     CommConfig,
     WirePayload,
     compress_codes,
+    compress_values,
     decompress_codes,
+    decompress_values,
     qlc_all_gather,
     qlc_all_to_all,
     qlc_psum,

@@ -14,9 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.compressed import CommConfig
 from repro.comm.planner import CommPlan, plan_for_tables
-from repro.core import adapt, entropy
+from repro.core import adapt
 from repro.core.lut import CodecTables
 from repro.core.schemes import QLCScheme
 from repro.quant import e4m3

@@ -18,6 +18,17 @@ Collectives:
 Each has an uncompressed-e4m3 twin (cfg.enabled=False → raw codes on the
 wire) and a bf16 reference; the coding step is bit-exact lossless, so
 compressed and raw-e4m3 paths produce IDENTICAL numerics (tested).
+
+With ``cfg.use_kernels=True`` the local quantize→encode and
+decode→dequantize stages each run as one fused Pallas dispatch
+(``repro.kernels.ops``) instead of separate XLA ops — same numerics.
+(On this path the uint8 symbols ARE still written once to HBM, because
+the escape pool needs them; the fusion saves the separate quantize and
+encode dispatches and their re-reads. Callers without an escape pool —
+the weight wire, serving, checkpoints — get the full
+symbols-stay-in-VMEM benefit.) Note: ``pallas_call`` has no shard_map
+replication rule, so callers must pass ``check_rep=False`` to
+``shard_map`` when enabling kernels.
 """
 from __future__ import annotations
 
@@ -43,7 +54,10 @@ class CommConfig:
     capacity_words: int = 240     # 7.5 bits/symbol default
     pool_slots_per_1k: int = 8
     scale_dtype: str = "bfloat16"
-    use_kernels: bool = False     # Pallas kernels inside the graph
+    # Fused Pallas kernels inside the graph: quantize+encode and
+    # decode+dequantize each run as one dispatch (repro.kernels.ops).
+    # Bit-exact vs the pure-JAX path; compiled on TPU, interpret on CPU.
+    use_kernels: bool = False
 
     @classmethod
     def from_plan(cls, plan: CommPlan, **kw) -> "CommConfig":
@@ -99,6 +113,87 @@ def _decode(words: jnp.ndarray, tables: CodecTables, cfg: CommConfig):
     return codec.decode_chunks(words, tables, cfg.chunk_symbols)
 
 
+def _raw_payload(chunks: jnp.ndarray) -> WirePayload:
+    """Raw e4m3 wire: bitcast u8 -> u32, no escapes."""
+    *lead, n_chunks, k = chunks.shape
+    raw = jax.lax.bitcast_convert_type(
+        chunks.reshape(*lead, n_chunks, k // 4, 4), jnp.uint32)
+    return WirePayload(
+        words=raw,
+        flags=jnp.zeros((*lead, n_chunks), dtype=jnp.uint8),
+        pool=jnp.zeros((*lead, 1, k // 4), dtype=jnp.uint32),
+        pool_count=jnp.zeros((*lead, 1), dtype=jnp.int32),
+    )
+
+
+# --- escape-pool machinery (shared by wire assembly and both decode
+# --- paths; the slot/gather invariants live ONLY here) --------------------
+
+def _escape_slots(escape: jnp.ndarray, pool_slots: int):
+    """Per-chunk pool slot assignment from escape flags.
+
+    Returns ``(esc_idx, slot)``: running escape index, and the scatter
+    slot (``pool_slots`` — i.e. dropped — for non-escaped and
+    pool-overflowing chunks).
+    """
+    esc_i = escape.astype(jnp.int32)
+    esc_idx = jnp.cumsum(esc_i, axis=-1) - esc_i
+    slot = jnp.where(escape.astype(bool), esc_idx, pool_slots)
+    return esc_idx, slot
+
+
+def _scatter_pool_rows(rows: jnp.ndarray, slot: jnp.ndarray,
+                       pool_slots: int) -> jnp.ndarray:
+    """[..., n_chunks, W] rows -> [..., pool_slots, W] (drop slot==pool_slots)."""
+    *lead, n_chunks, w = rows.shape
+
+    def one(z, s_, v_):
+        return z.at[s_].set(v_, mode="drop")
+
+    zeros = jnp.zeros((*lead, pool_slots, w), rows.dtype)
+    if lead:
+        out = jax.vmap(one)(zeros.reshape(-1, pool_slots, w),
+                            slot.reshape(-1, n_chunks),
+                            rows.reshape(-1, n_chunks, w))
+        return out.reshape(*lead, pool_slots, w)
+    return one(zeros, slot, rows)
+
+
+def _gather_pool_rows(pool: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """[..., pool_slots, W] pool + [..., n_chunks] idx -> [..., n_chunks, W]."""
+    *lead, pool_slots, w = pool.shape
+    n_chunks = idx.shape[-1]
+
+    def one(pv, iv):
+        return jnp.take(pv, iv, axis=0)
+
+    if lead:
+        out = jax.vmap(one)(pool.reshape(-1, pool_slots, w),
+                            idx.reshape(-1, n_chunks))
+        return out.reshape(*lead, n_chunks, w)
+    return one(pool, idx)
+
+
+def _assemble_payload(chunks: jnp.ndarray, words: jnp.ndarray,
+                      nbits: jnp.ndarray, cfg: CommConfig) -> WirePayload:
+    """Build the escape-flag/pool wire format around encoded slots."""
+    *lead, n_chunks, k = chunks.shape
+    escape = nbits > jnp.uint32(cfg.capacity_words * 32)
+    pool_slots = cfg.pool_slots(n_chunks)
+
+    raw = jax.lax.bitcast_convert_type(
+        chunks.reshape(*lead, n_chunks, k // 4, 4), jnp.uint32)
+
+    # Escaped chunks scatter their raw form into the pool; non-escaped
+    # and pool-overflowing chunks are dropped.
+    _, slot = _escape_slots(escape, pool_slots)
+    pool = _scatter_pool_rows(raw, slot, pool_slots)
+
+    pool_count = jnp.sum(escape.astype(jnp.int32), axis=-1, keepdims=True)
+    return WirePayload(words=words, flags=escape.astype(jnp.uint8),
+                       pool=pool, pool_count=pool_count)
+
+
 def compress_codes(codes: jnp.ndarray, tables: CodecTables, cfg: CommConfig
                    ) -> WirePayload:
     """uint8 [..., M] (M % chunk_symbols == 0) -> WirePayload."""
@@ -109,44 +204,26 @@ def compress_codes(codes: jnp.ndarray, tables: CodecTables, cfg: CommConfig
     chunks = codes.reshape(*lead, n_chunks, k)
 
     if not cfg.enabled:
-        # Raw e4m3 wire: bitcast u8 -> u32, no escapes.
-        raw = jax.lax.bitcast_convert_type(
-            chunks.reshape(*lead, n_chunks, k // 4, 4), jnp.uint32)
-        return WirePayload(
-            words=raw,
-            flags=jnp.zeros((*lead, n_chunks), dtype=jnp.uint8),
-            pool=jnp.zeros((*lead, 1, k // 4), dtype=jnp.uint32),
-            pool_count=jnp.zeros((*lead, 1), dtype=jnp.int32),
-        )
+        return _raw_payload(chunks)
 
     words, nbits = _encode(chunks, tables, cfg)
-    escape = nbits > jnp.uint32(cfg.capacity_words * 32)
-    pool_slots = cfg.pool_slots(n_chunks)
+    return _assemble_payload(chunks, words, nbits, cfg)
 
-    raw = jax.lax.bitcast_convert_type(
-        chunks.reshape(*lead, n_chunks, k // 4, 4), jnp.uint32)
 
-    esc_idx = jnp.cumsum(escape.astype(jnp.int32), axis=-1) - escape
-    # Escaped chunks scatter their raw form into the pool; non-escaped
-    # and pool-overflowing chunks are dropped (index == pool_slots).
-    slot = jnp.where(escape, esc_idx, pool_slots)
+def _gather_pool_raw(payload: WirePayload, cfg: CommConfig) -> jnp.ndarray:
+    """Gather each chunk's escape-pool raw form -> u8 [..., n_chunks, K].
 
-    def scatter_rows(pool_z, slot_v, raw_v):
-        return pool_z.at[slot_v].set(raw_v, mode="drop")
-
-    pool_z = jnp.zeros((*lead, pool_slots, k // 4), dtype=jnp.uint32)
-    if lead:
-        flat_pool = pool_z.reshape(-1, pool_slots, k // 4)
-        flat_slot = slot.reshape(-1, n_chunks)
-        flat_raw = raw.reshape(-1, n_chunks, k // 4)
-        pool = jax.vmap(scatter_rows)(flat_pool, flat_slot, flat_raw)
-        pool = pool.reshape(*lead, pool_slots, k // 4)
-    else:
-        pool = scatter_rows(pool_z, slot, raw)
-
-    pool_count = jnp.sum(escape.astype(jnp.int32), axis=-1, keepdims=True)
-    return WirePayload(words=words, flags=escape.astype(jnp.uint8),
-                       pool=pool, pool_count=pool_count)
+    Rows whose chunk did not escape hold arbitrary pool data; callers
+    select with the escape flags.
+    """
+    k = cfg.chunk_symbols
+    *lead, n_chunks, _ = payload.words.shape
+    pool_slots = payload.pool.shape[-2]
+    esc_idx, _ = _escape_slots(payload.flags, pool_slots)
+    raw_words = _gather_pool_rows(
+        payload.pool, jnp.minimum(esc_idx, pool_slots - 1))
+    raw = jax.lax.bitcast_convert_type(raw_words, jnp.uint8)  # [...,K/4,4]
+    return raw.reshape(*lead, n_chunks, k)
 
 
 def decompress_codes(payload: WirePayload, tables: CodecTables,
@@ -164,24 +241,8 @@ def decompress_codes(payload: WirePayload, tables: CodecTables,
     dec = _decode(payload.words, tables, cfg)          # [..., n_chunks, K]
 
     escape = payload.flags.astype(bool)
-    esc_idx = (jnp.cumsum(payload.flags.astype(jnp.int32), axis=-1)
-               - payload.flags.astype(jnp.int32))
+    raw = _gather_pool_raw(payload, cfg)
     pool_slots = payload.pool.shape[-2]
-    gather_idx = jnp.minimum(esc_idx, pool_slots - 1)
-
-    def gather_rows(pool_v, idx_v):
-        return jnp.take(pool_v, idx_v, axis=0)          # [n_chunks, K/4]
-
-    if lead:
-        flat_pool = payload.pool.reshape(-1, pool_slots, k // 4)
-        flat_idx = gather_idx.reshape(-1, n_chunks)
-        raw_words = jax.vmap(gather_rows)(flat_pool, flat_idx)
-        raw_words = raw_words.reshape(*lead, n_chunks, k // 4)
-    else:
-        raw_words = gather_rows(payload.pool, gather_idx)
-
-    raw = jax.lax.bitcast_convert_type(raw_words, jnp.uint8)  # [...,K/4,4]
-    raw = raw.reshape(*lead, n_chunks, k)
 
     out = jnp.where(escape[..., None], raw, dec)
     ok = (payload.pool_count[..., 0] <= pool_slots)
@@ -200,6 +261,97 @@ def _quantize(x: jnp.ndarray, cfg: CommConfig):
 
 def _dequantize(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
     return e4m3.dequantize_block32(codes, scales.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Fused value <-> wire transforms (the collectives' local hot path)
+# --------------------------------------------------------------------------
+
+def compress_values(x: jnp.ndarray, tables: CodecTables, cfg: CommConfig
+                    ) -> Tuple[WirePayload, jnp.ndarray]:
+    """float [..., M] (M % chunk_symbols == 0) -> (WirePayload, scales).
+
+    With ``cfg.use_kernels`` the e4m3 quantization and QLC encode run as
+    ONE fused Pallas dispatch (the symbols are emitted once, for the
+    escape pool, instead of being written by quantize and re-read by
+    encode); otherwise the pure-JAX quantize -> encode pipeline runs.
+    Both paths are bit-exact identical: the fused kernel's quantizer is
+    tested bit-equal to ``e4m3.quantize_block32`` and its packer to
+    ``codec.encode_chunks``.
+    """
+    k = cfg.chunk_symbols
+    *lead, m = x.shape
+    assert m % k == 0, (m, k)
+    n_chunks = m // k
+
+    if cfg.enabled and cfg.use_kernels:
+        from repro.kernels import ops as kops
+        flat = x.reshape(-1, k).astype(jnp.float32)
+        # emit_codes: the escape pool stores raw symbols of overflowing
+        # chunks, so the wire assembly needs them once per chunk.
+        words, nbits, scales, chunk_codes = kops.quantize_encode(
+            flat, tables, cfg.capacity_words, emit_codes=True)
+        words = words.reshape(*lead, n_chunks, cfg.capacity_words)
+        nbits = nbits.reshape(*lead, n_chunks)
+        chunks = chunk_codes.reshape(*lead, n_chunks, k)
+        scales = scales.reshape(*lead, m // e4m3.BLOCK).astype(cfg.scale_dtype)
+        return _assemble_payload(chunks, words, nbits, cfg), scales
+
+    codes, scales = _quantize(x, cfg)
+    return compress_codes(codes, tables, cfg), scales
+
+
+def decompress_values(payload: WirePayload, scales: jnp.ndarray,
+                      tables: CodecTables, cfg: CommConfig
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(WirePayload, scales) -> (float32 values [..., M], ok bool[...]).
+
+    With ``cfg.use_kernels`` the QLC decode and e4m3 dequantize run as
+    one fused Pallas dispatch producing floats directly from packed
+    words; escaped chunks are dequantized from their raw pool form and
+    selected in, which is elementwise identical to merging at the code
+    level (dequantization is a per-symbol table gather times the block
+    scale either way).
+    """
+    k = cfg.chunk_symbols
+    *lead, n_chunks, _ = payload.words.shape
+
+    if cfg.enabled and cfg.use_kernels:
+        from repro.kernels import ops as kops
+        k32 = k // e4m3.BLOCK
+        flat_words = payload.words.reshape(-1, payload.words.shape[-1])
+        flat_scales = scales.astype(jnp.float32).reshape(-1, k32)
+        vals = kops.decode_dequantize(flat_words, flat_scales, tables, k)
+        vals = vals.reshape(*lead, n_chunks, k)
+
+        # Escape epilogue: dequantize ONLY the pool rows
+        # (O(pool_slots*K), not O(M)) — scatter each escaped chunk's
+        # scales to its slot, decode the raw pool bytes once, gather
+        # rows back per chunk. When the pool itself overflowed
+        # (ok=False, caller retries) the masked-in rows are
+        # unspecified, as in the code-level path.
+        pool_slots = payload.pool.shape[-2]
+        escape = payload.flags.astype(bool)
+        esc_idx, slot = _escape_slots(payload.flags, pool_slots)
+        chunk_scales = scales.astype(jnp.float32).reshape(
+            *lead, n_chunks, k32)
+        pool_scales = _scatter_pool_rows(chunk_scales, slot, pool_slots)
+
+        pool_u8 = jax.lax.bitcast_convert_type(payload.pool, jnp.uint8)
+        pool_vals = e4m3.dequantize_block32(
+            pool_u8.reshape(*lead, pool_slots * k),
+            pool_scales.reshape(*lead, pool_slots * k32),
+        ).reshape(*lead, pool_slots, k)
+
+        raw_vals = _gather_pool_rows(
+            pool_vals, jnp.minimum(esc_idx, pool_slots - 1))
+
+        out = jnp.where(escape[..., None], raw_vals, vals)
+        ok = (payload.pool_count[..., 0] <= pool_slots)
+        return out.reshape(*lead, n_chunks * k), ok
+
+    codes, ok = decompress_codes(payload, tables, cfg)
+    return _dequantize(codes, scales), ok
 
 
 def pad_to_multiple(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:
@@ -223,16 +375,14 @@ def qlc_all_gather(x: jnp.ndarray, axis_name, tables: CodecTables,
     every peer's dequantized payload along axis 0 (flattened).
     """
     flat, n = pad_to_multiple(x, cfg.chunk_symbols)
-    codes, scales = _quantize(flat, cfg)
-    payload = compress_codes(codes, tables, cfg)
+    payload, scales = compress_values(flat, tables, cfg)
 
     g_payload = jax.tree.map(
         lambda a: jax.lax.all_gather(a, axis_name), payload)
     g_payload = WirePayload(*g_payload)
     g_scales = jax.lax.all_gather(scales, axis_name)
 
-    g_codes, ok = decompress_codes(g_payload, tables, cfg)   # [D, M], [D]
-    vals = _dequantize(g_codes, g_scales)                    # [D, M]
+    vals, ok = decompress_values(g_payload, g_scales, tables, cfg)  # [D, M]
     return vals[:, :n].reshape(-1), jnp.all(ok)
 
 
@@ -253,16 +403,14 @@ def qlc_reduce_scatter(x: jnp.ndarray, axis_name, axis_size: int,
     seg = flat.shape[0] // d
     xs = flat.reshape(d, seg)
 
-    codes, scales = _quantize(xs, cfg)          # [D, seg], [D, seg/32]
-    payload = compress_codes(codes, tables, cfg)
+    payload, scales = compress_values(xs, tables, cfg)  # scales [D, seg/32]
 
     a2a = lambda a: jax.lax.all_to_all(
         a, axis_name, split_axis=0, concat_axis=0, tiled=True)
     r_payload = WirePayload(*jax.tree.map(a2a, payload))
     r_scales = a2a(scales)
 
-    r_codes, ok = decompress_codes(r_payload, tables, cfg)   # [D, seg], [D]
-    vals = _dequantize(r_codes, r_scales)                    # [D, seg]
+    vals, ok = decompress_values(r_payload, r_scales, tables, cfg)  # [D, seg]
     return jnp.sum(vals, axis=0), jnp.all(ok)
 
 
@@ -289,17 +437,15 @@ def qlc_all_to_all(x: jnp.ndarray, axis_name, tables: CodecTables,
     if pad:
         row = jnp.pad(row, ((0, 0), (0, pad)))
 
-    codes, scales = _quantize(row, cfg)
-    payload = compress_codes(codes, tables, cfg)
+    payload, scales = compress_values(row, tables, cfg)
 
     a2a = lambda a: jax.lax.all_to_all(
         a, axis_name, split_axis=0, concat_axis=0, tiled=True)
     r_payload = WirePayload(*jax.tree.map(a2a, payload))
     r_scales = a2a(scales)
 
-    r_codes, ok = decompress_codes(r_payload, tables, cfg)
-    vals = _dequantize(r_codes, r_scales)[:, :n]
-    return vals.reshape(x.shape), jnp.all(ok)
+    vals, ok = decompress_values(r_payload, r_scales, tables, cfg)
+    return vals[:, :n].reshape(x.shape), jnp.all(ok)
 
 
 # --------------------------------------------------------------------------

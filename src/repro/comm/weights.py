@@ -19,7 +19,6 @@ absurd).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Dict, Tuple
 
 import jax
@@ -46,9 +45,20 @@ class LeafMeta:
 
 @dataclasses.dataclass
 class GroupWireCodec:
-    """Static recipe + tables to open wired group params in-graph."""
+    """Static recipe + tables to open wired group params in-graph.
+
+    Works on a whole wired tree (leaves keep their leading group dim)
+    or on a single group's slice inside the layer scan (group dim
+    already indexed away) — leading dims are preserved either way.
+
+    ``use_kernels=True`` opens QLC leaves with the fused
+    decode→dequantize Pallas kernel (``repro.kernels.ops``): one
+    dispatch from packed words to float values, decoded symbols never
+    touch HBM. Numerics are bit-identical to the pure-JAX path.
+    """
     meta: Dict[str, LeafMeta]
     tables: CodecTables
+    use_kernels: bool = False
 
     def open_group(self, pg):
         def walk(node, prefix):
@@ -73,16 +83,40 @@ class GroupWireCodec:
                     for k, v in wire.items()}
         except Exception:
             pass
-        if m.mode == "e4m3":
-            codes_flat = wire["codes"].reshape(-1)
-        else:
-            codes_flat = codec.decode_chunks(
-                wire["words"], self.tables, CHUNK).reshape(-1)
+        # Wire leaves are [*lead_g, n_chunks, …] — lead_g is the group
+        # dim for a whole wired tree, or () inside the per-layer scan
+        # where the group dim was indexed away. Every group decodes;
+        # lead dims are preserved in the output.
         padded = m.n_chunks * CHUNK
-        vals = e4m3.dequantize_block32(
-            codes_flat[:padded],
-            wire["scales"].reshape(-1).astype(jnp.float32))
-        return vals[:m.n_symbols].reshape(m.group_shape).astype(m.dtype)
+        main = wire["codes"] if m.mode == "e4m3" else wire["words"]
+        lead = main.shape[:-2]
+        g = int(np.prod(lead, initial=1))
+        scales = wire["scales"].reshape(lead + (-1,))[..., :padded // e4m3.BLOCK]
+        if m.mode == "qlc" and self.use_kernels:
+            from repro.kernels import ops as kops
+            # Emit the leaf's dtype straight from the kernel when it is
+            # a float type the store supports (bf16 weights: no second
+            # pass over the tensor).
+            out_dt = (jnp.dtype(m.dtype)
+                      if jnp.dtype(m.dtype) in (jnp.dtype(jnp.bfloat16),
+                                                jnp.dtype(jnp.float32))
+                      else jnp.float32)
+            vals = kops.decode_dequantize(
+                main.reshape(g * m.n_chunks, m.capacity_words),
+                scales.astype(jnp.float32).reshape(
+                    g * m.n_chunks, CHUNK // e4m3.BLOCK),
+                self.tables, CHUNK,
+                out_dtype=out_dt).reshape(lead + (padded,))
+        else:
+            if m.mode == "e4m3":
+                codes_flat = main.reshape(lead + (padded,))
+            else:
+                codes_flat = codec.decode_chunks(
+                    main, self.tables, CHUNK).reshape(lead + (padded,))
+            vals = e4m3.dequantize_block32(
+                codes_flat, scales.astype(jnp.float32))
+        out = vals[..., :m.n_symbols].reshape(lead + m.group_shape)
+        return out.astype(m.dtype)
 
 
 def _eligible(leaf_shape) -> bool:
@@ -100,7 +134,8 @@ def _geometry(leaf_shape, mode: str, capacity_words: int):
     return g, n, padded, n_chunks
 
 
-def compress_groups(groups, tables: CodecTables, mode: str = "qlc"
+def compress_groups(groups, tables: CodecTables, mode: str = "qlc",
+                    use_kernels: bool = False
                     ) -> Tuple[Any, GroupWireCodec]:
     """Real-parameter transform (serving launcher path)."""
     meta: Dict[str, LeafMeta] = {}
@@ -133,7 +168,8 @@ def compress_groups(groups, tables: CodecTables, mode: str = "qlc"
                 "scales": scales}
 
     wired = walk(groups, "")
-    return wired, GroupWireCodec(meta=meta, tables=tables)
+    return wired, GroupWireCodec(meta=meta, tables=tables,
+                                 use_kernels=use_kernels)
 
 
 def wire_shape_structs(group_shapes, tables: CodecTables,

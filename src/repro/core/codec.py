@@ -75,7 +75,6 @@ def encode_chunks(symbols: jnp.ndarray, tables: CodecTables,
         (valid even when it exceeds the slot).
     """
     enc_code, enc_len, _, _, _ = _tables_to_jnp(tables)
-    k = symbols.shape[-1]
 
     sym = symbols.astype(jnp.int32)
     codes = jnp.take(enc_code, sym, axis=0)          # [..., n_chunks, K] u32

@@ -11,7 +11,7 @@ motifs so models have actual structure to learn in the examples.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,12 @@
-"""Pallas TPU kernels for the QLC hot spots (decode, encode, histogram).
+"""Pallas TPU kernels for the QLC hot spots.
 
-Each kernel ships with a pure-jnp oracle in ref.py; ops.py exposes the
-padded/jit'd public API and dispatches interpret mode off-TPU.
+Single-stage kernels (decode, encode, histogram) plus the fused
+quantize->encode / decode->dequantize pipeline (qlc_fused.py) that
+keeps per-chunk symbols in VMEM. Each kernel ships with a pure-jnp
+oracle in ref.py; ops.py exposes the padded/jit'd public API and
+dispatches interpret mode off-TPU.
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, qlc_fused, ref  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    auto_tile_chunks, decode, decode_dequantize, encode, histogram,
+    quantize_encode)

@@ -1,20 +1,33 @@
 """jit'd public wrappers around the Pallas kernels.
 
-Handles padding to tile multiples, table marshaling, and backend
-dispatch: on TPU the compiled kernels run natively; elsewhere they run
-in interpret mode (bit-exact semantics, Python-speed execution) so the
-whole framework is runnable and testable on CPU.
+Handles padding to tile multiples, table marshaling, tile-size
+autotuning, and backend dispatch: on TPU the compiled kernels run
+natively; elsewhere they run in interpret mode (bit-exact semantics)
+so the whole framework is runnable and testable on CPU.
+
+Entry points
+------------
+  encode / decode / histogram      — single-stage kernels.
+  quantize_encode                  — fused float -> (words, nbits,
+                                     scales[, codes][, hist]); the
+                                     e4m3 quantization happens inside
+                                     the kernel, symbols stay in VMEM.
+  decode_dequantize                — fused words+scales -> float.
+
+The fused pair is what the compressed collectives
+(``repro.comm.compressed``), the weight wire (``repro.comm.weights``)
+and the serving/checkpoint layers call on their hot paths.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lut import CodecTables
-from repro.kernels import qlc_decode, qlc_encode, histogram256 as _hist
+from repro.kernels import qlc_decode, qlc_encode, qlc_fused
+from repro.kernels import histogram256 as _hist
+from repro.quant import e4m3
 
 
 def _on_tpu() -> bool:
@@ -25,6 +38,44 @@ def _interpret_default() -> bool:
     return not _on_tpu()
 
 
+# --------------------------------------------------------------------------
+# Tile autotuning
+# --------------------------------------------------------------------------
+
+# tile_chunks per chunk-size bucket, from a VMEM working-set model
+# (~20 B/symbol of per-chunk intermediates; target ≈512 KiB per program
+# to leave headroom for double buffering). Measured interpret-mode and
+# v5e numbers agree that more, smaller chunks per tile wins for short
+# chunks while K=4096 must drop to 2 to stay under budget.
+_TILE_CHUNKS_TABLE = {
+    64: 32,
+    128: 32,
+    256: 16,
+    512: 16,
+    1024: 8,
+    2048: 4,
+    4096: 2,
+}
+_DEFAULT_TILE_CHUNKS = 8
+
+
+def auto_tile_chunks(chunk_symbols: int, n_chunks: int | None = None) -> int:
+    """Pick tile_chunks for a given chunk size (and optional row count).
+
+    Looks up the nearest power-of-two bucket in the tuning table and
+    caps the tile at the (padded) row count so tiny inputs don't pad
+    8x. Callers can always override explicitly.
+    """
+    bucket = 1 << max(6, int(np.ceil(np.log2(max(chunk_symbols, 1)))))
+    tile = _TILE_CHUNKS_TABLE.get(
+        bucket,
+        max(1, _TILE_CHUNKS_TABLE[1024] * 1024 // bucket))
+    if n_chunks is not None and n_chunks > 0:
+        cap = 1 << int(np.ceil(np.log2(n_chunks)))
+        tile = min(tile, cap)
+    return max(tile, 1)
+
+
 def _pad_rows(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
     n = x.shape[0]
     pad = (-n) % multiple
@@ -33,13 +84,19 @@ def _pad_rows(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
     return x
 
 
+# --------------------------------------------------------------------------
+# Single-stage kernels
+# --------------------------------------------------------------------------
+
 def decode(words: jnp.ndarray, tables: CodecTables, chunk_symbols: int,
-           *, tile_chunks: int = 8, interpret: bool | None = None
+           *, tile_chunks: int | None = None, interpret: bool | None = None
            ) -> jnp.ndarray:
     """Decode [n_chunks, CW] u32 -> [n_chunks, K] u8 via the Pallas kernel."""
     if interpret is None:
         interpret = _interpret_default()
     n_chunks = words.shape[0]
+    if tile_chunks is None:
+        tile_chunks = auto_tile_chunks(chunk_symbols, n_chunks)
     padded = _pad_rows(words, tile_chunks)
     out = qlc_decode.decode_pallas(
         padded,
@@ -55,11 +112,13 @@ def decode(words: jnp.ndarray, tables: CodecTables, chunk_symbols: int,
 
 
 def encode(symbols: jnp.ndarray, tables: CodecTables, capacity_words: int,
-           *, tile_chunks: int = 8, interpret: bool | None = None):
+           *, tile_chunks: int | None = None, interpret: bool | None = None):
     """Encode [n_chunks, K] u8 -> ([n_chunks, CW] u32, [n_chunks] u32)."""
     if interpret is None:
         interpret = _interpret_default()
-    n_chunks = symbols.shape[0]
+    n_chunks, k = symbols.shape
+    if tile_chunks is None:
+        tile_chunks = auto_tile_chunks(k, n_chunks)
     padded = _pad_rows(symbols, tile_chunks)
     words, nbits = qlc_encode.encode_pallas(
         padded,
@@ -86,3 +145,93 @@ def histogram(symbols: jnp.ndarray, *, tile_rows: int = 8,
     counts = _hist.histogram256_pallas(
         mat, tile_rows=tile_rows, interpret=interpret)
     return counts.at[0].add(-pad)
+
+
+# --------------------------------------------------------------------------
+# Fused pipeline
+# --------------------------------------------------------------------------
+
+def quantize_encode(x: jnp.ndarray, tables: CodecTables,
+                    capacity_words: int, *, tile_chunks: int | None = None,
+                    emit_codes: bool = False, emit_hist: bool = False,
+                    interpret: bool | None = None):
+    """Fused e4m3-quantize + QLC-encode of float chunks.
+
+    Args:
+      x: float [n_chunks, K] (f32/bf16; K divisible by 32).
+      tables: codec tables.
+      capacity_words: slot size per chunk in 32-bit words.
+      emit_codes: also return the raw e4m3 symbols (escape-pool callers).
+      emit_hist: also return the 256-bin symbol histogram.
+
+    Returns:
+      (words u32 [n, CW], nbits u32 [n], scales f32 [n, K/32]
+       [, codes u8 [n, K]] [, hist i32 [256]]).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n_chunks, k = x.shape
+    if tile_chunks is None:
+        tile_chunks = auto_tile_chunks(k, n_chunks)
+    padded = _pad_rows(x, tile_chunks)
+    n_pad_rows = padded.shape[0] - n_chunks
+    outs = qlc_fused.fused_encode_pallas(
+        padded,
+        jnp.asarray(tables.enc_code, dtype=jnp.uint32),
+        jnp.asarray(tables.enc_len, dtype=jnp.uint32),
+        capacity_words=capacity_words,
+        tile_chunks=tile_chunks,
+        emit_codes=emit_codes,
+        emit_hist=emit_hist,
+        interpret=interpret,
+    )
+    words, nbits, scales = outs[:3]
+    result = [words[:n_chunks], nbits[:n_chunks, 0], scales[:n_chunks]]
+    idx = 3
+    if emit_codes:
+        result.append(outs[idx][:n_chunks])
+        idx += 1
+    if emit_hist:
+        # Padded rows are all-zero chunks => quantize to symbol 0.
+        result.append(outs[idx].at[0].add(-n_pad_rows * k))
+    return tuple(result)
+
+
+def decode_dequantize(words: jnp.ndarray, scales: jnp.ndarray,
+                      tables: CodecTables, chunk_symbols: int,
+                      *, tile_chunks: int | None = None,
+                      out_dtype=jnp.float32,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Fused QLC-decode + e4m3-dequantize.
+
+    Args:
+      words: u32 [n_chunks, CW] packed slots.
+      scales: f32 [n_chunks, K/32] block-32 scales (chunk-major).
+      tables: codec tables.
+      chunk_symbols: K.
+      out_dtype: output float dtype (f32 default; bf16 casts in-kernel).
+
+    Returns:
+      [n_chunks, K] dequantized values, bit-exact against ``decode``
+      followed by ``e4m3.dequantize_block32`` (plus the output cast).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n_chunks = words.shape[0]
+    if tile_chunks is None:
+        tile_chunks = auto_tile_chunks(chunk_symbols, n_chunks)
+    padded_w = _pad_rows(words, tile_chunks)
+    padded_s = _pad_rows(scales.astype(jnp.float32), tile_chunks)
+    out = qlc_fused.fused_decode_pallas(
+        padded_w, padded_s,
+        jnp.asarray(tables.dec_lut, dtype=jnp.int32),
+        jnp.asarray(tables.area_symbol_bits, dtype=jnp.int32),
+        jnp.asarray(tables.area_starts, dtype=jnp.int32),
+        jnp.asarray(e4m3.decode_table(), dtype=jnp.float32),
+        chunk_symbols=chunk_symbols,
+        prefix_bits=tables.prefix_bits,
+        tile_chunks=tile_chunks,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[:n_chunks]

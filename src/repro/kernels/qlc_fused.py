@@ -1,0 +1,312 @@
+"""Fused Pallas TPU kernels: quantize→encode and decode→dequantize.
+
+Design
+------
+The unfused pipeline runs four dispatches with HBM round-trips between
+them::
+
+    f32 --quantize--> u8 codes --(HBM)--> encode --> words
+                               `--(HBM)--> histogram
+
+The fused encode kernel performs block-32 e4m3 quantization AND the QLC
+bit-pack in one ``pallas_call``: the uint8 symbol tile never leaves
+VMEM. Per tile of ``TILE_CHUNKS`` chunks it
+
+  1. computes block-32 amax scales (``scale = amax / 480``, the paper's
+     §3 block scaling) and quantizes ``x / scale`` to eXmY e4m3 with a
+     branch-free bit-trick encoder (exponent extraction + one
+     round-to-nearest-even per element — bit-exact against the
+     table-search oracle in ``repro.quant.e4m3``, which tests enforce);
+  2. gathers (code, len) from the 256-entry encoder LUT, takes an
+     exclusive prefix sum of lengths, and scatter-adds each ≤11-bit
+     code into at most two consecutive 32-bit words of the chunk slot;
+  3. optionally accumulates the 256-bin symbol histogram as a side
+     output (revolving output block; used for on-line recalibration) and
+     optionally emits the raw symbols (needed only when the caller
+     maintains an escape pool, e.g. the compressed collectives).
+
+The mirror decode kernel reads packed words, walks the chunk with the
+paper's O(1) per-symbol step (3-bit area code → length, no tree walk),
+and multiplies each decoded symbol's table value by its block scale
+in-register, producing float output directly — decoded symbols also
+never touch HBM.
+
+VMEM per program (TILE_CHUNKS=8, K=1024, CW=384):
+  x f32 32 KiB, words 12 KiB, codes+lens+offsets 3*32 KiB, scales
+  1 KiB, LUTs ~4 KiB  ≈ 145 KiB — far under the ~16 MiB/core budget.
+
+``ops.quantize_encode`` / ``ops.decode_dequantize`` are the public
+entry points (padding, table marshaling, tile autotuning, CPU interpret
+fallback).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant.e4m3 import BLOCK, E4M3_MAX_FINITE
+
+DEFAULT_TILE_CHUNKS = 8
+
+
+# --------------------------------------------------------------------------
+# In-kernel e4m3 quantization (bit-exact vs repro.quant.e4m3.e4m3_encode)
+# --------------------------------------------------------------------------
+
+def _e4m3_bits_encode(x: jnp.ndarray) -> jnp.ndarray:
+    """float32 -> int32 e4m3 code, round-to-nearest-even, saturating.
+
+    Branch-free equivalent of the oracle's 128-entry grid search: the
+    float32 exponent field gives the e4m3 binade, one RTE rounding of
+    ``mag / step`` gives the mantissa index (ties land on even codes
+    because adjacent grid indices alternate parity, matching the
+    oracle's tie-break). All-finite eXmY variant: NaN and overflow
+    saturate to ±480; signed zero keeps its sign bit.
+    """
+    mag = jnp.abs(x)
+    mag = jnp.where(jnp.isnan(mag), E4M3_MAX_FINITE, mag)
+    mag = jnp.minimum(mag, E4M3_MAX_FINITE)
+    bits = jax.lax.bitcast_convert_type(mag, jnp.uint32)
+    e = (bits >> 23).astype(jnp.int32) - 127          # floor(log2(mag))
+    e = jnp.maximum(e, -6)                            # subnormal binade
+    step = jax.lax.bitcast_convert_type(
+        ((e - 3 + 127) << 23).astype(jnp.uint32), jnp.float32)  # 2^(e-3)
+    k = jnp.round(mag / step).astype(jnp.int32)       # RTE, k in [0, 16]
+    carry = k == 16                                   # mantissa overflow
+    e = jnp.where(carry, e + 1, e)
+    k = jnp.where(carry, 8, k)
+    code = jnp.where((e == -6) & (k < 8),             # subnormal codes 0..7
+                     k, ((e + 7) << 3) | (k - 8))
+    return jnp.where(jnp.signbit(x), code | 0x80, code)
+
+
+def _quantize_tile(x: jnp.ndarray):
+    """(TC, K) f32 -> (symbols i32 (TC, K), scales f32 (TC, K/BLOCK)).
+
+    Identical arithmetic to ``e4m3.quantize_block32`` (amax over blocks
+    of 32, ``scale = amax/480`` or 1 for zero blocks, one f32 divide),
+    so the fused path is bit-exact against the unfused oracle.
+    """
+    tc, k = x.shape
+    xb = x.reshape(tc, k // BLOCK, BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    # Same explicit reciprocal multiply as quantize_block32 (see the
+    # comment there) — required for bit-exact fused/unfused parity.
+    inv = np.float32(1.0) / np.float32(E4M3_MAX_FINITE)
+    scale = jnp.where(amax > 0, amax * inv, 1.0)
+    xs = (xb / scale).reshape(tc, k)
+    return _e4m3_bits_encode(xs), scale[..., 0]
+
+
+# --------------------------------------------------------------------------
+# Fused quantize -> encode
+# --------------------------------------------------------------------------
+
+def _pack_codes(sym, enc_code, enc_len, capacity_words):
+    """QLC bit-pack of a (TC, K) symbol tile (same math as qlc_encode)."""
+    tc, k = sym.shape
+    codes = jnp.take(enc_code, sym)                 # (TC, K) u32
+    lens = jnp.take(enc_len, sym)                   # (TC, K) u32
+
+    nbits = jnp.sum(lens, axis=1, dtype=jnp.uint32)
+    offsets = jnp.cumsum(lens, axis=1, dtype=jnp.uint32) - lens
+
+    word_idx = (offsets >> 5).astype(jnp.int32)
+    shift = offsets & jnp.uint32(31)
+    lo = codes << shift                             # u32 shift wraps
+    hi = jnp.where(shift == 0, jnp.uint32(0),
+                   codes >> (jnp.uint32(32) - shift))
+
+    word_idx = jnp.minimum(word_idx, capacity_words - 1)
+    hi_idx = jnp.minimum(word_idx + 1, capacity_words - 1)
+
+    words = jnp.zeros((tc, capacity_words), dtype=jnp.uint32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tc, k), 0)
+    words = words.at[rows, word_idx].add(lo, mode="drop")
+    words = words.at[rows, hi_idx].add(hi, mode="drop")
+    return words, nbits
+
+
+def _fused_encode_kernel(x_ref, enc_code_ref, enc_len_ref, *out_refs,
+                         capacity_words: int, emit_codes: bool,
+                         emit_hist: bool):
+    words_ref, nbits_ref, scales_ref = out_refs[:3]
+    rest = list(out_refs[3:])
+    codes_ref = rest.pop(0) if emit_codes else None
+    hist_ref = rest.pop(0) if emit_hist else None
+
+    x = x_ref[...].astype(jnp.float32)
+    sym, scale = _quantize_tile(x)
+    scales_ref[...] = scale
+    if emit_codes:
+        codes_ref[...] = sym.astype(jnp.uint8)
+    if emit_hist:
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            hist_ref[...] = jnp.zeros_like(hist_ref)
+        bins = jax.lax.broadcasted_iota(jnp.int32, (256,), 0)
+        onehot = (sym.reshape(-1)[:, None] == bins[None, :])
+        hist_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+    words, nbits = _pack_codes(sym, enc_code_ref[...], enc_len_ref[...],
+                               capacity_words)
+    words_ref[...] = words
+    nbits_ref[...] = nbits[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("capacity_words", "tile_chunks", "emit_codes",
+                     "emit_hist", "interpret"))
+def fused_encode_pallas(x: jnp.ndarray, enc_code: jnp.ndarray,
+                        enc_len: jnp.ndarray, *, capacity_words: int,
+                        tile_chunks: int = DEFAULT_TILE_CHUNKS,
+                        emit_codes: bool = False, emit_hist: bool = False,
+                        interpret: bool = True):
+    """Quantize+encode [n_chunks, K] float -> packed QLC slots.
+
+    Returns ``(words [n, CW] u32, nbits [n, 1] u32, scales [n, K/32]
+    f32, *extras)`` where extras are ``codes [n, K] u8`` (if
+    ``emit_codes``) then ``hist [256] i32`` (if ``emit_hist``).
+    """
+    n_chunks, k = x.shape
+    assert n_chunks % tile_chunks == 0, (n_chunks, tile_chunks)
+    assert k % BLOCK == 0, k
+    grid = (n_chunks // tile_chunks,)
+
+    kernel = functools.partial(
+        _fused_encode_kernel, capacity_words=capacity_words,
+        emit_codes=emit_codes, emit_hist=emit_hist)
+
+    out_specs = [
+        pl.BlockSpec((tile_chunks, capacity_words), lambda i: (i, 0)),
+        pl.BlockSpec((tile_chunks, 1), lambda i: (i, 0)),
+        pl.BlockSpec((tile_chunks, k // BLOCK), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((n_chunks, capacity_words), jnp.uint32),
+        jax.ShapeDtypeStruct((n_chunks, 1), jnp.uint32),
+        jax.ShapeDtypeStruct((n_chunks, k // BLOCK), jnp.float32),
+    ]
+    if emit_codes:
+        out_specs.append(pl.BlockSpec((tile_chunks, k), lambda i: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((n_chunks, k), jnp.uint8))
+    if emit_hist:
+        # Every grid step maps to the same block => accumulate in place.
+        out_specs.append(pl.BlockSpec((256,), lambda i: (0,)))
+        out_shape.append(jax.ShapeDtypeStruct((256,), jnp.int32))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_chunks, k), lambda i: (i, 0)),
+            pl.BlockSpec((enc_code.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((enc_len.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, enc_code, enc_len)
+
+
+# --------------------------------------------------------------------------
+# Fused decode -> dequantize
+# --------------------------------------------------------------------------
+
+def _fused_decode_kernel(words_ref, scales_ref, dec_lut_ref, area_sb_ref,
+                         area_starts_ref, value_tab_ref, out_ref, sym_ref,
+                         *, chunk_symbols: int, prefix_bits: int,
+                         out_dtype):
+    words = words_ref[...]                       # (TC, CW) uint32
+    tc, cw = words.shape
+    dec = dec_lut_ref[...].astype(jnp.uint32)    # (256,)
+    sb_t = area_sb_ref[...].astype(jnp.uint32)   # (2**prefix,)
+    st_t = area_starts_ref[...].astype(jnp.uint32)
+    vtab = value_tab_ref[...]                    # (256,) f32 e4m3 values
+    pmask = jnp.uint32((1 << prefix_bits) - 1)
+    pbits = jnp.uint32(prefix_bits)
+
+    # The sequential loop carries only the bit cursor; symbols land in
+    # a VMEM scratch via per-column stores (the same idiom as the
+    # standalone decode kernel — cheaper than threading a (TC, K)
+    # array through the loop carry). The dequantize (value-table
+    # gather * block scale) then runs ONCE, fully vectorized, and the
+    # float tile is written in one store.
+    def body(i, bitpos):
+        widx = (bitpos >> 5).astype(jnp.int32)               # (TC,)
+        shift = bitpos & jnp.uint32(31)
+        w0 = jnp.take_along_axis(words, widx[:, None], axis=1)[:, 0]
+        w1 = jnp.take_along_axis(
+            words, jnp.minimum(widx + 1, cw - 1)[:, None], axis=1)[:, 0]
+        window = (w0 >> shift) | jnp.where(
+            shift == 0, jnp.uint32(0), w1 << (jnp.uint32(32) - shift))
+        area = (window & pmask).astype(jnp.int32)
+        sb = jnp.take(sb_t, area)
+        payload = (window >> pbits) & ((jnp.uint32(1) << sb) - jnp.uint32(1))
+        rank = jnp.take(st_t, area) + payload
+        sym = jnp.take(dec, jnp.minimum(rank, jnp.uint32(255)).astype(jnp.int32))
+        sym_ref[:, pl.dslice(i, 1)] = sym.astype(jnp.int32)[:, None]
+        return bitpos + pbits + sb
+
+    bitpos0 = jnp.zeros((tc,), dtype=jnp.uint32)
+    jax.lax.fori_loop(0, chunk_symbols, body, bitpos0)
+
+    vals = jnp.take(vtab, sym_ref[...])          # (TC, K) f32
+    vb = vals.reshape(tc, chunk_symbols // BLOCK, BLOCK)
+    vb = vb * scales_ref[...][..., None]
+    out_ref[...] = vb.reshape(tc, chunk_symbols).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk_symbols", "prefix_bits", "tile_chunks",
+                     "out_dtype", "interpret"))
+def fused_decode_pallas(words: jnp.ndarray, scales: jnp.ndarray,
+                        dec_lut: jnp.ndarray, area_sb: jnp.ndarray,
+                        area_starts: jnp.ndarray, value_tab: jnp.ndarray,
+                        *, chunk_symbols: int, prefix_bits: int = 3,
+                        tile_chunks: int = DEFAULT_TILE_CHUNKS,
+                        out_dtype=jnp.float32,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Decode+dequantize [n_chunks, CW] u32 slots -> [n_chunks, K] float.
+
+    ``scales`` is [n_chunks, K/32] f32 (block-32 scales, chunk-major).
+    ``out_dtype`` (f32 default, bf16 for weight-wire consumers) is cast
+    in-register before the store — same rounding as an external cast.
+    n_chunks must be a multiple of tile_chunks (ops.py pads).
+    """
+    n_chunks, cw = words.shape
+    assert n_chunks % tile_chunks == 0, (n_chunks, tile_chunks)
+    assert chunk_symbols % BLOCK == 0, chunk_symbols
+    grid = (n_chunks // tile_chunks,)
+
+    kernel = functools.partial(
+        _fused_decode_kernel, chunk_symbols=chunk_symbols,
+        prefix_bits=prefix_bits, out_dtype=out_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_chunks, cw), lambda i: (i, 0)),
+            pl.BlockSpec((tile_chunks, chunk_symbols // BLOCK),
+                         lambda i: (i, 0)),
+            pl.BlockSpec((dec_lut.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((area_sb.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((area_starts.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((value_tab.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_chunks, chunk_symbols),
+                               lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, chunk_symbols),
+                                       out_dtype),
+        scratch_shapes=[pltpu.VMEM((tile_chunks, chunk_symbols),
+                                   jnp.int32)],
+        interpret=interpret,
+    )(words, scales, dec_lut, area_sb, area_starts, value_tab)

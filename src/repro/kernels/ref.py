@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.core import codec
 from repro.core.lut import CodecTables
+from repro.quant import e4m3
 
 
 def decode_ref(words: jnp.ndarray, tables: CodecTables,
@@ -29,3 +30,23 @@ def histogram256_ref(symbols: jnp.ndarray) -> jnp.ndarray:
     flat = symbols.reshape(-1).astype(jnp.int32)
     onehot = (flat[:, None] == jnp.arange(256, dtype=jnp.int32)[None, :])
     return jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+def quantize_encode_ref(x: jnp.ndarray, tables: CodecTables,
+                        capacity_words: int):
+    """Unfused oracle for the fused quantize->encode kernel.
+
+    float [n_chunks, K] -> (words u32 [n, CW], nbits u32 [n],
+    scales f32 [n, K/32], codes u8 [n, K]).
+    """
+    codes, scales = e4m3.quantize_block32(x.astype(jnp.float32))
+    words, nbits = codec.encode_chunks(codes, tables, capacity_words)
+    return words, nbits, scales, codes
+
+
+def decode_dequantize_ref(words: jnp.ndarray, scales: jnp.ndarray,
+                          tables: CodecTables, chunk_symbols: int
+                          ) -> jnp.ndarray:
+    """Unfused oracle for the fused decode->dequantize kernel."""
+    sym = codec.decode_chunks(words, tables, chunk_symbols)
+    return e4m3.dequantize_block32(sym, scales.astype(jnp.float32))

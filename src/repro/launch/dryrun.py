@@ -84,7 +84,6 @@ def _batch_sds(cfg: ModelConfig, shape: ShapeConfig, mesh):
         prefix_len=cfg.frontend_prefix_len, d_model=cfg.d_model,
         dtype=jnp.dtype(cfg.dtype))
     rules = shd.get_rules()
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
     def mk(leaf):
         spec = rules.spec(("batch",) + (None,) * (len(leaf.shape) - 1),
@@ -207,7 +206,6 @@ def build_lowering(cfg: ModelConfig, shape: ShapeConfig, mesh,
         return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=ns)
 
     states_sds = _tree_mk(states_shapes, kinds_specs, mk_state)
-    rep = NamedSharding(mesh, P())
     dp_spec = rules_.spec(("batch", None), shape=(b, 1))
     tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32,
                                    sharding=NamedSharding(mesh, dp_spec))

@@ -18,7 +18,6 @@ import logging
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.comm import CommConfig, calibrate_for_gradients
 from repro.configs import get_config, reduced as make_reduced

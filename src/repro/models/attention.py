@@ -9,7 +9,6 @@ a q-block/kv-block scan bound, halving causal attention FLOPs.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

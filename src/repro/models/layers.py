@@ -1,8 +1,6 @@
 """Shared model layers: norms, rotary embeddings, MLPs, embeddings."""
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

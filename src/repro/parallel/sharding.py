@@ -89,8 +89,10 @@ class ShardingRules:
         dims = list(shape) if shape is not None else [None] * len(
             logical_axes)
         # Axes that are Manual in the current trace (inside shard_map)
-        # cannot appear in sharding constraints — treat them as taken.
+        # or explicitly blocked (inside a spmd_axis_name'd vmap) cannot
+        # appear in sharding constraints — treat them as taken.
         used: set = set(_manual_axes())
+        used.update(getattr(_STATE, "blocked", frozenset()))
         parts = [self._resolve(name, d, mesh, param, used)
                  for name, d in zip(logical_axes, dims)]
         return P(*parts)
@@ -109,6 +111,23 @@ def get_rules() -> ShardingRules:
 
 
 @contextlib.contextmanager
+def block_axes(axes):
+    """Trace-time guard: keep ``axes`` out of emitted sharding specs.
+
+    Needed around function bodies traced under ``jax.vmap(...,
+    spmd_axis_name=axes)`` on older jax, where the vmapped axes are
+    invisible to both the abstract mesh and the named-axis env but are
+    still illegal in with_sharding_constraint specs.
+    """
+    old = getattr(_STATE, "blocked", frozenset())
+    _STATE.blocked = frozenset(old) | frozenset(axes)
+    try:
+        yield
+    finally:
+        _STATE.blocked = old
+
+
+@contextlib.contextmanager
 def use_mesh(mesh: Mesh):
     """Enter a mesh context (framework-tracked + jax ``with mesh:``)."""
     old = getattr(_STATE, "mesh", None)
@@ -120,11 +139,22 @@ def use_mesh(mesh: Mesh):
         _STATE.mesh = old
 
 
+def _abstract_mesh():
+    """jax.sharding.get_abstract_mesh, absent on older jax (<0.5)."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    try:
+        return fn()
+    except Exception:
+        return None
+
+
 def _current_mesh() -> Optional[Mesh]:
     m = getattr(_STATE, "mesh", None)
     if m is not None:
         return m
-    am = jax.sharding.get_abstract_mesh()
+    am = _abstract_mesh()
     if am is not None and am.axis_names:
         return am
     return None
@@ -132,9 +162,18 @@ def _current_mesh() -> Optional[Mesh]:
 
 def _manual_axes() -> frozenset:
     """Mesh axes currently under manual (shard_map) control."""
-    am = jax.sharding.get_abstract_mesh()
+    am = _abstract_mesh()
     if am is None or not am.axis_names:
-        return frozenset()
+        # Older jax (<0.5) has no abstract mesh; fall back to the named
+        # axis env. It cannot distinguish manual from auto axes, so be
+        # conservative and treat every in-scope named axis as manual —
+        # constraints lose at most a GSPMD layout hint, never
+        # correctness.
+        try:
+            from jax._src import core as _jcore
+            return frozenset(_jcore.get_axis_env().axis_sizes)
+        except Exception:
+            return frozenset()
     try:
         return frozenset(
             n for n, t in zip(am.axis_names, am.axis_types)

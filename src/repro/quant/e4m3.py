@@ -91,7 +91,12 @@ def quantize_block32(x: jnp.ndarray, block: int = BLOCK,
         raise ValueError(f"last axis {n} not divisible by block {block}")
     xb = x.reshape(*lead, n // block, block).astype(jnp.float32)
     amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
-    scale = jnp.where(amax > 0, amax / max_val, 1.0)
+    # Explicit f32 reciprocal multiply (not amax / max_val): XLA rewrites
+    # constant division to reciprocal multiplication under jit but not in
+    # eager dispatch; pinning the multiply keeps this bit-identical in
+    # both AND against the fused Pallas kernel (qlc_fused).
+    inv = np.float32(1.0) / np.float32(max_val)
+    scale = jnp.where(amax > 0, amax * inv, 1.0)
     codes = e4m3_encode(xb / scale)
     return codes.reshape(*lead, n), scale[..., 0]
 

@@ -19,11 +19,9 @@ the wire-traffic proxy; convention noted in EXPERIMENTS.md).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, Optional
 
-import numpy as np
 
 from repro.roofline import hw
 

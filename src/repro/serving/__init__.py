@@ -1,1 +1,3 @@
-from repro.serving.engine import ServeConfig, generate, prefill  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ServeConfig, compress_params_for_serving, generate, generate_from_wire,
+    open_params, prefill)

@@ -4,19 +4,24 @@
 collecting KV/SSM states (token-by-token scan for recurrent blocks,
 bulk write for attention); ``generate`` then decodes greedily. The
 decode step is the function the decode_* dry-run cells lower.
+
+Compressed-weight serving: ``compress_params_for_serving`` stores the
+parameter stack as block-32 e4m3 + QLC words (``repro.comm.weights``)
+and ``open_params`` / ``generate_from_wire`` decode them in-graph via
+the fused decode→dequantize Pallas kernel — the production path where
+FSDP weight gathers move QLC words instead of bf16 and the codec runs
+right after the gather.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_decode_states
-from repro.models.transformer import apply_stack
-from repro.models import layers
 
 
 @dataclasses.dataclass
@@ -74,3 +79,39 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray,
         body, (first, states),
         jnp.arange(serve_cfg.max_new_tokens - 1, dtype=jnp.int32))
     return jnp.concatenate([first, toks.T], axis=1)
+
+
+# --------------------------------------------------------------------------
+# Compressed-weight serving (QLC wire, fused kernel decode)
+# --------------------------------------------------------------------------
+
+def compress_params_for_serving(params, tables, mode: str = "qlc",
+                                use_kernels: bool = True):
+    """Wire a parameter tree for compressed serving.
+
+    Large (≥64Ki-element-per-group) 2D+ leaves become block-32 e4m3
+    symbols packed into QLC slots with exactly-measured capacity (zero
+    escapes); everything else stays dense. Returns ``(wired_params,
+    wire_codec)``; open with :func:`open_params`.
+    """
+    from repro.comm.weights import compress_groups
+    return compress_groups(params, tables, mode=mode,
+                           use_kernels=use_kernels)
+
+
+def open_params(wired_params, wire_codec):
+    """Decode a QLC-wired parameter tree back to dense arrays in-graph.
+
+    With ``wire_codec.use_kernels`` each leaf is opened by the fused
+    decode→dequantize Pallas kernel (one dispatch, symbols stay in
+    VMEM); numerics are identical to the pure-JAX open either way.
+    """
+    return wire_codec.open_group(wired_params)
+
+
+def generate_from_wire(wired_params, wire_codec, cfg: ModelConfig,
+                       prompts: jnp.ndarray, serve_cfg: ServeConfig,
+                       rng: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Greedy generation directly from QLC-compressed parameters."""
+    params = open_params(wired_params, wire_codec)
+    return generate(params, cfg, prompts, serve_cfg, rng)

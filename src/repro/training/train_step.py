@@ -29,7 +29,7 @@ via the baseline FSDP path (see DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,28 @@ from repro.core.lut import CodecTables
 from repro.models import init_params, next_token_loss, param_specs
 from repro.parallel import sharding as shd
 from repro.training import optimizer as opt
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes=None):
+    """shard_map across jax versions (no replication checking).
+
+    New jax exposes ``jax.shard_map(axis_names=..., check_vma=...)``;
+    older releases have ``jax.experimental.shard_map.shard_map`` with
+    the complementary ``auto=`` set and ``check_rep=``. Replication
+    checking must stay off either way: the compressed collectives can
+    run Pallas kernels, which have no replication rule.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": False}
+        if manual_axes is not None:
+            kw["axis_names"] = set(manual_axes)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {"check_rep": False}
+    if manual_axes is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,17 +248,37 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
         model_cfg, mesh, train_cfg, comm_cfg)
 
     # ---- stage 1: per-dp-shard gradients (model axis under GSPMD) -------
-    def grad_body(params, batch):
-        loss, grads = _microbatched_grads(
-            loss_fn, params, batch, train_cfg.microbatches)
-        return loss[None], jax.tree.map(lambda g: g[None], grads)
+    if hasattr(jax, "shard_map"):
+        # New jax: dp axes manual, model axis auto.
+        def grad_body(params, batch):
+            loss, grads = _microbatched_grads(
+                loss_fn, params, batch, train_cfg.microbatches)
+            return loss[None], jax.tree.map(lambda g: g[None], grads)
 
-    stage1 = jax.shard_map(
-        grad_body, mesh=mesh,
-        in_specs=(jax.tree.map(lambda s: P(), p_specs,
-                               is_leaf=lambda s: isinstance(s, P)), b_spec),
-        out_specs=(P(dp_axes), g_specs_s1),
-        axis_names=set(dp_axes), check_vma=False)
+        stage1 = _shard_map(
+            grad_body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda s: P(), p_specs,
+                                   is_leaf=lambda s: isinstance(s, P)),
+                      b_spec),
+            out_specs=(P(dp_axes), g_specs_s1),
+            manual_axes=dp_axes)
+    else:
+        # Older jax: partially-auto shard_map trips the XLA SPMD
+        # partitioner; the equivalent classic formulation is a
+        # spmd_axis_name'd vmap over the dp-stacked batch under plain
+        # GSPMD — same per-shard gradients, stacked on the leading dim.
+        def stage1(params, batch):
+            split = jax.tree.map(
+                lambda x: x.reshape(
+                    (dp_total, x.shape[0] // dp_total) + x.shape[1:]),
+                batch)
+
+            def per_shard(mb):
+                with shd.block_axes(dp_axes):
+                    return _microbatched_grads(
+                        loss_fn, params, mb, train_cfg.microbatches)
+
+            return jax.vmap(per_shard, spmd_axis_name=dp_axes)(split)
 
     # ---- stage 2: hierarchical compressed RS + ZeRO-1 Adam + AG ---------
     def sync_body(params, grads_stacked, flat_opt):
@@ -288,11 +330,10 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
         "step": P(),
     }
 
-    stage2 = jax.shard_map(
+    stage2 = _shard_map(
         sync_body, mesh=mesh,
         in_specs=(p_specs, g_specs, opt_state_spec),
-        out_specs=(p_specs, opt_state_spec, P(), P(), P()),
-        check_vma=False)
+        out_specs=(p_specs, opt_state_spec, P(), P(), P()))
 
     def train_step(params, flat_opt_state, batch):
         loss_per_dp, grads_stacked = stage1(params, batch)

@@ -70,6 +70,64 @@ class TestCheckpointManager:
         with pytest.raises(ValueError):
             cm.restore({"a": jnp.zeros(4)})
 
+    def test_qlc_leaf_roundtrip_and_shrink(self, tmp_path):
+        """Byte-width leaves are QLC-compressed on disk, losslessly."""
+        from repro.core import distributions
+        cm = CheckpointManager(str(tmp_path))
+        codes = distributions.ffn1_symbols(1 << 15, seed=3).reshape(128, 256)
+        st = {"codes": jnp.asarray(codes, jnp.uint8),
+              "w": jnp.asarray(np.ones((8, 8)), jnp.float32)}
+        cm.save(1, st)
+        cdir = os.path.join(str(tmp_path), "step_0000000001")
+        manifest = json.load(open(os.path.join(cdir, "manifest.json")))
+        meta = manifest["leaves"]["codes"]
+        assert "qlc" in meta                      # stored compressed
+        assert "qlc" not in manifest["leaves"]["w"]  # floats stay raw
+        stored = os.path.getsize(os.path.join(cdir, meta["file"]))
+        assert stored < codes.size                # strictly smaller
+        restored, _ = cm.restore(st)
+        np.testing.assert_array_equal(
+            np.asarray(restored["codes"]), codes)
+
+    def test_qlc_incompressible_leaf_stays_raw(self, tmp_path, rng):
+        """Uniform random bytes can't compress — must fall back to raw."""
+        cm = CheckpointManager(str(tmp_path))
+        hard = rng.integers(0, 256, 1 << 14, dtype=np.uint8)
+        cm.save(1, {"hard": jnp.asarray(hard)})
+        cdir = os.path.join(str(tmp_path), "step_0000000001")
+        manifest = json.load(open(os.path.join(cdir, "manifest.json")))
+        assert "qlc" not in manifest["leaves"]["hard"]
+        restored, _ = cm.restore({"hard": jnp.asarray(hard)})
+        np.testing.assert_array_equal(np.asarray(restored["hard"]), hard)
+
+    def test_qlc_corruption_detected(self, tmp_path):
+        """Flipping a stored QLC word must fail the original-bytes
+        checksum on restore."""
+        from repro.core import distributions
+        cm = CheckpointManager(str(tmp_path))
+        codes = distributions.ffn1_symbols(1 << 13, seed=5)
+        st = {"codes": jnp.asarray(codes, jnp.uint8)}
+        cm.save(1, st)
+        cdir = os.path.join(str(tmp_path), "step_0000000001")
+        manifest = json.load(open(os.path.join(cdir, "manifest.json")))
+        meta = manifest["leaves"]["codes"]
+        assert "qlc" in meta
+        path = os.path.join(cdir, meta["file"])
+        arr = np.load(path)
+        arr.reshape(-1)[0] ^= np.uint32(0xFFFF)
+        np.save(path, arr)
+        with pytest.raises(IOError):
+            cm.restore(st)
+
+    def test_qlc_opt_out(self, tmp_path):
+        from repro.core import distributions
+        cm = CheckpointManager(str(tmp_path), qlc_codes=False)
+        codes = distributions.ffn1_symbols(1 << 13, seed=5)
+        cm.save(1, {"codes": jnp.asarray(codes, jnp.uint8)})
+        cdir = os.path.join(str(tmp_path), "step_0000000001")
+        manifest = json.load(open(os.path.join(cdir, "manifest.json")))
+        assert "qlc" not in manifest["leaves"]["codes"]
+
     def test_no_partial_checkpoint_on_crash(self, tmp_path):
         """A failed save must not disturb the previous checkpoint."""
         cm = CheckpointManager(str(tmp_path))

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import TABLE1, build_tables, distributions
-from repro.comm import (CommConfig, CommPlan, compress_codes,
+from repro.comm import (CommConfig, compress_codes,
                         decompress_codes, plan_for_tables, wire_bytes)
 from tests.md_util import run_md
 
@@ -99,6 +99,7 @@ counts = distributions.ffn1_counts(1 << 16)
 tables = build_tables(counts, TABLE1)
 plan = plan_for_tables(tables, counts, chunk_symbols=256)
 cfg = CommConfig.from_plan(plan)
+cfg_kern = CommConfig.from_plan(plan, use_kernels=True)
 cfg_raw = CommConfig(enabled=False, chunk_symbols=256)
 
 rng = np.random.default_rng(0)
@@ -167,6 +168,33 @@ ref = X.sum(axis=0)
 denom = np.maximum(np.abs(ref), 1e-3)
 assert np.median(np.abs(full[:4096] - ref) / denom) < 0.10
 print("reduce_scatter OK")
+""")
+
+    def test_kernel_path_matches_pure_jax_exactly(self):
+        """use_kernels=True (fused Pallas pipeline inside shard_map)
+        must be bit-identical to the pure-JAX path for every
+        collective. pallas_call has no shard_map replication rule, so
+        the kernel variant needs check_rep=False."""
+        run_md(MD_PRELUDE + """
+def mk(c, fn):
+    def f(x):
+        out, ok = fn(x[0], c)
+        return out[None], ok[None]
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=P("d", None),
+                             out_specs=(P("d", None), P("d")),
+                             check_rep=False))
+
+for name, fn in [
+    ("all_gather", lambda x, c: qlc_all_gather(x, "d", tables, c)),
+    ("reduce_scatter",
+     lambda x, c: qlc_reduce_scatter(x, "d", 8, tables, c)),
+    ("psum", lambda x, c: qlc_psum(x, "d", 8, tables, c)),
+]:
+    o1, ok1 = mk(cfg, fn)(X)
+    o2, ok2 = mk(cfg_kern, fn)(X)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert np.asarray(ok1).all() and np.asarray(ok2).all()
+    print(name, "kernel==pure OK")
 """)
 
     def test_all_to_all_lossless(self):

@@ -1,5 +1,4 @@
 """Data pipeline determinism/host-sharding + optimizer unit tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Launch-layer smoke: lower+compile train/prefill/decode cells for
 reduced archs on a small (2,2,2) mesh — in-subprocess miniatures of the
 production dry-run (the full 512-device sweep lives in results/)."""
-import pytest
 
 from tests.md_util import run_md
 

@@ -1,0 +1,260 @@
+"""Fused-pipeline validation (deterministic, no hypothesis needed).
+
+The fused Pallas kernels must be BIT-exact against the composed
+oracles: quantize_encode ≡ e4m3.quantize_block32 + codec.encode_chunks
+and decode_dequantize ≡ codec.decode_chunks + e4m3.dequantize_block32
+— including escape/overflow chunks, where the slot contents and the
+exact nbits must still agree so the wire format is identical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TABLE1, TABLE2, build_tables, codec, distributions
+from repro.comm import (CommConfig, compress_values, decompress_values)
+from repro.comm.weights import compress_groups
+from repro.kernels import ops, ref
+from repro.quant import e4m3
+from repro.serving import open_params
+
+
+def _tables(scheme, seed=0):
+    return build_tables(distributions.ffn1_counts(1 << 14, seed=seed), scheme)
+
+
+def _rare_symbol_values(tables, n):
+    """Float array whose blocks quantize to mostly-rare (11-bit) symbols.
+
+    Each block-32 carries one 480.0 anchor (pinning the scale to ~1) and
+    31 copies of the e4m3 value of the longest-code symbol, so encoded
+    chunks overflow tight slots deterministically.
+    """
+    rare = int(np.argmax(tables.enc_len))
+    v = float(e4m3.decode_table()[rare])
+    x = np.full(n, v, dtype=np.float32)
+    x[::32] = 480.0
+    return x
+
+
+CHUNK_SWEEP = [64, 256, 1024]
+NCHUNK_SWEEP = [1, 7, 8, 33]
+
+
+class TestFusedQuantizeEncode:
+    @pytest.mark.parametrize("chunk", CHUNK_SWEEP)
+    @pytest.mark.parametrize("scheme", [TABLE1, TABLE2], ids=["t1", "t2"])
+    def test_matches_oracle(self, chunk, scheme, rng):
+        tables = _tables(scheme)
+        x = jnp.asarray(
+            rng.standard_normal((16, chunk)).astype(np.float32) * 3)
+        cap = codec.worst_case_words(chunk, tables.max_code_length)
+        w, nb, sc, cd = ops.quantize_encode(x, tables, cap, emit_codes=True)
+        wr, nbr, scr, cdr = ref.quantize_encode_ref(x, tables, cap)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(wr))
+        np.testing.assert_array_equal(np.asarray(nb), np.asarray(nbr))
+        np.testing.assert_array_equal(np.asarray(sc), np.asarray(scr))
+        np.testing.assert_array_equal(np.asarray(cd), np.asarray(cdr))
+
+    @pytest.mark.parametrize("n_chunks", NCHUNK_SWEEP)
+    def test_nonmultiple_tile_padding(self, n_chunks, rng):
+        tables = _tables(TABLE1)
+        x = jnp.asarray(
+            rng.standard_normal((n_chunks, 128)).astype(np.float32))
+        cap = codec.worst_case_words(128, tables.max_code_length)
+        w, nb, sc = ops.quantize_encode(x, tables, cap)
+        wr, nbr, scr, _ = ref.quantize_encode_ref(x, tables, cap)
+        assert w.shape == (n_chunks, cap)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(wr))
+        np.testing.assert_array_equal(np.asarray(nb), np.asarray(nbr))
+        np.testing.assert_array_equal(np.asarray(sc), np.asarray(scr))
+
+    def test_histogram_side_output(self, rng):
+        tables = _tables(TABLE1)
+        x = jnp.asarray(rng.standard_normal((10, 256)).astype(np.float32))
+        cap = codec.worst_case_words(256, tables.max_code_length)
+        _, _, _, cd, hist = ops.quantize_encode(
+            x, tables, cap, emit_codes=True, emit_hist=True)
+        want = np.bincount(np.asarray(cd).reshape(-1), minlength=256)
+        np.testing.assert_array_equal(np.asarray(hist), want)
+        assert int(np.asarray(hist).sum()) == 10 * 256  # padding removed
+
+    def test_escape_overflow_chunks_bit_exact(self):
+        """Overflowing chunks: slot contents AND nbits match the oracle."""
+        tables = _tables(TABLE1)
+        x = jnp.asarray(_rare_symbol_values(tables, 8 * 256).reshape(8, 256))
+        tight_cap = 60                      # << needed for 11-bit symbols
+        w, nb, sc = ops.quantize_encode(x, tables, tight_cap)
+        wr, nbr, scr, _ = ref.quantize_encode_ref(x, tables, tight_cap)
+        assert (np.asarray(nb) > tight_cap * 32).all()   # truly overflowing
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(wr))
+        np.testing.assert_array_equal(np.asarray(nb), np.asarray(nbr))
+        np.testing.assert_array_equal(np.asarray(sc), np.asarray(scr))
+
+    def test_bf16_input(self, rng):
+        tables = _tables(TABLE1)
+        xb = jnp.asarray(
+            rng.standard_normal((4, 256)).astype(np.float32)
+        ).astype(jnp.bfloat16)
+        cap = codec.worst_case_words(256, tables.max_code_length)
+        w, nb, sc = ops.quantize_encode(xb, tables, cap)
+        wr, nbr, scr, _ = ref.quantize_encode_ref(
+            xb.astype(jnp.float32), tables, cap)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(wr))
+        np.testing.assert_array_equal(np.asarray(sc), np.asarray(scr))
+
+
+class TestFusedDecodeDequantize:
+    @pytest.mark.parametrize("chunk", CHUNK_SWEEP)
+    @pytest.mark.parametrize("scheme", [TABLE1, TABLE2], ids=["t1", "t2"])
+    def test_matches_oracle(self, chunk, scheme, rng):
+        tables = _tables(scheme)
+        x = jnp.asarray(
+            rng.standard_normal((16, chunk)).astype(np.float32) * 2)
+        cap = codec.worst_case_words(chunk, tables.max_code_length)
+        w, _, sc = ops.quantize_encode(x, tables, cap)
+        got = ops.decode_dequantize(w, sc, tables, chunk)
+        want = ref.decode_dequantize_ref(w, sc, tables, chunk)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_roundtrip_equals_quant_dequant(self, rng):
+        """Fused encode->decode == plain quantize->dequantize (lossless)."""
+        tables = _tables(TABLE1)
+        x = jnp.asarray(rng.standard_normal((12, 512)).astype(np.float32))
+        cap = codec.worst_case_words(512, tables.max_code_length)
+        w, _, sc = ops.quantize_encode(x, tables, cap)
+        got = ops.decode_dequantize(w, sc, tables, 512)
+        codes, scales = e4m3.quantize_block32(x)
+        want = e4m3.dequantize_block32(codes, scales)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_tile_chunks_variants(self, rng):
+        tables = _tables(TABLE1)
+        x = jnp.asarray(rng.standard_normal((12, 256)).astype(np.float32))
+        cap = codec.worst_case_words(256, tables.max_code_length)
+        w, _, sc = ops.quantize_encode(x, tables, cap)
+        want = ref.decode_dequantize_ref(w, sc, tables, 256)
+        for tc in (1, 2, 4):
+            got = ops.decode_dequantize(w, sc, tables, 256, tile_chunks=tc)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_bf16_output_dtype(self, rng):
+        """In-kernel bf16 cast == external f32->bf16 cast."""
+        tables = _tables(TABLE1)
+        x = jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))
+        cap = codec.worst_case_words(256, tables.max_code_length)
+        w, _, sc = ops.quantize_encode(x, tables, cap)
+        got = ops.decode_dequantize(w, sc, tables, 256,
+                                    out_dtype=jnp.bfloat16)
+        assert got.dtype == jnp.bfloat16
+        want = ref.decode_dequantize_ref(w, sc, tables, 256).astype(
+            jnp.bfloat16)
+        np.testing.assert_array_equal(
+            np.asarray(got).view(np.uint16), np.asarray(want).view(np.uint16))
+
+
+class TestAutoTileChunks:
+    def test_table_buckets(self):
+        assert ops.auto_tile_chunks(64) == 32
+        assert ops.auto_tile_chunks(1024) == 8
+        assert ops.auto_tile_chunks(4096) == 2
+
+    def test_capped_by_row_count(self):
+        assert ops.auto_tile_chunks(64, n_chunks=1) == 1
+        assert ops.auto_tile_chunks(64, n_chunks=3) == 4
+        assert ops.auto_tile_chunks(1024, n_chunks=1000) == 8
+
+    def test_unknown_bucket_falls_back_to_vmem_model(self):
+        assert ops.auto_tile_chunks(1 << 15) >= 1
+
+
+class TestCompressedValuesParity:
+    """compress_values/decompress_values: kernels on == kernels off."""
+
+    @pytest.mark.parametrize("cw,pool", [(240, 8), (60, 1024)],
+                             ids=["planned", "tight"])
+    def test_wire_and_values_identical(self, cw, pool, rng):
+        tables = _tables(TABLE1)
+        x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+        cfgs = [CommConfig(chunk_symbols=256, capacity_words=cw,
+                           pool_slots_per_1k=pool, use_kernels=uk)
+                for uk in (False, True)]
+        (pa, sa), (pb, sb) = (compress_values(x, tables, c) for c in cfgs)
+        for fa, fb in zip(pa, pb):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+        np.testing.assert_array_equal(
+            np.asarray(sa).view(np.uint16), np.asarray(sb).view(np.uint16))
+        va, oka = decompress_values(pa, sa, tables, cfgs[0])
+        vb, okb = decompress_values(pb, sb, tables, cfgs[1])
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+        assert bool(oka) == bool(okb)
+
+    def test_escaped_chunks_identical(self):
+        tables = _tables(TABLE1)
+        x = jnp.asarray(_rare_symbol_values(tables, 4096))
+        cfgs = [CommConfig(chunk_symbols=256, capacity_words=60,
+                           pool_slots_per_1k=1024, use_kernels=uk)
+                for uk in (False, True)]
+        (pa, sa), (pb, sb) = (compress_values(x, tables, c) for c in cfgs)
+        assert int(np.asarray(pa.pool_count).sum()) > 0   # escapes exercised
+        va, oka = decompress_values(pa, sa, tables, cfgs[0])
+        vb, okb = decompress_values(pb, sb, tables, cfgs[1])
+        assert bool(oka) and bool(okb)
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+    def test_disabled_ignores_kernels_flag(self, rng):
+        tables = _tables(TABLE1)
+        x = jnp.asarray(rng.standard_normal(1024).astype(np.float32))
+        cfg = CommConfig(enabled=False, chunk_symbols=256, use_kernels=True)
+        p, s = compress_values(x, tables, cfg)
+        v, ok = decompress_values(p, s, tables, cfg)
+        assert bool(ok)
+        codes, scales = e4m3.quantize_block32(x)
+        want = e4m3.dequantize_block32(
+            codes, scales.astype(jnp.bfloat16).astype(jnp.float32))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(want))
+
+
+class TestServingWire:
+    def test_open_params_fused_equals_plain(self, rng):
+        tables = _tables(TABLE1)
+        params = {
+            "blk": {"w1": jnp.asarray(
+                        rng.standard_normal((1, 256, 256)), jnp.float32),
+                    "norm": jnp.asarray(rng.standard_normal(64),
+                                        jnp.float32)},
+        }
+        wired, codec_plain = compress_groups(params, tables,
+                                             use_kernels=False)
+        _, codec_fused = compress_groups(params, tables, use_kernels=True)
+        assert codec_fused.use_kernels
+        p1 = jax.tree.leaves(open_params(wired, codec_plain))
+        p2 = jax.tree.leaves(open_params(wired, codec_fused))
+        for a, b in zip(p1, p2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_open_params_roundtrips_quantized_values(self, rng):
+        tables = _tables(TABLE1)
+        w = jnp.asarray(rng.standard_normal((1, 256, 256)), jnp.float32)
+        wired, wc = compress_groups({"w": w}, tables, use_kernels=True)
+        opened = open_params(wired, wc)["w"]
+        codes, scales = e4m3.quantize_block32(w.reshape(1, -1))
+        want = e4m3.dequantize_block32(
+            codes, scales.astype(jnp.bfloat16).astype(jnp.float32)
+        ).reshape(w.shape)
+        np.testing.assert_array_equal(np.asarray(opened), np.asarray(want))
+
+    def test_open_params_multi_group(self, rng):
+        """Stacked (g>1) leaves must decode EVERY group, not group 0."""
+        tables = _tables(TABLE1)
+        w = jnp.asarray(rng.standard_normal((3, 256, 256)), jnp.float32)
+        for uk in (False, True):
+            wired, wc = compress_groups({"w": w}, tables, use_kernels=uk)
+            opened = open_params(wired, wc)["w"]
+            assert opened.shape == w.shape
+            codes, scales = e4m3.quantize_block32(w.reshape(3, -1))
+            want = e4m3.dequantize_block32(
+                codes, scales.astype(jnp.bfloat16).astype(jnp.float32)
+            ).reshape(w.shape)
+            np.testing.assert_array_equal(np.asarray(opened),
+                                          np.asarray(want))

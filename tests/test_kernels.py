@@ -3,11 +3,10 @@ against the ref.py pure-jnp oracles (interpret=True on CPU)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import TABLE1, TABLE2, build_tables, codec, distributions
 from repro.core.scheme_search import optimal_scheme
-from repro.core import entropy
 from repro.kernels import ops, ref
 
 

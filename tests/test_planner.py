@@ -2,12 +2,11 @@
 import numpy as np
 import pytest
 
-from repro.comm.planner import (CommPlan, effective_compression_ratio,
+from repro.comm.planner import (effective_compression_ratio,
                                 hoeffding_margin_bits, plan_for_tables)
 from repro.comm.calibrate import calibrate_for_tensor
 from repro.core import TABLE1, build_tables, distributions
 
-import jax.numpy as jnp
 
 
 @pytest.fixture(scope="module")

@@ -1,7 +1,6 @@
 """Roofline analysis: loop-aware HLO walker + term math."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import analysis, hlo_walk, hw
@@ -67,7 +66,6 @@ class TestWalkerFlops:
 
 class TestCollectiveParse:
     def test_collective_in_scan_multiplied(self):
-        import os
         txt = """
 HloModule test
 

@@ -5,10 +5,7 @@ gradient RS/AG + ZeRO-1) must track the baseline GSPMD step — same loss
 trajectory within quantization error — and loss must decrease. Also:
 checkpoint save/restore resume bit-exactness and elastic resharding.
 """
-import os
 
-import numpy as np
-import pytest
 
 from tests.md_util import run_md
 
