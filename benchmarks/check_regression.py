@@ -8,8 +8,12 @@ Usage:
 Fails (exit 1) when
   * any row in the current run is an ``*_ERROR`` row,
   * a baseline row is missing from the current run (a benchmark was
-    silently dropped), or
-  * a row's ``us_per_call`` exceeds ``threshold`` x its baseline.
+    silently dropped),
+  * a row's ``us_per_call`` exceeds ``threshold`` x its baseline, or
+  * a quality metric in ``METRIC_GATES`` violates its absolute bound
+    (these are correctness-adjacent ratios, not timings — e.g. the
+    per-tensor-type registry wire must never be bigger than the global
+    LUT wire; see benchmarks/multi_lut.py).
 
 The threshold is deliberately generous (default 10x): CI machines are
 noisy and interpret-mode kernel timings vary a lot; the gate exists to
@@ -23,6 +27,38 @@ import argparse
 import json
 import shutil
 import sys
+
+
+# row name -> {metric: (op, bound)}; machine-independent quality gates
+# checked against the CURRENT run (timings stay under the x-factor rule).
+METRIC_GATES = {
+    "multi_lut_container_wire": {
+        # per-tensor-type LUTs must never cost more wire than the
+        # global LUT (1.005 absorbs per-section container headers)
+        "per_type_vs_global_wire_ratio": ("<=", 1.005),
+        # and the paper's multi-LUT setup needs >= 2 distinct schemes
+        "distinct_schemes": (">=", 2),
+    },
+}
+
+_OPS = {"<=": lambda a, b: a <= b, ">=": lambda a, b: a >= b}
+
+
+def check_metric_gates(current):
+    failures = []
+    for row_name, gates in METRIC_GATES.items():
+        row = current.get(row_name)
+        if row is None:
+            continue            # missing-row failure is reported elsewhere
+        for metric, (op, bound) in gates.items():
+            val = row.get(metric)
+            if val is None:
+                failures.append(f"metric gate: {row_name} lacks {metric}")
+            elif not _OPS[op](val, bound):
+                failures.append(
+                    f"metric gate: {row_name}.{metric} = {val} "
+                    f"violates {op} {bound}")
+    return failures
 
 
 def _rows_by_name(payload):
@@ -47,6 +83,7 @@ def main(argv=None) -> int:
         if name.endswith("_ERROR"):
             failures.append(f"ERROR row: {name}: "
                             f"{current[name].get('error', '')}")
+    failures.extend(check_metric_gates(current))
 
     if args.update:
         if failures:

@@ -2,12 +2,19 @@
 each tensor type ... can be obtained apriori").
 
 Mixes three tensor-type streams (FFN1-act-like, FFN2-act-like,
-grad-like) and compares the average bits/symbol of (a) one global LUT
-calibrated on the mixture vs (b) one LUT per type — quantifying what
-the paper's multi-LUT deployment buys. Also reports the chunk-escape
-effect: per-type calibration shrinks per-chunk variance, so the static
-wire slot tightens (the planner effect measured in
-tests/test_train_integration's heterogeneous-gradient case).
+grad-like) and reports two rows:
+
+* ``multi_lut_vs_global`` — the offline bits/symbol comparison of one
+  global LUT calibrated on the mixture vs one LUT per type.
+
+* ``multi_lut_container_wire`` — the same comparison through the REAL
+  entry points: per-type registry entries, planner-sized wire slots,
+  self-describing containers (``repro.comm.container``), and ONE
+  multi-LUT batched decode through the Pallas kernel path
+  (``repro.kernels.ops.decode`` with per-group LUT operands). Reports
+  actual wire bytes/symbol for both configurations, the per-type /
+  global wire ratio (the gated metric: per-type must never lose), and
+  the batched decode time.
 """
 from __future__ import annotations
 
@@ -17,15 +24,19 @@ import numpy as np
 
 from repro.core import adapt, distributions
 from repro.core.lut import build_tables
+from repro.core.registry import CodecRegistry
 
 
-def run(n: int = 1 << 19):
-    t0 = time.perf_counter()
-    streams = {
+def _streams(n: int):
+    return {
         "ffn1_act": distributions.ffn1_symbols(n, seed=11),
         "ffn2_act": distributions.ffn2_symbols(n, seed=12),
         "grad": distributions.grad_symbols(n, seed=13),
     }
+
+
+def _offline_row(streams) -> dict:
+    t0 = time.perf_counter()
     mixture = np.concatenate(list(streams.values()))
 
     # (a) one global LUT on the mixture
@@ -46,11 +57,66 @@ def run(n: int = 1 << 19):
     multi_bits = float(np.mean(list(per_type_bits.values())))
 
     dt = (time.perf_counter() - t0) * 1e6
-    return [{
+    return {
         "name": "multi_lut_vs_global",
         "us_per_call": dt,
         "global_lut_bits": round(global_bits, 4),
         "per_type_lut_bits": round(multi_bits, 4),
         "gain_pct_of_byte": round(100 * (global_bits - multi_bits) / 8, 3),
         **{f"{k}_bits": round(v, 4) for k, v in per_type_bits.items()},
-    }]
+    }
+
+
+def _container_row(streams) -> dict:
+    """Global vs per-type registry through containers + kernel decode."""
+    import jax
+    from repro.comm import container as qc
+
+    n_total = sum(s.size for s in streams.values())
+    reg = CodecRegistry()
+    for name, syms in streams.items():
+        reg.register(name, np.bincount(syms, minlength=256),
+                     chunk_symbols=1024)
+    mixture = np.concatenate(list(streams.values()))
+    reg.register("global", np.bincount(mixture, minlength=256),
+                 chunk_symbols=1024)
+
+    per_type = [qc.encode_codes(s, reg[name])
+                for name, s in streams.items()]
+    global_ = [qc.encode_codes(s, reg["global"])
+               for s in streams.values()]
+    per_type_bytes = sum(qc.container_bytes(b) for b in per_type)
+    global_bytes = sum(qc.container_bytes(b) for b in global_)
+    stream = qc.pack_stream(per_type)
+
+    # ONE multi-LUT batched kernel decode of the mixed-scheme stream
+    def decode():
+        outs = qc.decode_codes_stream(stream, reg, use_kernels=True)
+        return jax.block_until_ready(outs[-1][0])
+
+    decode()                                   # compile / warm caches
+    t0 = time.perf_counter()
+    outs = qc.decode_codes_stream(stream, reg, use_kernels=True)
+    jax.block_until_ready([o for o, _ in outs])
+    dt = (time.perf_counter() - t0) * 1e6
+
+    for (name, syms), (got, ok) in zip(streams.items(), outs):
+        assert bool(ok), name
+        np.testing.assert_array_equal(np.asarray(got), syms)
+
+    return {
+        "name": "multi_lut_container_wire",
+        "us_per_call": dt,
+        "global_wire_bytes_per_sym": round(global_bytes / n_total, 4),
+        "per_type_wire_bytes_per_sym": round(per_type_bytes / n_total, 4),
+        "per_type_vs_global_wire_ratio": round(
+            per_type_bytes / global_bytes, 4),
+        "decode_symbols_per_s": int(n_total / (dt / 1e6)),
+        "distinct_schemes": len(
+            {reg[n_].scheme_id for n_ in streams}),
+    }
+
+
+def run(n: int = 1 << 19):
+    streams = _streams(n)
+    return [_offline_row(streams), _container_row(streams)]

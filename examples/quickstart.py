@@ -1,5 +1,6 @@
-"""Quickstart: calibrate QLC tables on an e4m3 tensor, compress a
-payload losslessly, and inspect the compression stats.
+"""Quickstart: build a per-tensor-type codec registry, compress payloads
+into self-describing QLC containers, and decode them back bit-exactly
+with nothing but the container bytes + the registry.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,48 +8,69 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import CommConfig, compress_codes, decompress_codes, wire_bytes
-from repro.comm.calibrate import calibrate_for_tensor
-from repro.core import codec, entropy
+from repro.comm import container as qc
+from repro.core import CodecRegistry, codec, entropy
 from repro.quant import e4m3
 
 
 def main():
-    # 1) Some activation-like data (pretend this came out of FFN1).
-    key = jax.random.PRNGKey(0)
-    acts = jax.random.normal(key, (1 << 20,), jnp.float32)
+    # 1) Two tensor types with different statistics (pretend these came
+    #    out of FFN1 and FFN2 of a real model).
+    key1, key2 = jax.random.split(jax.random.PRNGKey(0))
+    acts = jax.random.normal(key1, (1 << 20,))
+    gated = jax.random.normal(key2, (1 << 20,))
+    gated = gated * (gated > 0)          # zero spike, Table-2 territory
 
-    # 2) Calibrate: histogram of block-32 e4m3 symbols -> scheme + LUTs
-    #    + static wire plan (paper §7: one LUT per tensor type, apriori).
-    tables, plan = calibrate_for_tensor(acts, chunk_symbols=1024)
-    print("scheme:", tables.scheme.areas)
-    print(f"expected bits/symbol: {plan.expected_bits_per_symbol:.3f}  "
-          f"slot capacity: {plan.capacity_words * 32 / 1024:.3f} bits/sym")
+    # 2) Calibrate ONE registry entry per tensor type (paper §7: one
+    #    LUT per tensor type, apriori). Each entry = scheme + LUTs +
+    #    static wire plan under a stable integer scheme-id.
+    from repro.comm.calibrate import histogram_of_quantized
+    reg = CodecRegistry()
+    for name, x in [("ffn1_act", acts), ("ffn2_act", gated)]:
+        entry = reg.register(name, histogram_of_quantized(x))
+        print(f"{name}: scheme-id {entry.scheme_id} "
+              f"({entry.scheme.areas}), "
+              f"{entry.plan.expected_bits_per_symbol:.2f} bits/sym")
 
-    # 3) Quantize fresh data and compress it.
-    fresh = jax.random.normal(jax.random.PRNGKey(1), (1 << 18,))
-    codes, scales = e4m3.quantize_block32(fresh)
-    cfg = CommConfig.from_plan(plan)
-    payload = compress_codes(codes, tables, cfg)
-
-    raw_bytes = codes.size
-    wire = wire_bytes(payload) + scales.size * 2  # bf16 scales
-    print(f"wire bytes/symbol: {wire / codes.size:.4f} "
+    # 3) Compress fresh payloads of each type into one mixed stream of
+    #    self-describing containers: each section's header carries its
+    #    scheme-id + chunk geometry, so no CommConfig rides along.
+    fresh1 = jax.random.normal(jax.random.PRNGKey(1), (1 << 18,))
+    fresh2 = jax.random.normal(jax.random.PRNGKey(2), (1 << 18,))
+    fresh2 = fresh2 * (fresh2 > 0)
+    stream = qc.pack_stream([
+        qc.encode_values(fresh1, reg["ffn1_act"]),
+        qc.encode_values(fresh2, reg["ffn2_act"]),
+    ])
+    n_syms = fresh1.size + fresh2.size
+    print(f"stream: {qc.container_bytes(stream)} bytes for {n_syms} "
+          f"symbols = {qc.container_bytes(stream) / n_syms:.4f} B/sym "
           f"(vs 1.0 raw e4m3, 2.0 bf16)")
-    print(f"escaped chunks: {int(np.asarray(payload.pool_count).sum())}")
+    for off, h in qc.stream_headers(stream):
+        print(f"  section @{off}: scheme-id {h.scheme_id}, "
+              f"{h.n_chunks} chunks x {h.capacity_words} words")
 
-    # 4) Decompress — bit-exact lossless.
-    out, ok = decompress_codes(payload, tables, cfg)
-    assert bool(ok)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
-    print("lossless roundtrip: OK")
+    # 4) Decode with ONLY the stream + a registry reloaded from JSON —
+    #    e.g. on a different host. Bit-exact lossless vs the e4m3 values.
+    reg2 = CodecRegistry.from_json(reg.to_json())
+    outs = qc.decode_values_stream(stream, reg2)
+    assert all(bool(ok) for _, ok in outs)
+    for x, (vals, _) in zip((fresh1, fresh2), outs):
+        c, s = e4m3.quantize_block32(x.astype(jnp.float32))
+        want = e4m3.dequantize_block32(           # bf16 scales on the wire
+            c, s.astype(jnp.bfloat16).astype(jnp.float32))
+        np.testing.assert_array_equal(np.asarray(vals), np.asarray(want))
+    print("mixed-scheme lossless roundtrip: OK")
 
-    # 5) Compressibility metric (paper's headline number).
-    comp = codec.measured_compressibility(np.asarray(codes), tables)
-    pmf, _ = entropy.sort_pmf_desc(
-        np.bincount(np.asarray(codes), minlength=256))
-    print(f"compressibility: {100 * comp:.1f}%  "
-          f"(ideal {100 * entropy.ideal_compressibility(pmf):.1f}%)")
+    # 5) Compressibility metric (paper's headline number) per type.
+    for name, x in [("ffn1_act", acts), ("ffn2_act", gated)]:
+        codes, _ = e4m3.quantize_block32(x.astype(np.float32))
+        tables = reg.tables_for(name)
+        comp = codec.measured_compressibility(np.asarray(codes), tables)
+        pmf, _ = entropy.sort_pmf_desc(
+            np.bincount(np.asarray(codes), minlength=256))
+        print(f"{name} compressibility: {100 * comp:.1f}%  "
+              f"(ideal {100 * entropy.ideal_compressibility(pmf):.1f}%)")
 
 
 if __name__ == "__main__":

@@ -16,11 +16,11 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh
 
-from repro.comm import CommConfig, calibrate_for_gradients
+from repro.comm import calibrate_for_gradients
+from repro.comm.calibrate import histogram_of_tree
 from repro.configs import get_config, reduced
+from repro.core import CodecRegistry
 from repro.data import DataConfig, SyntheticDataset
 from repro.launch.mesh import make_test_mesh
 from repro.models import init_params
@@ -72,15 +72,26 @@ def main():
         if args.comm == "qlc":
             batch0 = {k: jnp.asarray(v)
                       for k, v in data.batch_at(0).items()}
+            # Per-tensor-type registry (paper §7): one codec for the
+            # gradient reduce-scatter, one for the updated-parameter
+            # all-gather — the two collectives see very different
+            # symbol statistics.
             tables, plan = calibrate_for_gradients(
                 cfg, params, batch0, chunk_symbols=512)
-            comm_cfg = CommConfig.from_plan(plan)
-            print(f"calibrated: {plan.expected_bits_per_symbol:.2f} "
-                  f"bits/sym, slot {plan.capacity_words * 32 / 512:.2f}")
+            registry = CodecRegistry()
+            registry.register_tables("grads", tables, plan)
+            registry.register("params", histogram_of_tree(params),
+                              chunk_symbols=512)
+            for name in ("grads", "params"):
+                e = registry[name]
+                print(f"calibrated {name}: scheme-id {e.scheme_id}, "
+                      f"{e.plan.expected_bits_per_symbol:.2f} bits/sym, "
+                      f"slot {e.plan.capacity_words * 32 / 512:.2f}")
+            comm_cfg = registry["grads"].config()
             step = jax.jit(make_compressed_step(
-                cfg, opt_cfg, train_cfg, mesh, tables, comm_cfg))
+                cfg, opt_cfg, train_cfg, mesh, registry))
             opt_state = init_compressed_opt_state(
-                cfg, mesh, train_cfg, comm_cfg, opt_cfg)
+                cfg, mesh, train_cfg, registry, opt_cfg)
             fallback = baseline_adapter(baseline, cfg, mesh, train_cfg,
                                         comm_cfg, opt_cfg)
         else:

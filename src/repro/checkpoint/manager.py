@@ -12,10 +12,15 @@ Design (DESIGN.md §8):
   * data-iterator state (step) and RNG key are part of the checkpoint;
   * byte-width leaves (uint8 / int8 / fp8 — i.e. e4m3-quantized
     weights and cached symbol streams) are QLC-compressed losslessly on
-    disk through the Pallas kernel entry points (``repro.kernels.ops``)
-    with per-leaf calibrated tables; the histogram rides in the
-    manifest and tables are rebuilt deterministically on restore. The
-    checksum covers the ORIGINAL bytes, so decode corruption is caught.
+    disk as **self-describing containers** (``repro.comm.container``)
+    through the Pallas kernel entry points, with per-leaf calibrated
+    tables registered in a per-checkpoint
+    :class:`~repro.core.registry.CodecRegistry` stored as
+    ``registry.json`` alongside the manifest. Each leaf's container
+    header carries its scheme-id + wire geometry, so restore needs only
+    the blob + the registry (leaves with bit-identical tables share one
+    scheme-id). The checksum covers the ORIGINAL bytes, so decode
+    corruption is caught.
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ import jax
 import numpy as np
 
 SEP = "/"
+REGISTRY_FILE = "registry.json"
 
 QLC_CHUNK = 1024                 # symbols per QLC chunk on disk
 QLC_MIN_BYTES = 4096             # below this, headers beat the savings
@@ -67,9 +73,11 @@ class CheckpointManager:
 
     def save(self, step: int, state: Any, extra: Optional[Dict] = None):
         """Atomically save a pytree checkpoint for ``step``."""
+        from repro.core.registry import CodecRegistry
         flat = _flatten_with_paths(state)
         tmp = tempfile.mkdtemp(dir=self.dir, prefix=f".tmp_{step}_")
         manifest = {"step": int(step), "leaves": {}, "extra": extra or {}}
+        registry = CodecRegistry()
         try:
             for key, leaf in flat.items():
                 arr = np.asarray(leaf)
@@ -81,7 +89,7 @@ class CheckpointManager:
                     "dtype": str(arr.dtype),
                     "sum": _checksum(arr),
                 }
-                blob, qlc_meta = self._maybe_qlc(arr)
+                blob, qlc_meta = self._maybe_qlc(arr, key, registry)
                 if qlc_meta is not None:
                     meta["qlc"] = qlc_meta
                     arr = blob
@@ -90,6 +98,14 @@ class CheckpointManager:
                     f.flush()
                     os.fsync(f.fileno())
                 manifest["leaves"][key] = meta
+            if len(registry):
+                # per-checkpoint codec registry: containers name their
+                # scheme-id; the registry supplies the tables on restore
+                rpath = os.path.join(tmp, REGISTRY_FILE)
+                with open(rpath, "w") as f:
+                    json.dump(registry.to_json_dict(), f)
+                    f.flush()
+                    os.fsync(f.fileno())
             mpath = os.path.join(tmp, "manifest.json")
             with open(mpath, "w") as f:
                 json.dump(manifest, f)
@@ -105,13 +121,15 @@ class CheckpointManager:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
 
-    def _maybe_qlc(self, arr: np.ndarray):
+    def _maybe_qlc(self, arr: np.ndarray, key: str, registry):
         """Losslessly QLC-compress a byte-width leaf, if it shrinks.
 
-        Returns ``(blob, meta)`` — the uint32 word array plus the
-        manifest entry (symbol histogram, geometry) needed to rebuild
-        the tables and decode on restore — or ``(arr, None)`` when the
-        leaf is ineligible or incompressible (kept raw).
+        Returns ``(blob, meta)`` — a self-describing container (uint32
+        words; see ``repro.comm.container``) whose codec is registered
+        in the per-checkpoint ``registry`` under the leaf's path
+        (identical tables dedupe onto one scheme-id) — or
+        ``(arr, None)`` when the leaf is ineligible or incompressible
+        (kept raw).
         """
         if (not self.qlc_codes or arr.dtype.hasobject
                 or arr.dtype.itemsize != 1
@@ -120,10 +138,16 @@ class CheckpointManager:
         syms = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
         counts = np.bincount(syms, minlength=256)
 
-        from repro.core import TABLE1, build_tables
-        from repro.kernels import ops as kops
-        tables = build_tables(counts.astype(np.float64), TABLE1)
+        from repro.comm import container as qc
+        from repro.comm.compressed import CommConfig
+        from repro.core import adapt
 
+        # Decide compressibility BEFORE registering, so raw leaves do
+        # not pollute the checkpoint registry with dead entries.
+        # calibrate_tables is the same deterministic construction
+        # register() uses, so the sizing estimate matches exactly.
+        tables = adapt.calibrate_tables(
+            np.maximum(counts.astype(np.float64), 1e-6))
         n = syms.size
         n_chunks = -(-n // QLC_CHUNK)
         padded = np.zeros(n_chunks * QLC_CHUNK, dtype=np.uint8)
@@ -131,24 +155,48 @@ class CheckpointManager:
         lens = tables.enc_len[padded]   # uint8 fancy-index: no int64 copy
         cap = max(1, math.ceil(
             int(lens.reshape(n_chunks, QLC_CHUNK).sum(axis=1).max()) / 32))
-        if n_chunks * cap * 4 >= syms.nbytes:     # incompressible leaf
+        # Exact measured capacity => zero escapes; the minimal 1-slot
+        # pool is container overhead only.
+        cfg = CommConfig(chunk_symbols=QLC_CHUNK, capacity_words=cap,
+                         pool_slots_per_1k=1, use_kernels=True)
+        pool_slots = cfg.pool_slots(n_chunks)
+        container_words = (qc.HEADER_WORDS + n_chunks * cap
+                           + -(-n_chunks // 4)
+                           + pool_slots * (QLC_CHUNK // 4) + 1)
+        if container_words * 4 >= syms.nbytes:    # incompressible leaf
             return arr, None
-        words, _ = kops.encode(
-            jax.numpy.asarray(padded.reshape(n_chunks, QLC_CHUNK)),
-            tables, cap)
-        meta = {"counts": counts.tolist(), "n": int(n),
-                "chunk": QLC_CHUNK, "capacity_words": int(cap)}
-        return np.asarray(words), meta
+        entry = registry.register(key, counts.astype(np.float64),
+                                  chunk_symbols=QLC_CHUNK)
+        blob = qc.encode_codes(syms, entry, cfg=cfg)
+        meta = {"scheme_id": int(entry.scheme_id), "n": int(n)}
+        return blob, meta
 
     @staticmethod
-    def _decode_qlc(words: np.ndarray, qlc_meta: Dict) -> np.ndarray:
-        """Inverse of ``_maybe_qlc``: words + manifest meta -> uint8."""
-        from repro.core import TABLE1, build_tables
-        from repro.kernels import ops as kops
-        tables = build_tables(
-            np.asarray(qlc_meta["counts"], dtype=np.float64), TABLE1)
-        syms = kops.decode(jax.numpy.asarray(words), tables,
-                           qlc_meta["chunk"])
+    def _decode_qlc(words: np.ndarray, qlc_meta: Dict, registry
+                    ) -> np.ndarray:
+        """Inverse of ``_maybe_qlc``: container words + registry -> u8.
+
+        The container header supplies geometry + scheme-id; the
+        checkpoint registry supplies the tables. Checkpoints written
+        before the container format (manifest meta carries the
+        histogram in-line) decode through the legacy path. Any
+        parse/decode failure surfaces as IOError (corrupt blob)."""
+        if "counts" in qlc_meta:          # pre-container checkpoint
+            from repro.core import TABLE1, build_tables
+            from repro.kernels import ops as kops
+            tables = build_tables(
+                np.asarray(qlc_meta["counts"], dtype=np.float64), TABLE1)
+            syms = kops.decode(jax.numpy.asarray(words), tables,
+                               qlc_meta["chunk"])
+            return np.asarray(syms).reshape(-1)[:qlc_meta["n"]]
+        from repro.comm import container as qc
+        try:
+            syms, ok, _ = qc.decode_codes(np.asarray(words), registry,
+                                          use_kernels=True)
+            if not bool(ok):
+                raise ValueError("escape pool overflow on restore")
+        except Exception as e:
+            raise IOError(f"corrupt QLC container: {e}") from e
         return np.asarray(syms).reshape(-1)[:qlc_meta["n"]]
 
     def _update_latest(self, step: int):
@@ -195,6 +243,13 @@ class CheckpointManager:
         with open(os.path.join(cdir, "manifest.json")) as f:
             manifest = json.load(f)
 
+        registry = None
+        rpath = os.path.join(cdir, REGISTRY_FILE)
+        if os.path.exists(rpath):
+            from repro.core.registry import CodecRegistry
+            with open(rpath) as f:
+                registry = CodecRegistry.from_json_dict(json.load(f))
+
         flat_like = _flatten_with_paths(like)
         flat_sh = (_flatten_with_paths(shardings)
                    if shardings is not None else {})
@@ -205,7 +260,10 @@ class CheckpointManager:
                 raise KeyError(f"checkpoint missing leaf {key}")
             arr = np.load(os.path.join(cdir, meta["file"]))
             if "qlc" in meta:
-                arr = self._decode_qlc(arr, meta["qlc"]).reshape(
+                if registry is None and "counts" not in meta["qlc"]:
+                    raise IOError(
+                        f"checkpoint has QLC leaves but no {REGISTRY_FILE}")
+                arr = self._decode_qlc(arr, meta["qlc"], registry).reshape(
                     meta["shape"])
             if _checksum(arr) != meta["sum"]:
                 raise IOError(f"checksum mismatch for {key}")

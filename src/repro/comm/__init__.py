@@ -13,13 +13,30 @@ from repro.comm.compressed import (  # noqa: F401
     ref_all_gather,
     ref_psum,
     ref_reduce_scatter,
+    resolve_codec,
     wire_bytes,
+)
+from repro.comm import container  # noqa: F401
+from repro.comm.container import (  # noqa: F401
+    ContainerHeader,
+    decode_codes_stream,
+    decode_values_stream,
+    pack_stream,
+    parse_header,
+    stream_headers,
+)
+from repro.comm.container import (  # noqa: F401
+    encode_values as container_encode_values,
+    decode_values as container_decode_values,
+    encode_codes as container_encode_codes,
+    decode_codes as container_decode_codes,
 )
 from repro.comm.planner import CommPlan, plan_for_tables  # noqa: F401
 from repro.comm.calibrate import (  # noqa: F401
     calibrate_for_gradients,
     calibrate_for_tensor,
     histogram_of_quantized,
+    histogram_of_tree,
 )
 from repro.comm.weights import (  # noqa: F401
     GroupWireCodec,

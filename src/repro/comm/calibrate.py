@@ -30,6 +30,17 @@ def histogram_of_quantized(x: jnp.ndarray) -> np.ndarray:
                        minlength=256).astype(np.float64)
 
 
+def histogram_of_tree(tree) -> np.ndarray:
+    """Pytree of float tensors -> summed counts[256] of their e4m3
+    symbols, accumulated leaf by leaf (no concatenated f32 copy of the
+    whole tree). The parameter-type calibration input for
+    ``CodecRegistry.register("params", ...)``."""
+    counts = np.zeros(256, dtype=np.float64)
+    for leaf in jax.tree.leaves(tree):
+        counts += histogram_of_quantized(leaf)
+    return counts
+
+
 def calibrate_for_tensor(x: jnp.ndarray, scheme: Optional[QLCScheme] = None,
                          chunk_symbols: int = 1024,
                          target_escape_prob: float = 1e-6,

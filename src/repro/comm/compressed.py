@@ -19,6 +19,15 @@ Each has an uncompressed-e4m3 twin (cfg.enabled=False → raw codes on the
 wire) and a bf16 reference; the coding step is bit-exact lossless, so
 compressed and raw-e4m3 paths produce IDENTICAL numerics (tested).
 
+Codec arguments: every entry point accepts either the legacy
+``(CodecTables, CommConfig)`` pair or a
+:class:`~repro.core.registry.CodecEntry` from a per-tensor-type
+registry (``resolve_codec`` is the shim); the entry's calibrated plan
+supplies the wire config. For payloads that must decode WITHOUT this
+out-of-band config (checkpoints, serving manifests, offline exchange),
+``repro.comm.container`` frames them with a self-describing header
+(scheme-id + chunk geometry + capacity + pool + scale layout).
+
 With ``cfg.use_kernels=True`` the local quantize→encode and
 decode→dequantize stages each run as one fused Pallas dispatch
 (``repro.kernels.ops``) instead of separate XLA ops — same numerics.
@@ -46,6 +55,30 @@ from repro.comm.planner import CommPlan
 from repro.quant import e4m3
 
 
+def resolve_codec(codec_like, cfg: Optional["CommConfig"] = None,
+                  **cfg_overrides):
+    """Normalize a codec argument to ``(tables, cfg)``.
+
+    Accepts the legacy ``(CodecTables, CommConfig)`` pair or a registry
+    :class:`~repro.core.registry.CodecEntry`, whose plan supplies the
+    wire config when ``cfg`` is omitted (overrides, e.g.
+    ``use_kernels=True``, apply on top). This is the API-migration
+    shim: every collective and (de)compression entry point routes
+    through it.
+    """
+    from repro.core.registry import CodecEntry
+    if isinstance(codec_like, CodecEntry):
+        tables = codec_like.tables
+        if cfg is None:
+            cfg = codec_like.config(**cfg_overrides)
+        return tables, cfg
+    if cfg is None:
+        raise TypeError(
+            "a bare CodecTables needs an explicit CommConfig; pass a "
+            "registry CodecEntry to derive it from the calibrated plan")
+    return codec_like, cfg
+
+
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
     """Static configuration of the compressed-collective wire format."""
@@ -61,9 +94,11 @@ class CommConfig:
 
     @classmethod
     def from_plan(cls, plan: CommPlan, **kw) -> "CommConfig":
-        return cls(chunk_symbols=plan.chunk_symbols,
-                   capacity_words=plan.capacity_words,
-                   pool_slots_per_1k=plan.pool_slots_per_1k, **kw)
+        base = dict(chunk_symbols=plan.chunk_symbols,
+                    capacity_words=plan.capacity_words,
+                    pool_slots_per_1k=plan.pool_slots_per_1k)
+        base.update(kw)          # explicit overrides win over the plan
+        return cls(**base)
 
     def pool_slots(self, n_chunks: int) -> int:
         return max(1, math.ceil(n_chunks * self.pool_slots_per_1k / 1024))
@@ -194,9 +229,14 @@ def _assemble_payload(chunks: jnp.ndarray, words: jnp.ndarray,
                        pool=pool, pool_count=pool_count)
 
 
-def compress_codes(codes: jnp.ndarray, tables: CodecTables, cfg: CommConfig
+def compress_codes(codes: jnp.ndarray, tables, cfg: CommConfig = None
                    ) -> WirePayload:
-    """uint8 [..., M] (M % chunk_symbols == 0) -> WirePayload."""
+    """uint8 [..., M] (M % chunk_symbols == 0) -> WirePayload.
+
+    ``tables`` is a ``CodecTables`` (with explicit ``cfg``) or a
+    registry ``CodecEntry`` (cfg defaults to its calibrated plan).
+    """
+    tables, cfg = resolve_codec(tables, cfg)
     k = cfg.chunk_symbols
     *lead, m = codes.shape
     assert m % k == 0, (m, k)
@@ -226,9 +266,12 @@ def _gather_pool_raw(payload: WirePayload, cfg: CommConfig) -> jnp.ndarray:
     return raw.reshape(*lead, n_chunks, k)
 
 
-def decompress_codes(payload: WirePayload, tables: CodecTables,
-                     cfg: CommConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def decompress_codes(payload: WirePayload, tables,
+                     cfg: CommConfig = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """WirePayload -> (uint8 codes [..., M], ok bool[...])."""
+    if tables is not None or cfg is None:
+        tables, cfg = resolve_codec(tables, cfg)
     k = cfg.chunk_symbols
     *lead, n_chunks, _ = payload.words.shape
 
@@ -267,9 +310,14 @@ def _dequantize(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
 # Fused value <-> wire transforms (the collectives' local hot path)
 # --------------------------------------------------------------------------
 
-def compress_values(x: jnp.ndarray, tables: CodecTables, cfg: CommConfig
+def compress_values(x: jnp.ndarray, tables, cfg: CommConfig = None
                     ) -> Tuple[WirePayload, jnp.ndarray]:
     """float [..., M] (M % chunk_symbols == 0) -> (WirePayload, scales).
+
+    ``tables`` may be a registry ``CodecEntry`` (cfg optional, derived
+    from its plan). For a self-describing framing of the result see
+    ``repro.comm.container`` — the container header carries the wire
+    geometry + scheme-id so the payload decodes without this cfg.
 
     With ``cfg.use_kernels`` the e4m3 quantization and QLC encode run as
     ONE fused Pallas dispatch (the symbols are emitted once, for the
@@ -279,6 +327,7 @@ def compress_values(x: jnp.ndarray, tables: CodecTables, cfg: CommConfig
     tested bit-equal to ``e4m3.quantize_block32`` and its packer to
     ``codec.encode_chunks``.
     """
+    tables, cfg = resolve_codec(tables, cfg)
     k = cfg.chunk_symbols
     *lead, m = x.shape
     assert m % k == 0, (m, k)
@@ -302,7 +351,7 @@ def compress_values(x: jnp.ndarray, tables: CodecTables, cfg: CommConfig
 
 
 def decompress_values(payload: WirePayload, scales: jnp.ndarray,
-                      tables: CodecTables, cfg: CommConfig
+                      tables, cfg: CommConfig = None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(WirePayload, scales) -> (float32 values [..., M], ok bool[...]).
 
@@ -313,6 +362,7 @@ def decompress_values(payload: WirePayload, scales: jnp.ndarray,
     level (dequantization is a per-symbol table gather times the block
     scale either way).
     """
+    tables, cfg = resolve_codec(tables, cfg)
     k = cfg.chunk_symbols
     *lead, n_chunks, _ = payload.words.shape
 
@@ -367,13 +417,17 @@ def pad_to_multiple(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:
 # Collectives (call inside shard_map with a named axis)
 # --------------------------------------------------------------------------
 
-def qlc_all_gather(x: jnp.ndarray, axis_name, tables: CodecTables,
-                   cfg: CommConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def qlc_all_gather(x: jnp.ndarray, axis_name, tables,
+                   cfg: CommConfig = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All-gather with e4m3+QLC wire. Returns (tiled gather f32 [D*n], ok).
 
     ``x`` is this shard's (float) payload; output is the concatenation of
     every peer's dequantized payload along axis 0 (flattened).
+    ``tables`` is a ``CodecTables`` (explicit ``cfg``) or a registry
+    ``CodecEntry`` (cfg from its plan) — same for every collective here.
     """
+    tables, cfg = resolve_codec(tables, cfg)
     flat, n = pad_to_multiple(x, cfg.chunk_symbols)
     payload, scales = compress_values(flat, tables, cfg)
 
@@ -387,7 +441,7 @@ def qlc_all_gather(x: jnp.ndarray, axis_name, tables: CodecTables,
 
 
 def qlc_reduce_scatter(x: jnp.ndarray, axis_name, axis_size: int,
-                       tables: CodecTables, cfg: CommConfig
+                       tables, cfg: CommConfig = None
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Reduce-scatter(sum) with e4m3+QLC wire.
 
@@ -398,6 +452,7 @@ def qlc_reduce_scatter(x: jnp.ndarray, axis_name, axis_size: int,
     Returns (my summed segment f32 [ceil(n/D*K)*K... padded segment], ok).
     Callers slice/reshape; see ``qlc_psum`` for the round trip.
     """
+    tables, cfg = resolve_codec(tables, cfg)
     d = axis_size
     flat, n = pad_to_multiple(x, d * cfg.chunk_symbols)
     seg = flat.shape[0] // d
@@ -414,22 +469,25 @@ def qlc_reduce_scatter(x: jnp.ndarray, axis_name, axis_size: int,
     return jnp.sum(vals, axis=0), jnp.all(ok)
 
 
-def qlc_psum(x: jnp.ndarray, axis_name, axis_size: int, tables: CodecTables,
-             cfg: CommConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def qlc_psum(x: jnp.ndarray, axis_name, axis_size: int, tables,
+             cfg: CommConfig = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All-reduce(sum) = compressed RS + compressed AG.
 
     Note both phases quantize (two e4m3 roundings), as in standard
     compressed all-reduce; the QLC coding itself adds zero error.
     """
+    tables, cfg = resolve_codec(tables, cfg)
     seg, ok_rs = qlc_reduce_scatter(x, axis_name, axis_size, tables, cfg)
     full, ok_ag = qlc_all_gather(seg, axis_name, tables, cfg)
     out = full[:x.size].reshape(x.shape)
     return out, ok_rs & ok_ag
 
 
-def qlc_all_to_all(x: jnp.ndarray, axis_name, tables: CodecTables,
-                   cfg: CommConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def qlc_all_to_all(x: jnp.ndarray, axis_name, tables,
+                   cfg: CommConfig = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Compressed all-to-all of x [D, ...] (row j -> peer j)."""
+    tables, cfg = resolve_codec(tables, cfg)
     d = x.shape[0]
     row = x.reshape(d, -1)
     n = row.shape[1]

@@ -1,0 +1,467 @@
+"""Self-describing QLC container format.
+
+A **container** frames one compressed payload with a fixed 16-word
+packed header so the payload is decodable from the bytes plus a
+:class:`~repro.core.registry.CodecRegistry` alone — no out-of-band
+``CommConfig`` agreement between producer and consumer (the property
+Huff-LLM / ZipServ-style serving stacks need to mix streams encoded
+under different schemes). Checkpoint leaves, serving weight wires, and
+offline payload exchange all ride this format; a byte stream may
+concatenate many containers ("sections"), each carrying its own
+scheme-id, so one stream mixes tensor types freely.
+
+Header layout (16 little-endian uint32 words)::
+
+    word  0  magic            0x514C4331 ("QLC1")
+    word  1  version          1
+    word  2  scheme_id        registry id of the coding scheme
+    word  3  flags            bit 0: QLC-coded (0 = raw e4m3 words)
+    word  4  chunk_symbols    K, symbols per chunk
+    word  5  capacity_words   32-bit words per chunk slot
+    word  6  n_chunks         chunks in the payload
+    word  7  pool_slots       escape-pool rows
+    word  8  n_valid (lo32)   valid symbols (trailing pad dropped)
+    word  9  n_valid (hi32)
+    word 10  scale_dtype      0 none | 1 bfloat16 | 2 float32
+    word 11  n_scales         block-32 scale count
+    word 12  prefix_bits      area-code bits of the scheme (sanity)
+    word 13  reserved         0
+    word 14  reserved         0
+    word 15  crc32            of words 0..14 (little-endian bytes)
+
+Sections follow the header back to back, all as uint32 words:
+``words [n_chunks * capacity_words]``, ``flags [ceil(n_chunks/4)]``
+(packed uint8), ``pool [pool_slots * chunk_symbols/4]``, ``pool_count
+[1]``, ``scales`` (bf16 packed 2-per-word, or f32 1-per-word).
+
+Framing (header parse, section slicing) is host-side numpy — payload
+lengths are data-dependent — while the decode itself runs through the
+jit codec or the Pallas kernels (``use_kernels``), including the
+**multi-LUT batched decode**: :func:`decode_codes_stream` decodes a
+mixed-scheme stream's chunks in ONE kernel dispatch with per-chunk
+scheme slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as _codec
+from repro.core.registry import CodecEntry, CodecRegistry
+from repro.comm.compressed import (CommConfig, WirePayload, compress_codes,
+                                   compress_values, decompress_codes,
+                                   decompress_values, _gather_pool_raw,
+                                   pad_to_multiple)
+
+MAGIC = 0x514C4331           # "QLC1"
+CONTAINER_VERSION = 1
+HEADER_WORDS = 16
+
+_SCALE_DTYPES = {0: None, 1: "bfloat16", 2: "float32"}
+_SCALE_CODES = {v: k for k, v in _SCALE_DTYPES.items()}
+FLAG_CODED = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ContainerHeader:
+    """Parsed container header — everything needed to slice the
+    sections and rebuild the wire config."""
+    scheme_id: int
+    coded: bool                  # False => raw e4m3 words on the wire
+    chunk_symbols: int
+    capacity_words: int
+    n_chunks: int
+    pool_slots: int
+    n_valid: int
+    scale_dtype: Optional[str]   # None | "bfloat16" | "float32"
+    n_scales: int
+    prefix_bits: int
+
+    # ---- section geometry (in u32 words) --------------------------------
+
+    @property
+    def words_len(self) -> int:
+        return self.n_chunks * self.capacity_words
+
+    @property
+    def flags_len(self) -> int:
+        return -(-self.n_chunks // 4)
+
+    @property
+    def pool_len(self) -> int:
+        return self.pool_slots * (self.chunk_symbols // 4)
+
+    @property
+    def scales_len(self) -> int:
+        if self.scale_dtype is None:
+            return 0
+        per_word = 2 if self.scale_dtype == "bfloat16" else 1
+        return -(-self.n_scales // per_word)
+
+    @property
+    def body_words(self) -> int:
+        return (self.words_len + self.flags_len + self.pool_len + 1
+                + self.scales_len)
+
+    @property
+    def total_words(self) -> int:
+        return HEADER_WORDS + self.body_words
+
+    def comm_config(self, **overrides) -> CommConfig:
+        """Reconstruct a wire config sufficient to DECODE this payload
+        (the point of the container: no out-of-band agreement).
+
+        Note the pool geometry: decode reads the actual pool size from
+        the payload sections (word 7), while ``pool_slots_per_1k`` here
+        is only a ceil-rounded back-derivation — re-encoding under this
+        config may size the pool differently. To produce new payloads,
+        use the registry entry's calibrated plan, not this config.
+        """
+        pool_per_1k = max(1, math.ceil(
+            self.pool_slots * 1024 / max(self.n_chunks, 1)))
+        kw = dict(enabled=self.coded,
+                  chunk_symbols=self.chunk_symbols,
+                  capacity_words=self.capacity_words,
+                  pool_slots_per_1k=pool_per_1k,
+                  scale_dtype=self.scale_dtype or "bfloat16")
+        kw.update(overrides)
+        return CommConfig(**kw)
+
+
+def pack_header(h: ContainerHeader) -> np.ndarray:
+    w = np.zeros(HEADER_WORDS, dtype=np.uint32)
+    w[0] = MAGIC
+    w[1] = CONTAINER_VERSION
+    w[2] = h.scheme_id
+    w[3] = FLAG_CODED if h.coded else 0
+    w[4] = h.chunk_symbols
+    w[5] = h.capacity_words
+    w[6] = h.n_chunks
+    w[7] = h.pool_slots
+    w[8] = h.n_valid & 0xFFFFFFFF
+    w[9] = (h.n_valid >> 32) & 0xFFFFFFFF
+    w[10] = _SCALE_CODES[h.scale_dtype]
+    w[11] = h.n_scales
+    w[12] = h.prefix_bits
+    w[15] = zlib.crc32(w[:15].tobytes())
+    return w
+
+
+def parse_header(buf: np.ndarray, offset: int = 0) -> ContainerHeader:
+    """Parse and validate one header at ``offset`` (in u32 words)."""
+    buf = np.asarray(buf, dtype=np.uint32).reshape(-1)
+    if buf.size - offset < HEADER_WORDS:
+        raise ValueError(
+            f"truncated container: {buf.size - offset} words < header")
+    w = buf[offset:offset + HEADER_WORDS]
+    if int(w[0]) != MAGIC:
+        raise ValueError(f"bad container magic 0x{int(w[0]):08x}")
+    if int(w[1]) != CONTAINER_VERSION:
+        raise ValueError(f"unsupported container version {int(w[1])}")
+    if int(w[15]) != zlib.crc32(w[:15].tobytes()):
+        raise ValueError("container header CRC mismatch")
+    code = int(w[10])
+    if code not in _SCALE_DTYPES:
+        raise ValueError(f"unknown scale dtype code {code}")
+    h = ContainerHeader(
+        scheme_id=int(w[2]),
+        coded=bool(int(w[3]) & FLAG_CODED),
+        chunk_symbols=int(w[4]),
+        capacity_words=int(w[5]),
+        n_chunks=int(w[6]),
+        pool_slots=int(w[7]),
+        n_valid=int(w[8]) | (int(w[9]) << 32),
+        scale_dtype=_SCALE_DTYPES[code],
+        n_scales=int(w[11]),
+        prefix_bits=int(w[12]),
+    )
+    if h.chunk_symbols <= 0 or h.chunk_symbols % 4:
+        raise ValueError(f"bad chunk_symbols {h.chunk_symbols}")
+    if h.n_valid > h.n_chunks * h.chunk_symbols:
+        raise ValueError("n_valid exceeds payload capacity")
+    if buf.size - offset < h.total_words:
+        raise ValueError(
+            f"truncated container: {buf.size - offset} words < "
+            f"{h.total_words}")
+    return h
+
+
+# --------------------------------------------------------------------------
+# Payload <-> words
+# --------------------------------------------------------------------------
+
+def _u8_words(a: np.ndarray) -> np.ndarray:
+    a = np.ascontiguousarray(np.asarray(a, np.uint8).reshape(-1))
+    pad = (-a.size) % 4
+    if pad:
+        a = np.concatenate([a, np.zeros(pad, np.uint8)])
+    return a.view(np.uint32)
+
+
+def _scales_words(scales, dtype: Optional[str]) -> np.ndarray:
+    if dtype is None:
+        return np.zeros(0, np.uint32)
+    s = np.asarray(scales).reshape(-1)
+    if dtype == "bfloat16":
+        u16 = np.ascontiguousarray(s).view(np.uint16)
+        if u16.size % 2:
+            u16 = np.concatenate([u16, np.zeros(1, np.uint16)])
+        return u16.view(np.uint32)
+    return np.ascontiguousarray(s.astype(np.float32)).view(np.uint32)
+
+
+def pack_payload(payload: WirePayload, scales, *, scheme_id: int,
+                 cfg: CommConfig, n_valid: int,
+                 prefix_bits: int = 3) -> np.ndarray:
+    """Frame one (payload, scales) pair as a container word array."""
+    words = np.asarray(payload.words, np.uint32)
+    n_chunks, capacity_words = words.shape[-2], words.shape[-1]
+    pool = np.asarray(payload.pool, np.uint32)
+    scale_dtype = None if scales is None else cfg.scale_dtype
+    n_scales = 0 if scales is None else int(np.asarray(scales).size)
+    h = ContainerHeader(
+        scheme_id=scheme_id,
+        coded=cfg.enabled,
+        chunk_symbols=cfg.chunk_symbols,
+        capacity_words=capacity_words,
+        n_chunks=n_chunks,
+        pool_slots=pool.shape[-2],
+        n_valid=int(n_valid),
+        scale_dtype=scale_dtype,
+        n_scales=n_scales,
+        prefix_bits=prefix_bits,
+    )
+    parts = [
+        pack_header(h),
+        words.reshape(-1),
+        _u8_words(payload.flags),
+        pool.reshape(-1),
+        np.asarray(payload.pool_count, np.uint32).reshape(-1)[:1],
+        _scales_words(scales, scale_dtype),
+    ]
+    return np.concatenate(parts)
+
+
+def unpack_payload(buf: np.ndarray, offset: int = 0
+                   ) -> Tuple[ContainerHeader, WirePayload,
+                              Optional[jnp.ndarray], int]:
+    """Slice one container back into (header, WirePayload, scales,
+    next_offset)."""
+    buf = np.asarray(buf, dtype=np.uint32).reshape(-1)
+    h = parse_header(buf, offset)
+    pos = offset + HEADER_WORDS
+
+    def take(n):
+        nonlocal pos
+        out = buf[pos:pos + n]
+        pos += n
+        return out
+
+    words = take(h.words_len).reshape(h.n_chunks, h.capacity_words)
+    flags = take(h.flags_len).view(np.uint8)[:h.n_chunks]
+    pool = take(h.pool_len).reshape(h.pool_slots, h.chunk_symbols // 4)
+    pool_count = take(1).astype(np.int32)
+    scales = None
+    sw = take(h.scales_len)
+    if h.scale_dtype == "bfloat16":
+        scales = jnp.asarray(
+            sw.view(np.uint16)[:h.n_scales]).view(jnp.bfloat16)
+    elif h.scale_dtype == "float32":
+        scales = jnp.asarray(sw.view(np.float32)[:h.n_scales])
+    payload = WirePayload(
+        words=jnp.asarray(words),
+        flags=jnp.asarray(flags),
+        pool=jnp.asarray(pool),
+        pool_count=jnp.asarray(pool_count),
+    )
+    return h, payload, scales, pos
+
+
+def _tables_for(h: ContainerHeader, registry: CodecRegistry):
+    """Registry lookup + the header's sanity check: the scheme behind
+    the wire scheme-id must have the geometry the payload was coded
+    with, or decode would silently corrupt (wrong registry loaded,
+    scheme-id collision across registries)."""
+    tables = registry.by_id(h.scheme_id).tables
+    if h.coded and tables.prefix_bits != h.prefix_bits:
+        raise ValueError(
+            f"scheme-id {h.scheme_id}: registry tables have "
+            f"prefix_bits={tables.prefix_bits} but the container was "
+            f"coded with {h.prefix_bits} — wrong registry?")
+    return tables
+
+
+# --------------------------------------------------------------------------
+# Value / code round trips (the container's public API)
+# --------------------------------------------------------------------------
+
+def encode_values(x, entry: CodecEntry, cfg: Optional[CommConfig] = None,
+                  **cfg_overrides) -> np.ndarray:
+    """float array -> self-describing container (quantize + QLC-code)."""
+    if cfg is None:
+        cfg = entry.config(**cfg_overrides)
+    flat, n = pad_to_multiple(jnp.asarray(x, jnp.float32).reshape(-1),
+                              cfg.chunk_symbols)
+    payload, scales = compress_values(flat, entry.tables, cfg)
+    return pack_payload(payload, scales, scheme_id=entry.scheme_id,
+                        cfg=cfg, n_valid=n,
+                        prefix_bits=entry.tables.prefix_bits)
+
+
+def decode_values(buf, registry: CodecRegistry, offset: int = 0, *,
+                  use_kernels: Optional[bool] = None
+                  ) -> Tuple[jnp.ndarray, bool, int]:
+    """Container -> (float32 values [n_valid], ok, next_offset).
+
+    Needs only the buffer and the registry: the header supplies the
+    wire geometry, the scheme-id supplies the tables.
+    """
+    h, payload, scales, pos = unpack_payload(buf, offset)
+    tables = _tables_for(h, registry)
+    cfg = h.comm_config(
+        **({} if use_kernels is None else {"use_kernels": use_kernels}))
+    if scales is None:
+        raise ValueError("container carries no scales; use decode_codes")
+    vals, ok = decompress_values(payload, scales, tables, cfg)
+    return vals.reshape(-1)[:h.n_valid], ok, pos
+
+
+def encode_codes(codes, entry: CodecEntry,
+                 cfg: Optional[CommConfig] = None,
+                 **cfg_overrides) -> np.ndarray:
+    """uint8 symbol array -> container (no scales section)."""
+    if cfg is None:
+        cfg = entry.config(**cfg_overrides)
+    flat, n = pad_to_multiple(jnp.asarray(codes, jnp.uint8).reshape(-1),
+                              cfg.chunk_symbols)
+    payload = compress_codes(flat, entry.tables, cfg)
+    return pack_payload(payload, None, scheme_id=entry.scheme_id,
+                        cfg=cfg, n_valid=n,
+                        prefix_bits=entry.tables.prefix_bits)
+
+
+def decode_codes(buf, registry: CodecRegistry, offset: int = 0, *,
+                 use_kernels: Optional[bool] = None
+                 ) -> Tuple[jnp.ndarray, bool, int]:
+    """Container -> (uint8 codes [n_valid], ok, next_offset)."""
+    h, payload, _, pos = unpack_payload(buf, offset)
+    tables = _tables_for(h, registry)
+    cfg = h.comm_config(
+        **({} if use_kernels is None else {"use_kernels": use_kernels}))
+    out, ok = decompress_codes(payload, tables, cfg)
+    return out.reshape(-1)[:h.n_valid], ok, pos
+
+
+# --------------------------------------------------------------------------
+# Mixed-scheme streams
+# --------------------------------------------------------------------------
+
+def pack_stream(sections: Sequence[np.ndarray]) -> np.ndarray:
+    """Concatenate containers into one stream."""
+    return (np.concatenate([np.asarray(s, np.uint32) for s in sections])
+            if sections else np.zeros(0, np.uint32))
+
+
+def stream_headers(buf) -> List[Tuple[int, ContainerHeader]]:
+    """Walk a stream: [(offset, header), ...] for every section."""
+    buf = np.asarray(buf, dtype=np.uint32).reshape(-1)
+    out, offset = [], 0
+    while offset < buf.size:
+        h = parse_header(buf, offset)
+        out.append((offset, h))
+        offset += h.total_words
+    return out
+
+
+def decode_values_stream(buf, registry: CodecRegistry, *,
+                         use_kernels: Optional[bool] = None
+                         ) -> List[Tuple[jnp.ndarray, bool]]:
+    """Decode every section of a (possibly mixed-scheme) stream."""
+    out, offset = [], 0
+    buf = np.asarray(buf, dtype=np.uint32).reshape(-1)
+    while offset < buf.size:
+        vals, ok, offset = decode_values(buf, registry, offset,
+                                         use_kernels=use_kernels)
+        out.append((vals, ok))
+    return out
+
+
+def decode_codes_stream(buf, registry: CodecRegistry, *,
+                        use_kernels: bool = False
+                        ) -> List[Tuple[jnp.ndarray, bool]]:
+    """Decode a mixed-scheme stream's QLC chunks in ONE batched pass.
+
+    All coded sections' chunks are concatenated (slots padded to the
+    widest capacity) and decoded by a single multi-LUT dispatch — the
+    per-chunk scheme slot rides next to the data, exactly the paper's
+    §7 "one LUT per tensor type" deployment. Raw (uncoded) sections
+    fall back to the per-section path. Escape-pool merging stays
+    per-section (pool rows are section-local).
+    """
+    buf = np.asarray(buf, dtype=np.uint32).reshape(-1)
+    parsed, offset = [], 0
+    while offset < buf.size:
+        h, payload, scales, offset = unpack_payload(buf, offset)
+        parsed.append((h, payload, scales))
+    if not parsed:
+        return []
+
+    coded = [i for i, (h, _, _) in enumerate(parsed) if h.coded]
+    results: List[Optional[Tuple[jnp.ndarray, bool]]] = [None] * len(parsed)
+
+    if coded:
+        ks = {parsed[i][0].chunk_symbols for i in coded}
+        if len(ks) != 1:
+            raise ValueError(
+                f"batched stream decode needs one chunk size, got {ks}")
+        k = ks.pop()
+        cap = max(parsed[i][0].capacity_words for i in coded)
+        tables_list, id_map = registry.stacked_decode_tables(
+            [parsed[i][0].scheme_id for i in coded])
+        blocks, sids = [], []
+        for i in coded:
+            h, payload, _ = parsed[i]
+            _tables_for(h, registry)     # prefix_bits sanity per section
+            w = np.asarray(payload.words, np.uint32)
+            if h.capacity_words < cap:   # pad slots to the widest scheme
+                w = np.pad(w, ((0, 0), (0, cap - h.capacity_words)))
+            blocks.append(w)
+            sids.append(np.full(h.n_chunks, id_map[h.scheme_id],
+                                np.int32))
+        all_words = jnp.asarray(np.concatenate(blocks))
+        all_sids = jnp.asarray(np.concatenate(sids))
+        if use_kernels:
+            from repro.kernels import ops as kops
+            dec = kops.decode(all_words, tables_list, k,
+                              scheme_ids=all_sids)
+        else:
+            dec = _codec.decode_chunks_multi(all_words, tables_list,
+                                             all_sids, k)
+        row = 0
+        for i in coded:
+            h, payload, _ = parsed[i]
+            sec = dec[row:row + h.n_chunks]
+            row += h.n_chunks
+            # Merge section-local escapes, as decompress_codes does.
+            cfg = h.comm_config()
+            escape = payload.flags.astype(bool)
+            raw = _gather_pool_raw(payload, cfg)
+            merged = jnp.where(escape[:, None], raw, sec)
+            ok = bool(payload.pool_count[0] <= h.pool_slots)
+            results[i] = (merged.reshape(-1)[:h.n_valid], ok)
+
+    for i, (h, payload, _) in enumerate(parsed):
+        if results[i] is None:          # raw e4m3 section
+            out, ok = decompress_codes(payload, None, h.comm_config())
+            results[i] = (out.reshape(-1)[:h.n_valid], bool(ok))
+    return results
+
+
+def container_bytes(buf) -> int:
+    """Wire footprint of a container/stream in bytes."""
+    return int(np.asarray(buf).size) * 4

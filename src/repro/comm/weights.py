@@ -10,6 +10,16 @@ codec runs in-graph right after the gather, inside the layer scan — a
 compute-for-bandwidth trade that wins exactly when the roofline says
 the cell is collective-bound.
 
+Per-leaf codecs: the wire codec carries a
+:class:`~repro.core.registry.CodecRegistry` and every compressed leaf
+records its **scheme-id** in its :class:`LeafMeta` — different leaves
+(FFN1 vs FFN2 vs attention stacks) decode under different LUTs, and the
+whole recipe serializes to a JSON manifest
+(:meth:`GroupWireCodec.manifest`) that a serving host can reload with
+:meth:`GroupWireCodec.from_manifest` — no out-of-band table agreement.
+Legacy call sites passing a bare ``CodecTables`` keep working (wrapped
+into a one-entry registry).
+
 Weights are static: for real parameters the slot capacity is the exact
 measured max chunk size — zero escapes, no pool, unconditionally
 lossless (relative to the e4m3 values). Embeddings / LM head stay in
@@ -19,18 +29,21 @@ absurd).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codec
-from repro.core.lut import CodecTables
+from repro.core.registry import CodecRegistry, registry_of
 from repro.quant import e4m3
 
 CHUNK = 1024
 MIN_COMPRESS_SIZE = 1 << 16      # per-group; leave norms etc. alone
+
+#: registry name used when no per-leaf type key resolves.
+DEFAULT_TYPE = "default"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,15 +54,22 @@ class LeafMeta:
     n_chunks: int                  # per group
     capacity_words: int
     mode: str                      # qlc | e4m3
+    scheme_id: int = 0             # registry id of the leaf's codec
 
 
 @dataclasses.dataclass
 class GroupWireCodec:
-    """Static recipe + tables to open wired group params in-graph.
+    """Static recipe + per-leaf codecs to open wired group params
+    in-graph.
 
     Works on a whole wired tree (leaves keep their leading group dim)
     or on a single group's slice inside the layer scan (group dim
     already indexed away) — leading dims are preserved either way.
+
+    Each leaf's :class:`LeafMeta` carries a scheme-id into
+    ``registry``, so one wired tree mixes codecs freely (per-tensor-
+    type LUTs). ``manifest()``/``from_manifest()`` round-trip the whole
+    recipe — registry included — through JSON.
 
     ``use_kernels=True`` opens QLC leaves with the fused
     decode→dequantize Pallas kernel (``repro.kernels.ops``): one
@@ -57,8 +77,14 @@ class GroupWireCodec:
     touch HBM. Numerics are bit-identical to the pure-JAX path.
     """
     meta: Dict[str, LeafMeta]
-    tables: CodecTables
+    registry: CodecRegistry
     use_kernels: bool = False
+
+    @property
+    def tables(self):
+        """Back-compat: the registry's sole/first entry's tables."""
+        entries = self.registry.entries()
+        return entries[0].tables if entries else None
 
     def open_group(self, pg):
         def walk(node, prefix):
@@ -83,6 +109,7 @@ class GroupWireCodec:
                     for k, v in wire.items()}
         except Exception:
             pass
+        tables = self.registry.by_id(m.scheme_id).tables
         # Wire leaves are [*lead_g, n_chunks, …] — lead_g is the group
         # dim for a whole wired tree, or () inside the per-layer scan
         # where the group dim was indexed away. Every group decodes;
@@ -105,18 +132,54 @@ class GroupWireCodec:
                 main.reshape(g * m.n_chunks, m.capacity_words),
                 scales.astype(jnp.float32).reshape(
                     g * m.n_chunks, CHUNK // e4m3.BLOCK),
-                self.tables, CHUNK,
+                tables, CHUNK,
                 out_dtype=out_dt).reshape(lead + (padded,))
         else:
             if m.mode == "e4m3":
                 codes_flat = main.reshape(lead + (padded,))
             else:
                 codes_flat = codec.decode_chunks(
-                    main, self.tables, CHUNK).reshape(lead + (padded,))
+                    main, tables, CHUNK).reshape(lead + (padded,))
             vals = e4m3.dequantize_block32(
                 codes_flat, scales.astype(jnp.float32))
         out = vals[..., :m.n_symbols].reshape(lead + m.group_shape)
         return out.astype(m.dtype)
+
+    # ---- manifest (serving handoff) -------------------------------------
+
+    def manifest(self) -> Dict:
+        """JSON-able recipe: per-leaf geometry + scheme-ids, plus the
+        registry itself."""
+        leaves = {}
+        for key, m in self.meta.items():
+            leaves[key] = {
+                "group_shape": list(m.group_shape),
+                "dtype": str(jnp.dtype(m.dtype)),
+                "n_symbols": m.n_symbols,
+                "n_chunks": m.n_chunks,
+                "capacity_words": m.capacity_words,
+                "mode": m.mode,
+                "scheme_id": m.scheme_id,
+            }
+        return {"version": 1, "leaves": leaves,
+                "registry": self.registry.to_json_dict()}
+
+    @classmethod
+    def from_manifest(cls, d: Dict, use_kernels: bool = False
+                      ) -> "GroupWireCodec":
+        registry = CodecRegistry.from_json_dict(d["registry"])
+        meta = {}
+        for key, lm in d["leaves"].items():
+            meta[key] = LeafMeta(
+                group_shape=tuple(lm["group_shape"]),
+                dtype=jnp.dtype(lm["dtype"]),
+                n_symbols=int(lm["n_symbols"]),
+                n_chunks=int(lm["n_chunks"]),
+                capacity_words=int(lm["capacity_words"]),
+                mode=lm["mode"],
+                scheme_id=int(lm["scheme_id"]),
+            )
+        return cls(meta=meta, registry=registry, use_kernels=use_kernels)
 
 
 def _eligible(leaf_shape) -> bool:
@@ -134,10 +197,36 @@ def _geometry(leaf_shape, mode: str, capacity_words: int):
     return g, n, padded, n_chunks
 
 
-def compress_groups(groups, tables: CodecTables, mode: str = "qlc",
-                    use_kernels: bool = False
+def _entry_for(registry: CodecRegistry, prefix: str,
+               type_key_fn: Optional[Callable[[str], str]]):
+    """Resolve a leaf path to its registry entry (per-tensor-type)."""
+    if type_key_fn is not None:
+        name = type_key_fn(prefix)
+        if name is not None and name in registry:
+            return registry[name]
+    entry = registry.get(prefix, default=DEFAULT_TYPE)
+    if entry is None:
+        entries = registry.entries()
+        if not entries:
+            raise KeyError("empty codec registry")
+        entry = entries[0]
+    return entry
+
+
+def compress_groups(groups, tables, mode: str = "qlc",
+                    use_kernels: bool = False,
+                    type_key_fn: Optional[Callable[[str], str]] = None,
                     ) -> Tuple[Any, GroupWireCodec]:
-    """Real-parameter transform (serving launcher path)."""
+    """Real-parameter transform (serving launcher path).
+
+    ``tables`` is a ``CodecTables`` (single global LUT, legacy) or a
+    :class:`~repro.core.registry.CodecRegistry`; with a registry, each
+    leaf's codec resolves per tensor type: ``type_key_fn(leaf_path) ->
+    registry name`` if given, else an entry named exactly like the leaf
+    path, else the ``"default"`` entry, else the first entry. The
+    chosen scheme-id is recorded per leaf in the wire manifest.
+    """
+    registry = registry_of(tables)
     meta: Dict[str, LeafMeta] = {}
 
     def walk(node, prefix):
@@ -147,6 +236,7 @@ def compress_groups(groups, tables: CodecTables, mode: str = "qlc",
         leaf = node
         if not _eligible(leaf.shape):
             return leaf
+        entry = _entry_for(registry, prefix, type_key_fn)
         g, n, padded, n_chunks = _geometry(leaf.shape, mode, 0)
         flat = leaf.reshape(g, -1).astype(jnp.float32)
         flat = jnp.pad(flat, ((0, 0), (0, padded - n)))
@@ -154,34 +244,37 @@ def compress_groups(groups, tables: CodecTables, mode: str = "qlc",
         scales = scales.astype(jnp.bfloat16)
         if mode == "e4m3":
             meta[prefix] = LeafMeta(leaf.shape[1:], leaf.dtype, n,
-                                    n_chunks, 0, "e4m3")
+                                    n_chunks, 0, "e4m3", entry.scheme_id)
             return {"codes": codes.reshape(g, n_chunks, CHUNK),
                     "scales": scales}
         chunks = codes.reshape(g * n_chunks, CHUNK)
         nbits = codec.encode_chunk_bits(
-            chunks, jnp.asarray(tables.enc_len, jnp.uint32))
+            chunks, jnp.asarray(entry.tables.enc_len, jnp.uint32))
         cap = int(np.ceil(float(jnp.max(nbits)) / 32))   # exact: 0 escapes
-        words, _ = codec.encode_chunks(chunks, tables, cap)
+        words, _ = codec.encode_chunks(chunks, entry.tables, cap)
         meta[prefix] = LeafMeta(leaf.shape[1:], leaf.dtype, n, n_chunks,
-                                cap, "qlc")
+                                cap, "qlc", entry.scheme_id)
         return {"words": words.reshape(g, n_chunks, cap),
                 "scales": scales}
 
     wired = walk(groups, "")
-    return wired, GroupWireCodec(meta=meta, tables=tables,
+    return wired, GroupWireCodec(meta=meta, registry=registry,
                                  use_kernels=use_kernels)
 
 
-def wire_shape_structs(group_shapes, tables: CodecTables,
-                       capacity_words: int, mode: str = "qlc",
-                       mesh=None, wire_axes=("pod", "data")):
+def wire_shape_structs(group_shapes, tables, capacity_words: int,
+                       mode: str = "qlc", mesh=None,
+                       wire_axes=("pod", "data"),
+                       type_key_fn: Optional[Callable[[str], str]] = None):
     """Dry-run path: ShapeDtypeStructs of the wired groups (no data).
 
     ``capacity_words`` comes from the planner (real serving measures the
     exact max; the static wire size is what the roofline sees either
-    way).
+    way). ``tables`` accepts a registry exactly like
+    :func:`compress_groups`.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
+    registry = registry_of(tables)
     meta: Dict[str, LeafMeta] = {}
 
     axes = tuple(a for a in wire_axes
@@ -207,17 +300,19 @@ def wire_shape_structs(group_shapes, tables: CodecTables,
         leaf = node
         if not _eligible(leaf.shape):
             return leaf
+        entry = _entry_for(registry, prefix, type_key_fn)
         g, n, padded, n_chunks = _geometry(leaf.shape, mode, capacity_words)
         scales_sds = sds((g, padded // e4m3.BLOCK), jnp.bfloat16, 1)
         if mode == "e4m3":
             meta[prefix] = LeafMeta(tuple(leaf.shape[1:]), leaf.dtype, n,
-                                    n_chunks, 0, "e4m3")
+                                    n_chunks, 0, "e4m3", entry.scheme_id)
             return {"codes": sds((g, n_chunks, CHUNK), jnp.uint8, 1),
                     "scales": scales_sds}
         meta[prefix] = LeafMeta(tuple(leaf.shape[1:]), leaf.dtype, n,
-                                n_chunks, capacity_words, "qlc")
+                                n_chunks, capacity_words, "qlc",
+                                entry.scheme_id)
         return {"words": sds((g, n_chunks, capacity_words), jnp.uint32, 1),
                 "scales": scales_sds}
 
     wired = walk(group_shapes, "")
-    return wired, GroupWireCodec(meta=meta, tables=tables)
+    return wired, GroupWireCodec(meta=meta, registry=registry)

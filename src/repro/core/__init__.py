@@ -7,6 +7,11 @@ from repro.core.schemes import (  # noqa: F401
     TABLE2,
 )
 from repro.core.lut import CodecTables, build_tables, identity_tables  # noqa: F401
+from repro.core.registry import (  # noqa: F401
+    CodecEntry,
+    CodecRegistry,
+    registry_of,
+)
 from repro.core.adapt import (  # noqa: F401
     AdaptResult,
     calibrate_tables,

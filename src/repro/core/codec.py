@@ -15,7 +15,7 @@ parallelism comes from many chunks in flight, not from bit-level tricks.
 from __future__ import annotations
 
 import math
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +24,27 @@ import numpy as np
 from repro.core.lut import CodecTables
 
 MAX_CODE_BITS = 11  # paper schemes top out at 3 + 8
+
+
+def stack_decode_tables(tables_list: Sequence[CodecTables]):
+    """Stack decoder LUTs of several schemes for multi-LUT batched decode.
+
+    All schemes must share ``prefix_bits`` (3 for every paper scheme).
+    Returns ``(dec_lut [S, 256], area_symbol_bits [S, 2**p],
+    area_starts [S, 2**p], prefix_bits)`` as numpy arrays.
+    """
+    if not tables_list:
+        raise ValueError("need at least one CodecTables")
+    pb = tables_list[0].prefix_bits
+    for t in tables_list:
+        if t.prefix_bits != pb:
+            raise ValueError(
+                "multi-LUT decode needs a uniform prefix_bits, got "
+                f"{sorted({t.prefix_bits for t in tables_list})}")
+    dec = np.stack([t.dec_lut for t in tables_list])
+    sb = np.stack([t.area_symbol_bits for t in tables_list])
+    st = np.stack([t.area_starts for t in tables_list])
+    return dec, sb, st, pb
 
 
 def worst_case_words(chunk_symbols: int, max_code_bits: int = MAX_CODE_BITS
@@ -135,21 +156,49 @@ def decode_chunks(words: jnp.ndarray, tables: CodecTables,
     Returns:
       symbols: uint8 [..., n_chunks, K].
 
-    The loop over the K symbols of a chunk is sequential (`fori_loop`),
-    but every iteration is O(1) — the area code read from 3 bits gives
-    the code length directly (the paper's central claim) — and all chunks
-    decode in lockstep via vectorization.
+    Single-scheme specialization of :func:`decode_chunks_multi` (S=1,
+    every gather offset folds to zero) — one copy of the bit-window
+    loop serves both paths.
     """
-    _, _, dec_lut, area_sb, area_starts = _tables_to_jnp(tables)
-    prefix_bits = jnp.uint32(tables.prefix_bits)
-    prefix_mask = jnp.uint32((1 << tables.prefix_bits) - 1)
+    return decode_chunks_multi(words, [tables], jnp.int32(0),
+                               chunk_symbols)
+
+
+def decode_chunks_multi(words: jnp.ndarray,
+                        tables_list: Sequence[CodecTables],
+                        scheme_ids: jnp.ndarray,
+                        chunk_symbols: int) -> jnp.ndarray:
+    """Decode chunks encoded under DIFFERENT schemes in one vectorized
+    pass (multi-LUT batched decode, paper §7 deployment).
+
+    Args:
+      words: uint32 [..., n_chunks, capacity_words].
+      tables_list: the stacked schemes; ``scheme_ids`` index into it.
+      scheme_ids: int [n_chunks] or [..., n_chunks] — per-chunk slot
+        into ``tables_list``.
+      chunk_symbols: K, symbols per chunk (uniform across schemes).
+
+    Returns:
+      symbols: uint8 [..., n_chunks, K].
+
+    Mirrors :func:`decode_chunks` exactly — the per-symbol O(1) step
+    just gathers from LUTs flattened as ``[S * table_len]`` at offset
+    ``sid * table_len``, so chunks of every scheme decode in lockstep.
+    """
+    dec_np, sb_np, st_np, prefix = stack_decode_tables(tables_list)
+    s, a = sb_np.shape
+    dec_flat = jnp.asarray(dec_np, jnp.uint32).reshape(-1)   # [S*256]
+    sb_flat = jnp.asarray(sb_np, jnp.uint32).reshape(-1)     # [S*A]
+    st_flat = jnp.asarray(st_np, jnp.uint32).reshape(-1)
+    prefix_bits = jnp.uint32(prefix)
+    prefix_mask = jnp.uint32((1 << prefix) - 1)
 
     lead = words.shape[:-1]
     w = words.shape[-1]
     flat = words.reshape(-1, w)
     n = flat.shape[0]
-
-    dec32 = dec_lut.astype(jnp.uint32)
+    sid = jnp.broadcast_to(
+        jnp.asarray(scheme_ids, jnp.int32), lead).reshape(-1)
 
     def body(i, state):
         bitpos, out = state
@@ -161,15 +210,14 @@ def decode_chunks(words: jnp.ndarray, tables: CodecTables,
         window = (w0 >> shift) | jnp.where(
             shift == 0, jnp.uint32(0), w1 << (jnp.uint32(32) - shift))
         area = (window & prefix_mask).astype(jnp.int32)
-        sb = jnp.take(area_sb, area)                       # payload bits
+        sb = jnp.take(sb_flat, sid * a + area)
         payload = (window >> prefix_bits) & ((jnp.uint32(1) << sb) - 1)
-        rank = jnp.take(area_starts, area) + payload
-        sym = jnp.take(dec32, jnp.minimum(rank, 255).astype(jnp.int32))
+        rank = jnp.take(st_flat, sid * a + area) + payload
+        sym = jnp.take(dec_flat,
+                       sid * 256 + jnp.minimum(rank, 255).astype(jnp.int32))
         out = out.at[:, i].set(sym.astype(jnp.uint8))
         return bitpos + prefix_bits + sb, out
 
-    # Derive the initial carry from the input so it inherits any varying
-    # manual axes (required when this runs inside shard_map).
     bitpos0 = flat[:, 0] & jnp.uint32(0)
     out0 = (jnp.zeros((n, chunk_symbols), dtype=jnp.uint8)
             | (flat[:, :1] & jnp.uint32(0)).astype(jnp.uint8))

@@ -14,16 +14,25 @@ Entry points
                                      the kernel, symbols stay in VMEM.
   decode_dequantize                — fused words+scales -> float.
 
+Both decode entry points take **per-group LUT operands**: ``tables``
+may be a single ``CodecTables`` or a sequence of them, and
+``scheme_ids`` (int [n_chunks]) assigns each chunk its scheme — one
+dispatch decodes a payload whose groups were encoded under different
+schemes (paper §7 multi-LUT deployment; see ``repro.core.registry``).
+
 The fused pair is what the compressed collectives
 (``repro.comm.compressed``), the weight wire (``repro.comm.weights``)
 and the serving/checkpoint layers call on their hot paths.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import codec as _codec
 from repro.core.lut import CodecTables
 from repro.kernels import qlc_decode, qlc_encode, qlc_fused
 from repro.kernels import histogram256 as _hist
@@ -88,23 +97,54 @@ def _pad_rows(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
 # Single-stage kernels
 # --------------------------------------------------------------------------
 
-def decode(words: jnp.ndarray, tables: CodecTables, chunk_symbols: int,
-           *, tile_chunks: int | None = None, interpret: bool | None = None
+def _stacked_luts(tables: CodecTables | Sequence[CodecTables]):
+    """Marshal single or multiple CodecTables into stacked LUT operands."""
+    tables_list = ([tables] if isinstance(tables, CodecTables)
+                   else list(tables))
+    dec, sb, st, prefix_bits = _codec.stack_decode_tables(tables_list)
+    return (jnp.asarray(dec, dtype=jnp.int32),
+            jnp.asarray(sb, dtype=jnp.int32),
+            jnp.asarray(st, dtype=jnp.int32),
+            prefix_bits, len(tables_list))
+
+
+def _sid_rows(scheme_ids, n_chunks: int, n_schemes: int,
+              tile_chunks: int) -> jnp.ndarray:
+    """Per-chunk scheme slots as the kernels' [n_padded, 1] i32 operand."""
+    if scheme_ids is None:
+        sid = jnp.zeros((n_chunks,), jnp.int32)
+    else:
+        sid = jnp.asarray(scheme_ids, jnp.int32).reshape(-1)
+        assert sid.shape[0] == n_chunks, (sid.shape, n_chunks)
+    # Out-of-range slots clamp at the gather (jnp.take clips); callers
+    # are expected to pass slots < n_schemes.
+    del n_schemes
+    return _pad_rows(sid[:, None], tile_chunks)
+
+
+def decode(words: jnp.ndarray,
+           tables: CodecTables | Sequence[CodecTables],
+           chunk_symbols: int, *, scheme_ids=None,
+           tile_chunks: int | None = None, interpret: bool | None = None
            ) -> jnp.ndarray:
-    """Decode [n_chunks, CW] u32 -> [n_chunks, K] u8 via the Pallas kernel."""
+    """Decode [n_chunks, CW] u32 -> [n_chunks, K] u8 via the Pallas kernel.
+
+    ``tables`` may be a sequence of CodecTables with ``scheme_ids``
+    (int [n_chunks]) selecting each chunk's scheme — multi-LUT batched
+    decode in one dispatch.
+    """
     if interpret is None:
         interpret = _interpret_default()
     n_chunks = words.shape[0]
     if tile_chunks is None:
         tile_chunks = auto_tile_chunks(chunk_symbols, n_chunks)
+    dec, sb, st, prefix_bits, n_schemes = _stacked_luts(tables)
     padded = _pad_rows(words, tile_chunks)
+    sid = _sid_rows(scheme_ids, n_chunks, n_schemes, tile_chunks)
     out = qlc_decode.decode_pallas(
-        padded,
-        jnp.asarray(tables.dec_lut, dtype=jnp.int32),
-        jnp.asarray(tables.area_symbol_bits, dtype=jnp.int32),
-        jnp.asarray(tables.area_starts, dtype=jnp.int32),
+        padded, sid, dec, sb, st,
         chunk_symbols=chunk_symbols,
-        prefix_bits=tables.prefix_bits,
+        prefix_bits=prefix_bits,
         tile_chunks=tile_chunks,
         interpret=interpret,
     )
@@ -198,8 +238,9 @@ def quantize_encode(x: jnp.ndarray, tables: CodecTables,
 
 
 def decode_dequantize(words: jnp.ndarray, scales: jnp.ndarray,
-                      tables: CodecTables, chunk_symbols: int,
-                      *, tile_chunks: int | None = None,
+                      tables: CodecTables | Sequence[CodecTables],
+                      chunk_symbols: int, *, scheme_ids=None,
+                      tile_chunks: int | None = None,
                       out_dtype=jnp.float32,
                       interpret: bool | None = None) -> jnp.ndarray:
     """Fused QLC-decode + e4m3-dequantize.
@@ -207,8 +248,11 @@ def decode_dequantize(words: jnp.ndarray, scales: jnp.ndarray,
     Args:
       words: u32 [n_chunks, CW] packed slots.
       scales: f32 [n_chunks, K/32] block-32 scales (chunk-major).
-      tables: codec tables.
+      tables: codec tables — one ``CodecTables`` or a sequence of them
+        (per-group LUT operands).
       chunk_symbols: K.
+      scheme_ids: int [n_chunks] slot of each chunk's scheme into
+        ``tables`` when a sequence is given (multi-LUT batched decode).
       out_dtype: output float dtype (f32 default; bf16 casts in-kernel).
 
     Returns:
@@ -220,16 +264,15 @@ def decode_dequantize(words: jnp.ndarray, scales: jnp.ndarray,
     n_chunks = words.shape[0]
     if tile_chunks is None:
         tile_chunks = auto_tile_chunks(chunk_symbols, n_chunks)
+    dec, sb, st, prefix_bits, n_schemes = _stacked_luts(tables)
     padded_w = _pad_rows(words, tile_chunks)
     padded_s = _pad_rows(scales.astype(jnp.float32), tile_chunks)
+    sid = _sid_rows(scheme_ids, n_chunks, n_schemes, tile_chunks)
     out = qlc_fused.fused_decode_pallas(
-        padded_w, padded_s,
-        jnp.asarray(tables.dec_lut, dtype=jnp.int32),
-        jnp.asarray(tables.area_symbol_bits, dtype=jnp.int32),
-        jnp.asarray(tables.area_starts, dtype=jnp.int32),
+        padded_w, padded_s, sid, dec, sb, st,
         jnp.asarray(e4m3.decode_table(), dtype=jnp.float32),
         chunk_symbols=chunk_symbols,
-        prefix_bits=tables.prefix_bits,
+        prefix_bits=prefix_bits,
         tile_chunks=tile_chunks,
         out_dtype=out_dtype,
         interpret=interpret,

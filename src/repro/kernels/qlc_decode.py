@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: chunk-parallel QLC decode.
+"""Pallas TPU kernel: chunk-parallel QLC decode (multi-LUT capable).
 
 TPU-native adaptation of the paper's hardware decoder (DESIGN.md §3):
 the 3-bit area code read from the bit window gives the code length in
@@ -6,10 +6,17 @@ O(1) — no tree walk — and throughput comes from decoding a tile of
 chunks in lockstep (chunks map to vector lanes; the fori_loop over the
 K symbols of a chunk is the only sequential dimension).
 
+The LUT operands are **stacked per scheme** — ``dec_lut [S, 256]``,
+``area_sb/area_starts [S, 2**prefix]`` — and every chunk carries a
+scheme slot index (``sid``), so ONE dispatch decodes groups encoded
+under different schemes (the paper's §7 multi-LUT deployment: one LUT
+per tensor type). Single-scheme callers pass S=1 and a zero sid; the
+extra gather offset folds into the existing LUT gathers for free.
+
 VMEM budget per program (defaults TILE_CHUNKS=8, K=1024, CW=384):
   words   8*384*4   = 12 KiB
   out     8*1024    =  8 KiB
-  LUTs    256*4*3   =  3 KiB
+  LUTs    S*256*4*3 =  3 KiB per scheme
 well under the ~16 MiB/core VMEM of TPU v5e.
 """
 from __future__ import annotations
@@ -23,13 +30,19 @@ from jax.experimental import pallas as pl
 DEFAULT_TILE_CHUNKS = 8
 
 
-def _decode_kernel(words_ref, dec_lut_ref, area_sb_ref, area_starts_ref,
-                   out_ref, *, chunk_symbols: int, prefix_bits: int):
+def _decode_kernel(words_ref, sid_ref, dec_lut_ref, area_sb_ref,
+                   area_starts_ref, out_ref, *, chunk_symbols: int,
+                   prefix_bits: int):
     words = words_ref[...]                       # (TC, CW) uint32
     tc, cw = words.shape
-    dec = dec_lut_ref[...].astype(jnp.uint32)    # (256,)
-    sb_t = area_sb_ref[...].astype(jnp.uint32)   # (2**prefix,)
-    st_t = area_starts_ref[...].astype(jnp.uint32)
+    n_area = area_sb_ref.shape[-1]
+    # Stacked (S, 256)/(S, A) LUTs, flattened so the per-symbol gather
+    # is a single indexed load at offset sid*len — the multi-LUT decode
+    # costs nothing over the single-LUT one.
+    dec = dec_lut_ref[...].astype(jnp.uint32).reshape(-1)
+    sb_t = area_sb_ref[...].astype(jnp.uint32).reshape(-1)
+    st_t = area_starts_ref[...].astype(jnp.uint32).reshape(-1)
+    sid = sid_ref[...][:, 0].astype(jnp.int32)   # (TC,) scheme slot
     pmask = jnp.uint32((1 << prefix_bits) - 1)
     pbits = jnp.uint32(prefix_bits)
 
@@ -42,10 +55,12 @@ def _decode_kernel(words_ref, dec_lut_ref, area_sb_ref, area_starts_ref,
         window = (w0 >> shift) | jnp.where(
             shift == 0, jnp.uint32(0), w1 << (jnp.uint32(32) - shift))
         area = (window & pmask).astype(jnp.int32)
-        sb = jnp.take(sb_t, area)
+        sb = jnp.take(sb_t, sid * n_area + area)
         payload = (window >> pbits) & ((jnp.uint32(1) << sb) - jnp.uint32(1))
-        rank = jnp.take(st_t, area) + payload
-        sym = jnp.take(dec, jnp.minimum(rank, jnp.uint32(255)).astype(jnp.int32))
+        rank = jnp.take(st_t, sid * n_area + area) + payload
+        sym = jnp.take(
+            dec,
+            sid * 256 + jnp.minimum(rank, jnp.uint32(255)).astype(jnp.int32))
         out_ref[:, pl.dslice(i, 1)] = sym.astype(jnp.uint8)[:, None]
         return bitpos + pbits + sb
 
@@ -57,17 +72,24 @@ def _decode_kernel(words_ref, dec_lut_ref, area_sb_ref, area_starts_ref,
     jax.jit,
     static_argnames=("chunk_symbols", "prefix_bits", "tile_chunks",
                      "interpret"))
-def decode_pallas(words: jnp.ndarray, dec_lut: jnp.ndarray,
-                  area_sb: jnp.ndarray, area_starts: jnp.ndarray,
+def decode_pallas(words: jnp.ndarray, scheme_ids: jnp.ndarray,
+                  dec_lut: jnp.ndarray, area_sb: jnp.ndarray,
+                  area_starts: jnp.ndarray,
                   *, chunk_symbols: int, prefix_bits: int = 3,
                   tile_chunks: int = DEFAULT_TILE_CHUNKS,
                   interpret: bool = True) -> jnp.ndarray:
     """Decode [n_chunks, capacity_words] u32 slots -> [n_chunks, K] u8.
 
-    n_chunks must be a multiple of tile_chunks (ops.py pads).
+    ``scheme_ids`` is int32 [n_chunks, 1] — each chunk's slot into the
+    stacked ``dec_lut [S, 256]`` / ``area_* [S, 2**prefix]`` operands
+    (all-zero for single-scheme decode). n_chunks must be a multiple of
+    tile_chunks (ops.py pads).
     """
     n_chunks, cw = words.shape
     assert n_chunks % tile_chunks == 0, (n_chunks, tile_chunks)
+    assert dec_lut.ndim == 2 and area_sb.ndim == 2, (
+        "stacked LUT operands required: dec_lut [S, 256], area_* [S, A]")
+    s, a = area_sb.shape
     grid = (n_chunks // tile_chunks,)
 
     kernel = functools.partial(
@@ -78,11 +100,12 @@ def decode_pallas(words: jnp.ndarray, dec_lut: jnp.ndarray,
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile_chunks, cw), lambda i: (i, 0)),
-            pl.BlockSpec((dec_lut.shape[0],), lambda i: (0,)),
-            pl.BlockSpec((area_sb.shape[0],), lambda i: (0,)),
-            pl.BlockSpec((area_starts.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((tile_chunks, 1), lambda i: (i, 0)),
+            pl.BlockSpec((s, dec_lut.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((s, a), lambda i: (0, 0)),
+            pl.BlockSpec((s, a), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((tile_chunks, chunk_symbols), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_chunks, chunk_symbols), jnp.uint8),
         interpret=interpret,
-    )(words, dec_lut, area_sb, area_starts)
+    )(words, scheme_ids, dec_lut, area_sb, area_starts)

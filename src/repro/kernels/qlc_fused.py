@@ -29,7 +29,10 @@ The mirror decode kernel reads packed words, walks the chunk with the
 paper's O(1) per-symbol step (3-bit area code → length, no tree walk),
 and multiplies each decoded symbol's table value by its block scale
 in-register, producing float output directly — decoded symbols also
-never touch HBM.
+never touch HBM. Its LUT operands are stacked per scheme with a
+per-chunk scheme slot, so one dispatch decodes chunks encoded under
+different schemes (paper §7 multi-LUT; see ``qlc_decode`` for the
+operand layout).
 
 VMEM per program (TILE_CHUNKS=8, K=1024, CW=384):
   x f32 32 KiB, words 12 KiB, codes+lens+offsets 3*32 KiB, scales
@@ -219,15 +222,20 @@ def fused_encode_pallas(x: jnp.ndarray, enc_code: jnp.ndarray,
 # Fused decode -> dequantize
 # --------------------------------------------------------------------------
 
-def _fused_decode_kernel(words_ref, scales_ref, dec_lut_ref, area_sb_ref,
-                         area_starts_ref, value_tab_ref, out_ref, sym_ref,
-                         *, chunk_symbols: int, prefix_bits: int,
-                         out_dtype):
+def _fused_decode_kernel(words_ref, scales_ref, sid_ref, dec_lut_ref,
+                         area_sb_ref, area_starts_ref, value_tab_ref,
+                         out_ref, sym_ref, *, chunk_symbols: int,
+                         prefix_bits: int, out_dtype):
     words = words_ref[...]                       # (TC, CW) uint32
     tc, cw = words.shape
-    dec = dec_lut_ref[...].astype(jnp.uint32)    # (256,)
-    sb_t = area_sb_ref[...].astype(jnp.uint32)   # (2**prefix,)
-    st_t = area_starts_ref[...].astype(jnp.uint32)
+    n_area = area_sb_ref.shape[-1]
+    # Stacked per-scheme LUTs (S, 256)/(S, A), flattened: each chunk's
+    # sid offsets every LUT gather, so one dispatch decodes a tile whose
+    # chunks were encoded under different schemes (§7 multi-LUT).
+    dec = dec_lut_ref[...].astype(jnp.uint32).reshape(-1)
+    sb_t = area_sb_ref[...].astype(jnp.uint32).reshape(-1)
+    st_t = area_starts_ref[...].astype(jnp.uint32).reshape(-1)
+    sid = sid_ref[...][:, 0].astype(jnp.int32)   # (TC,) scheme slot
     vtab = value_tab_ref[...]                    # (256,) f32 e4m3 values
     pmask = jnp.uint32((1 << prefix_bits) - 1)
     pbits = jnp.uint32(prefix_bits)
@@ -247,10 +255,12 @@ def _fused_decode_kernel(words_ref, scales_ref, dec_lut_ref, area_sb_ref,
         window = (w0 >> shift) | jnp.where(
             shift == 0, jnp.uint32(0), w1 << (jnp.uint32(32) - shift))
         area = (window & pmask).astype(jnp.int32)
-        sb = jnp.take(sb_t, area)
+        sb = jnp.take(sb_t, sid * n_area + area)
         payload = (window >> pbits) & ((jnp.uint32(1) << sb) - jnp.uint32(1))
-        rank = jnp.take(st_t, area) + payload
-        sym = jnp.take(dec, jnp.minimum(rank, jnp.uint32(255)).astype(jnp.int32))
+        rank = jnp.take(st_t, sid * n_area + area) + payload
+        sym = jnp.take(
+            dec,
+            sid * 256 + jnp.minimum(rank, jnp.uint32(255)).astype(jnp.int32))
         sym_ref[:, pl.dslice(i, 1)] = sym.astype(jnp.int32)[:, None]
         return bitpos + pbits + sb
 
@@ -268,8 +278,9 @@ def _fused_decode_kernel(words_ref, scales_ref, dec_lut_ref, area_sb_ref,
     static_argnames=("chunk_symbols", "prefix_bits", "tile_chunks",
                      "out_dtype", "interpret"))
 def fused_decode_pallas(words: jnp.ndarray, scales: jnp.ndarray,
-                        dec_lut: jnp.ndarray, area_sb: jnp.ndarray,
-                        area_starts: jnp.ndarray, value_tab: jnp.ndarray,
+                        scheme_ids: jnp.ndarray, dec_lut: jnp.ndarray,
+                        area_sb: jnp.ndarray, area_starts: jnp.ndarray,
+                        value_tab: jnp.ndarray,
                         *, chunk_symbols: int, prefix_bits: int = 3,
                         tile_chunks: int = DEFAULT_TILE_CHUNKS,
                         out_dtype=jnp.float32,
@@ -277,13 +288,19 @@ def fused_decode_pallas(words: jnp.ndarray, scales: jnp.ndarray,
     """Decode+dequantize [n_chunks, CW] u32 slots -> [n_chunks, K] float.
 
     ``scales`` is [n_chunks, K/32] f32 (block-32 scales, chunk-major).
-    ``out_dtype`` (f32 default, bf16 for weight-wire consumers) is cast
-    in-register before the store — same rounding as an external cast.
-    n_chunks must be a multiple of tile_chunks (ops.py pads).
+    ``scheme_ids`` is int32 [n_chunks, 1]: each chunk's slot into the
+    stacked ``dec_lut [S, 256]`` / ``area_* [S, 2**prefix]`` operands
+    (all-zero for single-scheme payloads). ``out_dtype`` (f32 default,
+    bf16 for weight-wire consumers) is cast in-register before the
+    store — same rounding as an external cast. n_chunks must be a
+    multiple of tile_chunks (ops.py pads).
     """
     n_chunks, cw = words.shape
     assert n_chunks % tile_chunks == 0, (n_chunks, tile_chunks)
     assert chunk_symbols % BLOCK == 0, chunk_symbols
+    assert dec_lut.ndim == 2 and area_sb.ndim == 2, (
+        "stacked LUT operands required: dec_lut [S, 256], area_* [S, A]")
+    s, a = area_sb.shape
     grid = (n_chunks // tile_chunks,)
 
     kernel = functools.partial(
@@ -297,9 +314,10 @@ def fused_decode_pallas(words: jnp.ndarray, scales: jnp.ndarray,
             pl.BlockSpec((tile_chunks, cw), lambda i: (i, 0)),
             pl.BlockSpec((tile_chunks, chunk_symbols // BLOCK),
                          lambda i: (i, 0)),
-            pl.BlockSpec((dec_lut.shape[0],), lambda i: (0,)),
-            pl.BlockSpec((area_sb.shape[0],), lambda i: (0,)),
-            pl.BlockSpec((area_starts.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((tile_chunks, 1), lambda i: (i, 0)),
+            pl.BlockSpec((s, dec_lut.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((s, a), lambda i: (0, 0)),
+            pl.BlockSpec((s, a), lambda i: (0, 0)),
             pl.BlockSpec((value_tab.shape[0],), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((tile_chunks, chunk_symbols),
@@ -309,4 +327,4 @@ def fused_decode_pallas(words: jnp.ndarray, scales: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((tile_chunks, chunk_symbols),
                                    jnp.int32)],
         interpret=interpret,
-    )(words, scales, dec_lut, area_sb, area_starts, value_tab)
+    )(words, scales, scheme_ids, dec_lut, area_sb, area_starts, value_tab)

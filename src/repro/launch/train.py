@@ -19,8 +19,10 @@ import logging
 import jax
 import jax.numpy as jnp
 
-from repro.comm import CommConfig, calibrate_for_gradients
+from repro.comm import calibrate_for_gradients
+from repro.comm.calibrate import histogram_of_tree
 from repro.configs import get_config, reduced as make_reduced
+from repro.core import CodecRegistry
 from repro.data import DataConfig, SyntheticDataset
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import init_params
@@ -80,12 +82,17 @@ def main():
         baseline = jax.jit(make_baseline_step(cfg, opt_cfg, train_cfg))
         if args.comm == "qlc":
             b0 = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+            # per-tensor-type registry: the gradient reduce-scatter and
+            # the parameter all-gather get separately calibrated codecs
             tables, plan = calibrate_for_gradients(cfg, params, b0)
-            comm_cfg = CommConfig.from_plan(plan)
+            registry = CodecRegistry()
+            registry.register_tables("grads", tables, plan)
+            registry.register("params", histogram_of_tree(params),
+                              chunk_symbols=plan.chunk_symbols)
             step = jax.jit(make_compressed_step(
-                cfg, opt_cfg, train_cfg, mesh, tables, comm_cfg))
+                cfg, opt_cfg, train_cfg, mesh, registry))
             opt_state = init_compressed_opt_state(
-                cfg, mesh, train_cfg, comm_cfg, opt_cfg)
+                cfg, mesh, train_cfg, registry, opt_cfg)
         else:
             step = baseline
             opt_state = optm.init_state(params, opt_cfg)

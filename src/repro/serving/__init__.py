@@ -1,3 +1,3 @@
 from repro.serving.engine import (  # noqa: F401
-    ServeConfig, compress_params_for_serving, generate, generate_from_wire,
-    open_params, prefill)
+    ServeConfig, codec_from_manifest, compress_params_for_serving,
+    generate, generate_from_wire, open_params, prefill, serving_manifest)

@@ -10,7 +10,11 @@ parameter stack as block-32 e4m3 + QLC words (``repro.comm.weights``)
 and ``open_params`` / ``generate_from_wire`` decode them in-graph via
 the fused decode→dequantize Pallas kernel — the production path where
 FSDP weight gathers move QLC words instead of bf16 and the codec runs
-right after the gather.
+right after the gather. The codec argument may be a per-tensor-type
+``CodecRegistry`` (paper §7 multi-LUT): each leaf records its
+scheme-id, and ``serving_manifest`` / ``codec_from_manifest``
+round-trip the whole recipe (registry included) through JSON so a
+serving host reloads it without out-of-band table agreement.
 """
 from __future__ import annotations
 
@@ -86,17 +90,35 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray,
 # --------------------------------------------------------------------------
 
 def compress_params_for_serving(params, tables, mode: str = "qlc",
-                                use_kernels: bool = True):
+                                use_kernels: bool = True,
+                                type_key_fn=None):
     """Wire a parameter tree for compressed serving.
 
     Large (≥64Ki-element-per-group) 2D+ leaves become block-32 e4m3
     symbols packed into QLC slots with exactly-measured capacity (zero
-    escapes); everything else stays dense. Returns ``(wired_params,
-    wire_codec)``; open with :func:`open_params`.
+    escapes); everything else stays dense. ``tables`` is a single
+    ``CodecTables`` or a per-tensor-type ``CodecRegistry`` (with
+    optional ``type_key_fn(leaf_path) -> type name``); each leaf's
+    scheme-id lands in the wire codec's manifest. Returns
+    ``(wired_params, wire_codec)``; open with :func:`open_params`.
     """
     from repro.comm.weights import compress_groups
     return compress_groups(params, tables, mode=mode,
-                           use_kernels=use_kernels)
+                           use_kernels=use_kernels,
+                           type_key_fn=type_key_fn)
+
+
+def serving_manifest(wire_codec) -> dict:
+    """JSON-able manifest of a wired parameter tree: per-leaf geometry
+    + scheme-ids + the codec registry."""
+    return wire_codec.manifest()
+
+
+def codec_from_manifest(manifest: dict, use_kernels: bool = True):
+    """Rebuild a ``GroupWireCodec`` from :func:`serving_manifest` output
+    (tables are re-derived bit-identically from the registry)."""
+    from repro.comm.weights import GroupWireCodec
+    return GroupWireCodec.from_manifest(manifest, use_kernels=use_kernels)
 
 
 def open_params(wired_params, wire_codec):

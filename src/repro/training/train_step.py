@@ -38,10 +38,50 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.comm import CommConfig, qlc_all_gather, qlc_reduce_scatter
 from repro.configs.base import ModelConfig
-from repro.core.lut import CodecTables
+from repro.core.registry import CodecRegistry
 from repro.models import init_params, next_token_loss, param_specs
 from repro.parallel import sharding as shd
 from repro.training import optimizer as opt
+
+GRAD_TYPE = "grads"      # registry key for the gradient reduce-scatter
+PARAM_TYPE = "params"    # registry key for the parameter all-gather
+
+
+def resolve_step_codecs(codec, comm_cfg: CommConfig = None, *,
+                        grad_key: str = GRAD_TYPE,
+                        param_key: str = PARAM_TYPE):
+    """Per-collective codec selection for the compressed step.
+
+    ``codec`` is either a bare ``CodecTables`` (legacy: one LUT + one
+    ``comm_cfg`` for both collectives) or a ``CodecRegistry`` holding a
+    ``grad_key`` entry (gradient reduce-scatter wire) and optionally a
+    ``param_key`` entry (updated-parameter all-gather wire; falls back
+    to the grad entry). With a registry, ``comm_cfg`` acts as an
+    override source for the non-plan knobs (``enabled``,
+    ``use_kernels``, ``scale_dtype``) on top of each entry's calibrated
+    plan. Returns ``((rs_tables, rs_cfg), (ag_tables, ag_cfg))``.
+    """
+    if isinstance(codec, CodecRegistry):
+        g = codec.get(grad_key)
+        if g is None:
+            raise KeyError(
+                f"registry has no {grad_key!r} entry; have {codec.names()}")
+        p = codec.get(param_key) or g
+        overrides = {}
+        if comm_cfg is not None:
+            overrides = dict(enabled=comm_cfg.enabled,
+                             use_kernels=comm_cfg.use_kernels,
+                             scale_dtype=comm_cfg.scale_dtype)
+        rs_cfg = g.config(**overrides)
+        ag_cfg = p.config(**overrides)
+        if rs_cfg.chunk_symbols != ag_cfg.chunk_symbols:
+            raise ValueError(
+                "grad and param codecs must share chunk_symbols, got "
+                f"{rs_cfg.chunk_symbols} vs {ag_cfg.chunk_symbols}")
+        return (g.tables, rs_cfg), (p.tables, ag_cfg)
+    if comm_cfg is None:
+        raise TypeError("bare CodecTables needs an explicit CommConfig")
+    return (codec, comm_cfg), (codec, comm_cfg)
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes=None):
@@ -225,9 +265,19 @@ def _unflatten_local(flat: jnp.ndarray, meta) -> Any:
 
 def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
                          train_cfg: TrainConfig, mesh: Mesh,
-                         tables: CodecTables, comm_cfg: CommConfig
-                         ) -> Callable:
-    """train_step(params, flat_opt_state, batch) for compressed mode."""
+                         tables, comm_cfg: CommConfig = None, *,
+                         grad_key: str = GRAD_TYPE,
+                         param_key: str = PARAM_TYPE) -> Callable:
+    """train_step(params, flat_opt_state, batch) for compressed mode.
+
+    ``tables`` is a legacy ``CodecTables`` (with ``comm_cfg``) or a
+    ``CodecRegistry``: the gradient reduce-scatter then uses the
+    ``grad_key`` codec and the parameter all-gather the ``param_key``
+    codec — per-collective tensor-type selection (paper §7).
+    """
+    (rs_tables, rs_cfg), (ag_tables, ag_cfg) = resolve_step_codecs(
+        tables, comm_cfg, grad_key=grad_key, param_key=param_key)
+    comm_cfg = rs_cfg
     loss_fn = _loss_fn(model_cfg)
     dp_axes = dp_axes_in(mesh, train_cfg)
     dp_sizes = {a: mesh.shape[a] for a in dp_axes}
@@ -293,7 +343,7 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
         ok = jnp.bool_(True)
         for ax in rs_order:                     # intra-pod, then cross-pod
             seg, ok_i = qlc_reduce_scatter(
-                seg, ax, dp_sizes[ax], tables, comm_cfg)
+                seg, ax, dp_sizes[ax], rs_tables, rs_cfg)
             ok &= ok_i
         seg = seg / dp_total                    # mean over dp
 
@@ -315,7 +365,7 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
 
         full = new_seg
         for ax in reversed(rs_order):           # cross-pod, then intra-pod
-            full, ok_i = qlc_all_gather(full, ax, tables, comm_cfg)
+            full, ok_i = qlc_all_gather(full, ax, ag_tables, ag_cfg)
             ok &= ok_i
         new_params = _unflatten_local(full[:n_local], meta)
         new_params = jax.tree.map(lambda a, old: a.astype(old.dtype),
@@ -347,9 +397,14 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
 
 
 def init_compressed_opt_state(model_cfg: ModelConfig, mesh: Mesh,
-                              train_cfg: TrainConfig, comm_cfg: CommConfig,
+                              train_cfg: TrainConfig, comm_cfg,
                               opt_cfg: opt.OptConfig):
-    """Global ZeRO-1 state arrays [*dp_dims, model, seg]."""
+    """Global ZeRO-1 state arrays [*dp_dims, model, seg].
+
+    ``comm_cfg``: a ``CommConfig``, or the ``CodecRegistry`` passed to
+    ``make_compressed_step`` (geometry comes from its grad entry)."""
+    if isinstance(comm_cfg, CodecRegistry):
+        (_, comm_cfg), _ = resolve_step_codecs(comm_cfg)
     _, _, seg, _ = flat_geometry(model_cfg, mesh, train_cfg, comm_cfg)
     dp_axes = dp_axes_in(mesh, train_cfg)
     lead = tuple(mesh.shape[a] for a in dp_axes) + (mesh.shape["model"],)

@@ -1,0 +1,484 @@
+"""Codec registry + self-describing container tests.
+
+Covers the PR-2 subsystem end to end: header encode/parse (incl.
+fuzzing through the hypothesis-compat shim), mixed-scheme container
+streams decoded with ONLY the registry (no out-of-band CommConfig) on
+both the pure-JAX and Pallas/interpret kernel paths, registry
+serialization -> reload -> bit-identical decode, multi-LUT batched
+decode through the kernel entry points, per-leaf scheme-ids in the
+weight-wire manifest, and escape-pool overflow propagating ``ok=False``
+through ``decompress_values`` and the ``qlc_*`` collectives.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig, compress_values, decompress_values
+from repro.comm import container as qc
+from repro.core import CodecRegistry, TABLE1, TABLE2, distributions
+from repro.quant import e4m3
+from tests._hypothesis_compat import given, settings, st
+from tests.md_util import run_md
+
+
+@pytest.fixture(scope="module")
+def registry():
+    reg = CodecRegistry()
+    reg.register("ffn1_act", distributions.ffn1_counts(1 << 16),
+                 scheme=TABLE1, chunk_symbols=512)
+    reg.register("ffn2_act", distributions.ffn2_counts(1 << 16),
+                 scheme=TABLE2, chunk_symbols=512)
+    reg.register("grad", distributions.grad_counts(1 << 16),
+                 chunk_symbols=512)
+    return reg
+
+
+class TestRegistry:
+    def test_distinct_types_distinct_ids(self, registry):
+        ids = {registry[n].scheme_id for n in ("ffn1_act", "ffn2_act")}
+        assert len(ids) == 2
+
+    def test_identical_tables_dedupe_to_one_id(self):
+        reg = CodecRegistry()
+        counts = distributions.ffn1_counts(1 << 16)
+        a = reg.register("a", counts, scheme=TABLE1)
+        b = reg.register("b", counts, scheme=TABLE1)  # same tables
+        assert a.scheme_id == b.scheme_id
+        assert len(reg) == 1
+        assert reg["b"].tables is a.tables
+
+    def test_lookup_errors_are_informative(self, registry):
+        with pytest.raises(KeyError, match="ffn1_act"):
+            registry["nope"]
+        with pytest.raises(KeyError):
+            registry.by_id(999)
+
+    def test_serialization_roundtrip_bit_identical(self, registry):
+        reg2 = CodecRegistry.from_json(registry.to_json())
+        assert reg2.names() == registry.names()
+        for name in registry.names():
+            a, b = registry[name], reg2[name]
+            assert a.scheme_id == b.scheme_id
+            np.testing.assert_array_equal(a.tables.enc_code,
+                                          b.tables.enc_code)
+            np.testing.assert_array_equal(a.tables.enc_len,
+                                          b.tables.enc_len)
+            np.testing.assert_array_equal(a.tables.dec_lut,
+                                          b.tables.dec_lut)
+            assert a.plan == b.plan
+
+    def test_prebuilt_tables_survive_serialization(self, t1_tables):
+        """Entries registered from pre-built tables (no histogram, e.g.
+        the legacy registry_of wrap) must reload bit-identically: the
+        serialized symbol RANKING, not the placeholder histogram, is
+        what rebuilds the tables."""
+        from repro.core import registry_of
+        reg = registry_of(t1_tables)
+        reg2 = CodecRegistry.from_json(reg.to_json())
+        t = reg2.entries()[0].tables
+        np.testing.assert_array_equal(t.dec_lut, t1_tables.dec_lut)
+        np.testing.assert_array_equal(t.enc_code, t1_tables.enc_code)
+        np.testing.assert_array_equal(t.enc_len, t1_tables.enc_len)
+
+    def test_corrupted_registry_json_detected(self, registry):
+        import json
+        d = json.loads(registry.to_json())
+        o = d["entries"][0]["order"]
+        o[0], o[1] = o[1], o[0]                  # tamper with the ranking
+        with pytest.raises(ValueError, match="digest"):
+            CodecRegistry.from_json_dict(d)
+
+    def test_entry_config_from_plan(self, registry):
+        cfg = registry.config_for("ffn1_act", use_kernels=True)
+        assert cfg.chunk_symbols == 512
+        assert cfg.use_kernels
+        assert cfg.capacity_words == registry["ffn1_act"].plan.capacity_words
+
+
+class TestHeader:
+    def _roundtrip(self, h):
+        words = qc.pack_header(h)
+        # feed a buffer long enough for the declared body
+        buf = np.concatenate([words,
+                              np.zeros(h.body_words, np.uint32)])
+        return qc.parse_header(buf)
+
+    def test_roundtrip_all_fields(self):
+        h = qc.ContainerHeader(
+            scheme_id=3, coded=True, chunk_symbols=512,
+            capacity_words=120, n_chunks=7, pool_slots=2,
+            n_valid=3500, scale_dtype="bfloat16",
+            n_scales=112, prefix_bits=3)
+        assert self._roundtrip(h) == h
+
+    def test_n_valid_64bit_split(self):
+        h = qc.ContainerHeader(
+            scheme_id=0, coded=True, chunk_symbols=1024,
+            capacity_words=1, n_chunks=1 << 26, pool_slots=1,
+            n_valid=(1 << 35) + 17, scale_dtype=None,
+            n_scales=0, prefix_bits=3)
+        w = qc.pack_header(h)
+        assert int(w[8]) == ((1 << 35) + 17) & 0xFFFFFFFF
+        assert int(w[9]) == ((1 << 35) + 17) >> 32
+
+    @settings(max_examples=30, deadline=None)
+    @given(scheme_id=st.integers(0, 0xFFFF),
+           coded=st.booleans(),
+           log_k=st.integers(2, 10),
+           capacity_words=st.integers(1, 512),
+           n_chunks=st.integers(0, 2000),
+           pool_slots=st.integers(1, 16),
+           scale_code=st.integers(0, 2),
+           prefix_bits=st.integers(1, 4))
+    def test_fuzz_roundtrip(self, scheme_id, coded, log_k, capacity_words,
+                            n_chunks, pool_slots, scale_code, prefix_bits):
+        k = 1 << log_k
+        h = qc.ContainerHeader(
+            scheme_id=scheme_id, coded=coded, chunk_symbols=k,
+            capacity_words=capacity_words, n_chunks=n_chunks,
+            pool_slots=pool_slots, n_valid=n_chunks * k,
+            scale_dtype={0: None, 1: "bfloat16", 2: "float32"}[scale_code],
+            n_scales=n_chunks * k // 32, prefix_bits=prefix_bits)
+        assert self._roundtrip(h) == h
+
+    def test_bad_magic_rejected(self):
+        h = qc.ContainerHeader(
+            scheme_id=0, coded=True, chunk_symbols=512, capacity_words=1,
+            n_chunks=0, pool_slots=1, n_valid=0, scale_dtype=None,
+            n_scales=0, prefix_bits=3)
+        words = qc.pack_header(h)
+        buf = np.concatenate([words, np.zeros(h.body_words, np.uint32)])
+        bad = buf.copy()
+        bad[0] ^= np.uint32(1)
+        with pytest.raises(ValueError, match="magic"):
+            qc.parse_header(bad)
+
+    def test_crc_detects_field_corruption(self):
+        h = qc.ContainerHeader(
+            scheme_id=1, coded=True, chunk_symbols=512, capacity_words=9,
+            n_chunks=4, pool_slots=1, n_valid=2048, scale_dtype=None,
+            n_scales=0, prefix_bits=3)
+        buf = np.concatenate([qc.pack_header(h),
+                              np.zeros(h.body_words, np.uint32)])
+        for victim in (2, 4, 5, 6, 7, 8):
+            bad = buf.copy()
+            bad[victim] ^= np.uint32(0x10)
+            with pytest.raises(ValueError):
+                qc.parse_header(bad)
+
+    def test_truncation_rejected(self):
+        h = qc.ContainerHeader(
+            scheme_id=1, coded=True, chunk_symbols=512, capacity_words=9,
+            n_chunks=4, pool_slots=1, n_valid=2048, scale_dtype=None,
+            n_scales=0, prefix_bits=3)
+        buf = np.concatenate([qc.pack_header(h),
+                              np.zeros(h.body_words, np.uint32)])
+        with pytest.raises(ValueError, match="truncated"):
+            qc.parse_header(buf[:-1])
+        with pytest.raises(ValueError, match="truncated"):
+            qc.parse_header(buf[:8])
+
+
+class TestContainerRoundtrip:
+    """The PR acceptance invariant: mixed-scheme payloads round-trip
+    bit-exactly from container bytes + registry alone, on both decode
+    paths."""
+
+    def _mixed_values(self, rng):
+        x1 = rng.standard_normal(5000).astype(np.float32)       # ffn1-ish
+        x2 = np.where(rng.random(7100) < 0.5, 0.0,
+                      rng.standard_normal(7100)).astype(np.float32)
+        return x1, x2
+
+    def _expected_e4m3(self, x, k=512):
+        pad = (-len(x)) % k
+        xp = jnp.pad(jnp.asarray(x), (0, pad))
+        c, s = e4m3.quantize_block32(xp)
+        return np.asarray(e4m3.dequantize_block32(
+            c, s.astype(jnp.bfloat16).astype(jnp.float32)))[:len(x)]
+
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_mixed_scheme_values_stream(self, registry, rng, use_kernels):
+        x1, x2 = self._mixed_values(rng)
+        stream = qc.pack_stream([
+            qc.encode_values(x1, registry["ffn1_act"]),
+            qc.encode_values(x2, registry["ffn2_act"]),
+        ])
+        # decode via a registry reloaded from JSON: nothing rides along
+        # except the stream itself
+        reg2 = CodecRegistry.from_json(registry.to_json())
+        outs = qc.decode_values_stream(stream, reg2,
+                                       use_kernels=use_kernels)
+        assert [bool(ok) for _, ok in outs] == [True, True]
+        np.testing.assert_array_equal(np.asarray(outs[0][0]),
+                                      self._expected_e4m3(x1))
+        np.testing.assert_array_equal(np.asarray(outs[1][0]),
+                                      self._expected_e4m3(x2))
+
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_mixed_scheme_codes_stream_batched(self, registry, rng,
+                                               use_kernels):
+        """Multi-LUT batched decode: every coded section decodes in ONE
+        dispatch with per-chunk scheme slots."""
+        s1 = distributions.ffn1_symbols(4096, seed=1)
+        s2 = distributions.ffn2_symbols(6000, seed=2)
+        s3 = distributions.grad_symbols(2048, seed=3)
+        stream = qc.pack_stream([
+            qc.encode_codes(s1, registry["ffn1_act"]),
+            qc.encode_codes(s2, registry["ffn2_act"]),
+            qc.encode_codes(s3, registry["grad"]),
+        ])
+        got = qc.decode_codes_stream(stream, registry,
+                                     use_kernels=use_kernels)
+        for want, (out, ok) in zip((s1, s2, s3), got):
+            assert bool(ok)
+            np.testing.assert_array_equal(np.asarray(out), want)
+
+    def test_raw_section_in_stream(self, registry):
+        """enabled=False sections (raw e4m3 wire) are self-describing
+        too, via the header's coded flag."""
+        entry = registry["ffn1_act"]
+        syms = distributions.ffn1_symbols(2048, seed=9)
+        raw_cfg = entry.config(enabled=False)
+        stream = qc.pack_stream([
+            qc.encode_codes(syms, entry, cfg=raw_cfg),
+            qc.encode_codes(syms, entry),
+        ])
+        hs = [h for _, h in qc.stream_headers(stream)]
+        assert [h.coded for h in hs] == [False, True]
+        got = qc.decode_codes_stream(stream, registry)
+        for out, ok in got:
+            assert bool(ok)
+            np.testing.assert_array_equal(np.asarray(out), syms)
+
+    def test_adversarial_escapes_roundtrip(self, registry, rng):
+        """Escaped chunks ride the container's pool section."""
+        hard = rng.integers(0, 256, 4096, dtype=np.uint8)
+        entry = registry["ffn1_act"]
+        cfg = entry.config(pool_slots_per_1k=1024)  # room for all
+        blob = qc.encode_codes(hard, entry, cfg=cfg)
+        out, ok, _ = qc.decode_codes(blob, registry)
+        assert bool(ok)
+        np.testing.assert_array_equal(np.asarray(out), hard)
+
+    def test_multi_lut_kernel_matches_per_scheme(self, registry):
+        """ops.decode with per-group LUT operands == per-scheme calls."""
+        from repro.core import codec
+        from repro.kernels import ops
+        t1 = registry["ffn1_act"].tables
+        t2 = registry["ffn2_act"].tables
+        k, cap = 256, 70
+        a = distributions.ffn1_symbols(8 * k, seed=4).reshape(8, k)
+        b = distributions.ffn2_symbols(8 * k, seed=5).reshape(8, k)
+        wa, _ = codec.encode_chunks(jnp.asarray(a), t1, cap)
+        wb, _ = codec.encode_chunks(jnp.asarray(b), t2, cap)
+        words = jnp.concatenate([wa, wb])
+        sid = jnp.repeat(jnp.arange(2, dtype=jnp.int32), 8)
+        got = ops.decode(words, [t1, t2], k, scheme_ids=sid)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.concatenate([a, b]))
+        # interleaved order too — per-chunk, not per-block
+        perm = np.random.default_rng(0).permutation(16)
+        got_p = ops.decode(words[perm], [t1, t2], k,
+                           scheme_ids=sid[perm])
+        np.testing.assert_array_equal(
+            np.asarray(got_p), np.concatenate([a, b])[perm])
+
+
+class TestEscapePoolOverflow:
+    """Pool exhaustion must flag ok=False — never silently corrupt."""
+
+    def test_decompress_values_flags_overflow(self, rng):
+        reg = CodecRegistry()
+        entry = reg.register("t", distributions.ffn1_counts(1 << 14),
+                             chunk_symbols=256)
+        # tiny slots + tiny pool: uniform noise escapes everywhere
+        cfg = CommConfig(chunk_symbols=256, capacity_words=60,
+                         pool_slots_per_1k=1)
+        x = rng.standard_normal(16 * 256).astype(np.float32) * \
+            np.exp(rng.standard_normal(16 * 256)).astype(np.float32)
+        for use_kernels in (False, True):
+            c = dataclasses.replace(cfg, use_kernels=use_kernels)
+            payload, scales = compress_values(jnp.asarray(x),
+                                              entry.tables, c)
+            assert int(payload.pool_count.sum()) > 1
+            _, ok = decompress_values(payload, scales, entry.tables, c)
+            assert not bool(ok), f"use_kernels={use_kernels}"
+
+    def test_container_reports_overflow(self, rng):
+        reg = CodecRegistry()
+        entry = reg.register("t", distributions.ffn1_counts(1 << 14),
+                             chunk_symbols=256)
+        cfg = CommConfig(chunk_symbols=256, capacity_words=60,
+                         pool_slots_per_1k=1)
+        hard = rng.integers(0, 256, 4096, dtype=np.uint8)
+        blob = qc.encode_codes(hard, entry, cfg=cfg)
+        _, ok, _ = qc.decode_codes(blob, reg)
+        assert not bool(ok)
+
+    def test_collectives_propagate_overflow(self):
+        """ok=False must surface through the qlc_* collectives under
+        shard_map (the trainer's retry signal)."""
+        run_md("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.core import TABLE1, build_tables, distributions
+from repro.comm import (CommConfig, qlc_all_gather, qlc_psum,
+                        qlc_reduce_scatter)
+
+devs = jax.devices()
+mesh = Mesh(np.array(devs), ("d",))
+tables = build_tables(distributions.ffn1_counts(1 << 16), TABLE1)
+# undersized slots + 1-slot pool => guaranteed exhaustion on noise
+cfg = CommConfig(chunk_symbols=256, capacity_words=60,
+                 pool_slots_per_1k=1)
+
+rng = np.random.default_rng(0)
+X = (rng.standard_normal((8, 4096)) *
+     np.exp(2 * rng.standard_normal((8, 4096)))).astype(np.float32)
+
+for name, fn in [
+    ("all_gather", lambda x: qlc_all_gather(x, "d", tables, cfg)),
+    ("reduce_scatter",
+     lambda x: qlc_reduce_scatter(x, "d", 8, tables, cfg)),
+    ("psum", lambda x: qlc_psum(x, "d", 8, tables, cfg)),
+]:
+    def f(x):
+        out, ok = fn(x[0])
+        return out[None], ok[None]
+    g = jax.jit(shard_map(f, mesh=mesh, in_specs=P("d", None),
+                          out_specs=(P("d", None), P("d"))))
+    _, ok = g(X)
+    assert not np.asarray(ok).any(), name
+    print(name, "overflow flagged OK")
+print("OVERFLOW OK")
+""")
+
+
+class TestWeightWireManifest:
+    def test_per_leaf_scheme_ids_and_manifest_roundtrip(self, rng):
+        from repro.comm.weights import compress_groups
+        from repro.serving import codec_from_manifest, open_params, \
+            serving_manifest
+        reg = CodecRegistry()
+        reg.register("ffn1", distributions.ffn1_counts(1 << 16))
+        reg.register("ffn2", distributions.ffn2_counts(1 << 16))
+        w1 = jnp.asarray(rng.standard_normal((2, 512, 256)), jnp.float32)
+        w2 = jnp.asarray(
+            np.where(rng.random((2, 512, 256)) < 0.6, 0.0,
+                     rng.standard_normal((2, 512, 256))), jnp.float32)
+        params = {"a": {"ffn1": w1}, "b": {"ffn2": w2}}
+        wired, wc = compress_groups(
+            params, reg, type_key_fn=lambda path: path.split("/")[-1])
+        sids = {k: m.scheme_id for k, m in wc.meta.items()}
+        assert sids["a/ffn1"] != sids["b/ffn2"]
+
+        manifest = serving_manifest(wc)
+        assert manifest["leaves"]["a/ffn1"]["scheme_id"] == sids["a/ffn1"]
+
+        # rebuild the codec purely from the manifest; decode must be
+        # bit-identical on both paths
+        for uk in (False, True):
+            wc2 = codec_from_manifest(manifest, use_kernels=uk)
+            got = open_params(wired, wc2)
+            ref = open_params(wired, wc)
+            for x, y in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+                np.testing.assert_array_equal(np.asarray(x),
+                                              np.asarray(y))
+
+    def test_legacy_tables_still_work(self, rng, t1_tables):
+        from repro.comm.weights import compress_groups
+        from repro.serving import open_params
+        w = jnp.asarray(rng.standard_normal((2, 512, 256)), jnp.float32)
+        wired, wc = compress_groups({"w": w}, t1_tables)
+        opened = open_params(wired, wc)["w"]
+        assert opened.shape == w.shape
+
+
+class TestCheckpointRegistry:
+    def test_legacy_manifest_format_still_restores(self, tmp_path):
+        """Checkpoints written by the pre-container release (histogram
+        in-line in the manifest, no registry.json) must keep loading."""
+        import json, math, os
+        from repro.checkpoint import CheckpointManager
+        from repro.checkpoint.manager import QLC_CHUNK, _checksum
+        from repro.core import TABLE1, build_tables
+        from repro.kernels import ops as kops
+
+        syms = distributions.ffn1_symbols(1 << 14, seed=7)
+        counts = np.bincount(syms, minlength=256)
+        tables = build_tables(counts.astype(np.float64), TABLE1)
+        n_chunks = -(-syms.size // QLC_CHUNK)
+        padded = np.zeros(n_chunks * QLC_CHUNK, np.uint8)
+        padded[:syms.size] = syms
+        lens = tables.enc_len[padded]
+        cap = max(1, math.ceil(
+            int(lens.reshape(n_chunks, QLC_CHUNK).sum(axis=1).max()) / 32))
+        words, _ = kops.encode(
+            jnp.asarray(padded.reshape(n_chunks, QLC_CHUNK)), tables, cap)
+
+        cdir = os.path.join(str(tmp_path), "step_0000000001")
+        os.makedirs(cdir)
+        np.save(os.path.join(cdir, "leaf.npy"), np.asarray(words))
+        manifest = {"step": 1, "extra": {}, "leaves": {"codes": {
+            "file": "leaf.npy", "shape": [syms.size], "dtype": "uint8",
+            "sum": _checksum(syms),
+            "qlc": {"counts": counts.tolist(), "n": int(syms.size),
+                    "chunk": QLC_CHUNK, "capacity_words": int(cap)},
+        }}}
+        with open(os.path.join(cdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+
+        cm = CheckpointManager(str(tmp_path))
+        restored, _ = cm.restore({"codes": jnp.zeros(syms.size, jnp.uint8)},
+                                 step=1)
+        np.testing.assert_array_equal(np.asarray(restored["codes"]), syms)
+
+    def test_incompressible_leaf_not_registered(self, tmp_path, rng):
+        """Raw-fallback leaves must not pollute registry.json."""
+        import json, os
+        from repro.checkpoint import CheckpointManager
+        cm = CheckpointManager(str(tmp_path))
+        st_ = {
+            "good": jnp.asarray(
+                distributions.ffn1_symbols(1 << 14, seed=1), jnp.uint8),
+            "hard": jnp.asarray(
+                rng.integers(0, 256, 1 << 14, dtype=np.uint8)),
+        }
+        cm.save(1, st_)
+        cdir = os.path.join(str(tmp_path), "step_0000000001")
+        manifest = json.load(open(os.path.join(cdir, "manifest.json")))
+        assert "qlc" in manifest["leaves"]["good"]
+        assert "qlc" not in manifest["leaves"]["hard"]
+        reg = json.load(open(os.path.join(cdir, "registry.json")))
+        names = {e["name"] for e in reg["entries"]}
+        for e in reg["entries"]:
+            names |= set(e.get("aliases", []))
+        assert "good" in names and "hard" not in names
+
+    def test_registry_file_and_scheme_ids(self, tmp_path):
+        import json, os
+        from repro.checkpoint import CheckpointManager
+        cm = CheckpointManager(str(tmp_path))
+        st_ = {
+            "ffn1": jnp.asarray(
+                distributions.ffn1_symbols(1 << 14, seed=1), jnp.uint8),
+            "ffn2": jnp.asarray(
+                distributions.ffn2_symbols(1 << 14, seed=2), jnp.uint8),
+        }
+        cm.save(1, st_)
+        cdir = os.path.join(str(tmp_path), "step_0000000001")
+        assert os.path.exists(os.path.join(cdir, "registry.json"))
+        manifest = json.load(open(os.path.join(cdir, "manifest.json")))
+        metas = manifest["leaves"]
+        assert "scheme_id" in metas["ffn1"]["qlc"]
+        restored, _ = cm.restore(st_)
+        for k in st_:
+            np.testing.assert_array_equal(np.asarray(restored[k]),
+                                          np.asarray(st_[k]))
+
+
+import jax  # noqa: E402  (jax.tree used above)
