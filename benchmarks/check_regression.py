@@ -39,6 +39,19 @@ METRIC_GATES = {
         # and the paper's multi-LUT setup needs >= 2 distinct schemes
         "distinct_schemes": (">=", 2),
     },
+    "collective_overlap": {
+        # above the ring/one-shot crossover, the modeled ring time
+        # (decode overlapping the wire) must never exceed the modeled
+        # one-shot time (decode strictly after the wire) — see
+        # benchmarks/transport_overlap.py. Both times come straight
+        # from the cost model (not from choose_transport, which would
+        # make this tautological)...
+        "ring_vs_oneshot_modeled_ratio": ("<=", 1.0),
+        # ...and the ring model may not undercut the physical wire
+        # floor either (catches a lost pipeline-fill/steady-state term
+        # that would make ring look impossibly fast).
+        "ring_vs_wire_floor_ratio": (">=", 1.0),
+    },
 }
 
 _OPS = {"<=": lambda a, b: a <= b, ">=": lambda a, b: a >= b}

@@ -3,7 +3,10 @@
 For each tensor-type stream, reports the static wire bytes per symbol of
 the compressed-collective format (QLC slot + flags + pool + bf16 scales)
 vs the bf16 and raw-e4m3 baselines, and the end-to-end ratio — the
-number that scales the roofline collective term.
+number that scales the roofline collective term — plus the planner's
+modeled one-shot vs ring transport times for this stream's wire at its
+evaluated size (the measured-throughput crossover study lives in
+``benchmarks.transport_overlap``).
 """
 from __future__ import annotations
 
@@ -11,7 +14,10 @@ import time
 
 import numpy as np
 
-from repro.comm import CommConfig, compress_codes, wire_bytes
+from repro.comm import (AlphaBetaModel, CommConfig, choose_transport,
+                        compress_codes, modeled_oneshot_time,
+                        modeled_ring_time, wire_bytes)
+from repro.comm.planner import HOP_CHUNK_CANDIDATES
 from repro.comm.calibrate import calibrate_for_tensor
 from repro.core import distributions
 import jax.numpy as jnp
@@ -42,6 +48,17 @@ def run(n: int = 1 << 20):
         bf16 = 2 * m
         e4m3_raw = 1 * m + scale_bytes
         dt = (time.perf_counter() - t0) * 1e6
+
+        # Transport model for THIS stream's wire at the evaluated size:
+        # each of d=8 peers ships `wire` compressed bytes decoding to
+        # 4*m value bytes. Report the BEST ring configuration (min over
+        # the hop-chunk candidates choose_transport compares) so the
+        # two columns show the margin the planner actually decided on.
+        model = AlphaBetaModel()
+        one_t = modeled_oneshot_time(model, wire, 4.0 * m, 8)
+        tcfg = choose_transport(wire, 4.0 * m, 8, model=model)
+        ring_t = min(modeled_ring_time(model, wire, 4.0 * m, 8, h)
+                     for h in HOP_CHUNK_CANDIDATES)
         rows.append({
             "name": f"collective_wire_{name}",
             "us_per_call": dt,
@@ -53,5 +70,8 @@ def run(n: int = 1 << 20):
                 plan.capacity_words * 32 / plan.chunk_symbols, 3),
             "expected_bits_per_symbol": round(
                 plan.expected_bits_per_symbol, 3),
+            "modeled_oneshot_us": round(one_t * 1e6, 2),
+            "modeled_ring_us": round(ring_t * 1e6, 2),
+            "chosen_transport": tcfg.kind,
         })
     return rows

@@ -1,11 +1,14 @@
 """Compressed collectives: QLC-coded e4m3 communication (paper §1)."""
 from repro.comm.compressed import (  # noqa: F401
     CommConfig,
+    ReduceScatterResult,
     WirePayload,
+    accumulate_values,
     compress_codes,
     compress_values,
     decompress_codes,
     decompress_values,
+    pad_to_multiple,
     qlc_all_gather,
     qlc_all_to_all,
     qlc_psum,
@@ -15,6 +18,18 @@ from repro.comm.compressed import (  # noqa: F401
     ref_reduce_scatter,
     resolve_codec,
     wire_bytes,
+)
+from repro.comm import transport  # noqa: F401
+from repro.comm.planner import (  # noqa: F401
+    ONESHOT,
+    RING,
+    AlphaBetaModel,
+    TransportConfig,
+    choose_transport,
+    modeled_oneshot_time,
+    modeled_ring_time,
+    resolve_transport,
+    transport_crossover_bytes,
 )
 from repro.comm import container  # noqa: F401
 from repro.comm.container import (  # noqa: F401

@@ -51,7 +51,7 @@ import numpy as np
 
 from repro.core import codec
 from repro.core.lut import CodecTables
-from repro.comm.planner import CommPlan
+from repro.comm.planner import CommPlan, resolve_transport
 from repro.quant import e4m3
 
 
@@ -350,6 +350,39 @@ def compress_values(x: jnp.ndarray, tables, cfg: CommConfig = None
     return compress_codes(codes, tables, cfg), scales
 
 
+def _pool_values(payload: WirePayload, scales: jnp.ndarray,
+                 cfg: CommConfig):
+    """Escape epilogue shared by the fused decode paths: dequantize ONLY
+    the pool rows (O(pool_slots*K), not O(M)) — scatter each escaped
+    chunk's scales to its slot, decode the raw pool bytes once, gather
+    rows back per chunk.
+
+    Returns ``(escape bool [..., n_chunks], raw_vals f32 [..., n_chunks,
+    K], ok bool [...])``. Rows whose chunk did not escape (and, when the
+    pool itself overflowed — ok=False, caller retries — rows beyond the
+    pool) hold unspecified values; callers select with ``escape``.
+    """
+    k = cfg.chunk_symbols
+    k32 = k // e4m3.BLOCK
+    *lead, n_chunks, _ = payload.words.shape
+    pool_slots = payload.pool.shape[-2]
+    escape = payload.flags.astype(bool)
+    esc_idx, slot = _escape_slots(payload.flags, pool_slots)
+    chunk_scales = scales.astype(jnp.float32).reshape(*lead, n_chunks, k32)
+    pool_scales = _scatter_pool_rows(chunk_scales, slot, pool_slots)
+
+    pool_u8 = jax.lax.bitcast_convert_type(payload.pool, jnp.uint8)
+    pool_vals = e4m3.dequantize_block32(
+        pool_u8.reshape(*lead, pool_slots * k),
+        pool_scales.reshape(*lead, pool_slots * k32),
+    ).reshape(*lead, pool_slots, k)
+
+    raw_vals = _gather_pool_rows(
+        pool_vals, jnp.minimum(esc_idx, pool_slots - 1))
+    ok = (payload.pool_count[..., 0] <= pool_slots)
+    return escape, raw_vals, ok
+
+
 def decompress_values(payload: WirePayload, scales: jnp.ndarray,
                       tables, cfg: CommConfig = None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -374,34 +407,50 @@ def decompress_values(payload: WirePayload, scales: jnp.ndarray,
         vals = kops.decode_dequantize(flat_words, flat_scales, tables, k)
         vals = vals.reshape(*lead, n_chunks, k)
 
-        # Escape epilogue: dequantize ONLY the pool rows
-        # (O(pool_slots*K), not O(M)) — scatter each escaped chunk's
-        # scales to its slot, decode the raw pool bytes once, gather
-        # rows back per chunk. When the pool itself overflowed
-        # (ok=False, caller retries) the masked-in rows are
-        # unspecified, as in the code-level path.
-        pool_slots = payload.pool.shape[-2]
-        escape = payload.flags.astype(bool)
-        esc_idx, slot = _escape_slots(payload.flags, pool_slots)
-        chunk_scales = scales.astype(jnp.float32).reshape(
-            *lead, n_chunks, k32)
-        pool_scales = _scatter_pool_rows(chunk_scales, slot, pool_slots)
-
-        pool_u8 = jax.lax.bitcast_convert_type(payload.pool, jnp.uint8)
-        pool_vals = e4m3.dequantize_block32(
-            pool_u8.reshape(*lead, pool_slots * k),
-            pool_scales.reshape(*lead, pool_slots * k32),
-        ).reshape(*lead, pool_slots, k)
-
-        raw_vals = _gather_pool_rows(
-            pool_vals, jnp.minimum(esc_idx, pool_slots - 1))
-
+        escape, raw_vals, ok = _pool_values(payload, scales, cfg)
         out = jnp.where(escape[..., None], raw_vals, vals)
-        ok = (payload.pool_count[..., 0] <= pool_slots)
         return out.reshape(*lead, n_chunks * k), ok
 
     codes, ok = decompress_codes(payload, tables, cfg)
     return _dequantize(codes, scales), ok
+
+
+def accumulate_values(acc: jnp.ndarray, payload: WirePayload,
+                      scales: jnp.ndarray, tables, cfg: CommConfig = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``acc + decompress_values(payload)`` — the ring reduce-scatter's
+    per-hop step. Returns ``(new_acc f32 [..., M], ok)``.
+
+    With ``cfg.use_kernels`` the decode, dequantize, AND the running sum
+    run as ONE fused Pallas dispatch
+    (``kernels.ops.decode_dequantize_accumulate``): the hop's decoded
+    values never materialize in HBM, only the updated accumulator does.
+    Escaped chunks merge through the shared pool epilogue at the
+    accumulator level — ``where(escape, acc + raw, acc + decoded)`` —
+    which is bit-identical to ``acc + where(escape, raw, decoded)``
+    (f32 addition distributes over the elementwise select exactly).
+    """
+    tables, cfg = resolve_codec(tables, cfg)
+    k = cfg.chunk_symbols
+    *lead, n_chunks, _ = payload.words.shape
+
+    if cfg.enabled and cfg.use_kernels:
+        from repro.kernels import ops as kops
+        k32 = k // e4m3.BLOCK
+        acc_rows = acc.reshape(-1, k).astype(jnp.float32)
+        flat_words = payload.words.reshape(-1, payload.words.shape[-1])
+        flat_scales = scales.astype(jnp.float32).reshape(-1, k32)
+        summed = kops.decode_dequantize_accumulate(
+            acc_rows, flat_words, flat_scales, tables, k)
+        summed = summed.reshape(*lead, n_chunks, k)
+
+        escape, raw_vals, ok = _pool_values(payload, scales, cfg)
+        acc_chunks = acc.reshape(*lead, n_chunks, k)
+        out = jnp.where(escape[..., None], acc_chunks + raw_vals, summed)
+        return out.reshape(*lead, n_chunks * k), ok
+
+    vals, ok = decompress_values(payload, scales, tables, cfg)
+    return acc + vals, ok
 
 
 def pad_to_multiple(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:
@@ -415,10 +464,32 @@ def pad_to_multiple(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:
 
 # --------------------------------------------------------------------------
 # Collectives (call inside shard_map with a named axis)
+#
+# Thin dispatchers over the transport layer (repro.comm.transport): the
+# one-shot transport is the legacy single lax.all_gather/all_to_all of
+# the full payload; the ring transport moves the same compressed bytes
+# in ppermute hops, decoding hop k while hop k+1 is in flight. Both
+# transports are bit-identical (tested) — the reduce accumulation order
+# is part of the transport contract (see transport.ordered_peer_sum).
 # --------------------------------------------------------------------------
 
+class ReduceScatterResult(NamedTuple):
+    """``qlc_reduce_scatter`` output.
+
+    ``segment`` is the shard's summed segment, padded to the static
+    segment length; ``valid`` (i32 scalar, traced) is how many leading
+    entries of ``segment`` map to real (pre-padding) input on THIS
+    shard — callers no longer re-derive it from ``cfg.chunk_symbols``
+    and the axis geometry.
+    """
+    segment: jnp.ndarray     # f32 [seg_padded]
+    valid: jnp.ndarray       # i32 [] — # of real entries in segment
+    ok: jnp.ndarray          # bool []
+
+
 def qlc_all_gather(x: jnp.ndarray, axis_name, tables,
-                   cfg: CommConfig = None
+                   cfg: CommConfig = None, *, transport=None,
+                   axis_size: Optional[int] = None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All-gather with e4m3+QLC wire. Returns (tiled gather f32 [D*n], ok).
 
@@ -426,84 +497,89 @@ def qlc_all_gather(x: jnp.ndarray, axis_name, tables,
     every peer's dequantized payload along axis 0 (flattened).
     ``tables`` is a ``CodecTables`` (explicit ``cfg``) or a registry
     ``CodecEntry`` (cfg from its plan) — same for every collective here.
+
+    ``transport`` is ``None``/"oneshot" (legacy), "ring", or a planner
+    :class:`~repro.comm.planner.TransportConfig`; the ring transport
+    additionally needs the static ``axis_size``.
     """
+    from repro.comm import transport as tr
     tables, cfg = resolve_codec(tables, cfg)
-    flat, n = pad_to_multiple(x, cfg.chunk_symbols)
-    payload, scales = compress_values(flat, tables, cfg)
-
-    g_payload = jax.tree.map(
-        lambda a: jax.lax.all_gather(a, axis_name), payload)
-    g_payload = WirePayload(*g_payload)
-    g_scales = jax.lax.all_gather(scales, axis_name)
-
-    vals, ok = decompress_values(g_payload, g_scales, tables, cfg)  # [D, M]
-    return vals[:, :n].reshape(-1), jnp.all(ok)
+    t = resolve_transport(transport)
+    flat, n = pad_to_multiple(x, t.hop_chunks * cfg.chunk_symbols)
+    vals, ok = tr.exchange_all_gather(
+        flat, axis_name, tables, cfg, t, axis_size)      # [D, seg]
+    return vals[:, :n].reshape(-1), ok
 
 
 def qlc_reduce_scatter(x: jnp.ndarray, axis_name, axis_size: int,
-                       tables, cfg: CommConfig = None
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                       tables, cfg: CommConfig = None, *, transport=None
+                       ) -> ReduceScatterResult:
     """Reduce-scatter(sum) with e4m3+QLC wire.
 
-    Implemented as quantize-encode + all_to_all + decode-sum (the standard
-    compressed-RS decomposition: compression must happen before the wire,
-    so the reduction moves after the exchange).
+    Implemented as quantize-encode + exchange + decode-sum (the standard
+    compressed-RS decomposition: compression must happen before the
+    wire, so the reduction moves after the exchange). The one-shot
+    transport exchanges via ``all_to_all``; the ring transport sends one
+    original compressed segment per ``ppermute`` hop and folds it into
+    the accumulator on arrival (fused decode→dequantize→accumulate
+    dispatch when ``cfg.use_kernels``). Accumulation order is the ring
+    arrival order on both transports, so they are bit-identical.
 
-    Returns (my summed segment f32 [ceil(n/D*K)*K... padded segment], ok).
-    Callers slice/reshape; see ``qlc_psum`` for the round trip.
+    Returns :class:`ReduceScatterResult` ``(segment, valid, ok)``; the
+    segment is padded to the static length, ``valid`` counts its real
+    entries. See ``qlc_psum`` for the round trip.
     """
+    from repro.comm import transport as tr
     tables, cfg = resolve_codec(tables, cfg)
+    t = resolve_transport(transport)
     d = axis_size
-    flat, n = pad_to_multiple(x, d * cfg.chunk_symbols)
+    flat, n = pad_to_multiple(x, d * t.hop_chunks * cfg.chunk_symbols)
     seg = flat.shape[0] // d
     xs = flat.reshape(d, seg)
 
-    payload, scales = compress_values(xs, tables, cfg)  # scales [D, seg/32]
+    acc, ok = tr.exchange_reduce_scatter(
+        xs, axis_name, axis_size, tables, cfg, t)        # [seg]
 
-    a2a = lambda a: jax.lax.all_to_all(
-        a, axis_name, split_axis=0, concat_axis=0, tiled=True)
-    r_payload = WirePayload(*jax.tree.map(a2a, payload))
-    r_scales = a2a(scales)
-
-    vals, ok = decompress_values(r_payload, r_scales, tables, cfg)  # [D, seg]
-    return jnp.sum(vals, axis=0), jnp.all(ok)
+    idx = jax.lax.axis_index(axis_name)
+    valid = jnp.clip(jnp.int32(n) - idx.astype(jnp.int32) * seg, 0, seg)
+    return ReduceScatterResult(segment=acc, valid=valid, ok=ok)
 
 
 def qlc_psum(x: jnp.ndarray, axis_name, axis_size: int, tables,
-             cfg: CommConfig = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+             cfg: CommConfig = None, *, transport=None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All-reduce(sum) = compressed RS + compressed AG.
 
     Note both phases quantize (two e4m3 roundings), as in standard
     compressed all-reduce; the QLC coding itself adds zero error.
     """
     tables, cfg = resolve_codec(tables, cfg)
-    seg, ok_rs = qlc_reduce_scatter(x, axis_name, axis_size, tables, cfg)
-    full, ok_ag = qlc_all_gather(seg, axis_name, tables, cfg)
+    seg, _valid, ok_rs = qlc_reduce_scatter(
+        x, axis_name, axis_size, tables, cfg, transport=transport)
+    full, ok_ag = qlc_all_gather(seg, axis_name, tables, cfg,
+                                 transport=transport, axis_size=axis_size)
     out = full[:x.size].reshape(x.shape)
     return out, ok_rs & ok_ag
 
 
 def qlc_all_to_all(x: jnp.ndarray, axis_name, tables,
-                   cfg: CommConfig = None
+                   cfg: CommConfig = None, *, transport=None,
+                   axis_size: Optional[int] = None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Compressed all-to-all of x [D, ...] (row j -> peer j)."""
+    from repro.comm import transport as tr
     tables, cfg = resolve_codec(tables, cfg)
+    t = resolve_transport(transport)
     d = x.shape[0]
     row = x.reshape(d, -1)
     n = row.shape[1]
-    pad = (-n) % cfg.chunk_symbols
+    pad = (-n) % (t.hop_chunks * cfg.chunk_symbols)
     if pad:
         row = jnp.pad(row, ((0, 0), (0, pad)))
 
-    payload, scales = compress_values(row, tables, cfg)
-
-    a2a = lambda a: jax.lax.all_to_all(
-        a, axis_name, split_axis=0, concat_axis=0, tiled=True)
-    r_payload = WirePayload(*jax.tree.map(a2a, payload))
-    r_scales = a2a(scales)
-
-    vals, ok = decompress_values(r_payload, r_scales, tables, cfg)
-    return vals[:, :n].reshape(x.shape), jnp.all(ok)
+    vals, ok = tr.exchange_all_to_all(
+        row, axis_name, tables, cfg, t, axis_size)       # [D, n_padded]
+    return vals[:, :n].reshape(x.shape), ok
 
 
 # --------------------------------------------------------------------------

@@ -1,20 +1,31 @@
-"""Capacity / escape planning for compressed collectives.
+"""Capacity / escape / transport planning for compressed collectives.
 
-Chooses the static wire slot size per chunk from the calibration
-histogram: slot = mean code length plus a Hoeffding-bounded margin so
-the per-chunk escape probability is below ``target_escape_prob``, and an
-overflow pool sized so whole-payload fallback is ~never needed.
+Wire format: chooses the static wire slot size per chunk from the
+calibration histogram: slot = mean code length plus a Hoeffding-bounded
+margin so the per-chunk escape probability is below
+``target_escape_prob``, and an overflow pool sized so whole-payload
+fallback is ~never needed.
+
+Transport: an alpha-beta cost model (:class:`AlphaBetaModel`) selects
+between the one-shot transport (single ``all_gather``/``all_to_all`` of
+the full payload, decode strictly after the wire) and the ring transport
+(``ppermute`` hops with hop *k*'s decode overlapping hop *k+1*'s
+transfer — ``repro.comm.transport``), and sizes the ring's hop chunking.
+The model is deliberately simple: per-message latency alpha, link
+bandwidth beta_wire, decode throughput beta_decode, and a per-dispatch
+kernel overhead; ``choose_transport`` minimizes the modeled time.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core import entropy
 from repro.core.lut import CodecTables
+from repro.roofline import hw
 
 MIN_CODE_BITS = 4
 MAX_CODE_BITS = 11
@@ -85,3 +96,215 @@ def effective_compression_ratio(plan: CommPlan,
     wire = plan.wire_bytes_per_symbol + scale_bytes_per_symbol \
         + 1.0 / plan.chunk_symbols  # 1 flag byte per chunk
     return baseline_bytes / wire
+
+
+# --------------------------------------------------------------------------
+# Transport selection (one-shot vs ring, hop chunking)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    """Static transport selection for one compressed collective.
+
+    ``kind``:
+      * ``"oneshot"`` — legacy path: one ``lax.all_gather`` /
+        ``lax.all_to_all`` of the full compressed payload, decode runs
+        strictly after the wire.
+      * ``"ring"`` — ``ppermute``-based schedule: the payload moves in
+        ``axis_size - 1`` hops and hop *k* is decoded (+ dequantized,
+        and for reduce-scatter + accumulated) while hop *k+1* is in
+        flight.
+
+    ``hop_chunks`` (ring only) splits each hop's payload into that many
+    independently-compressed pieces so decode and transfer also overlap
+    *within* a hop — the cost model trades per-message latency (more
+    messages) against pipeline fill (smaller units).
+    """
+    kind: str = "oneshot"            # oneshot | ring
+    hop_chunks: int = 1
+
+    def __post_init__(self):
+        if self.kind not in ("oneshot", "ring"):
+            raise ValueError(f"unknown transport kind {self.kind!r}")
+        if self.hop_chunks < 1:
+            raise ValueError("hop_chunks must be >= 1")
+
+
+ONESHOT = TransportConfig("oneshot")
+RING = TransportConfig("ring")
+
+
+def resolve_transport(transport) -> TransportConfig:
+    """Normalize ``None`` (legacy one-shot) / str / TransportConfig."""
+    if transport is None:
+        return ONESHOT
+    if isinstance(transport, TransportConfig):
+        return transport
+    if isinstance(transport, str):
+        return TransportConfig(kind=transport)
+    raise TypeError(f"bad transport spec: {transport!r}")
+
+
+#: Ring hop-chunk candidates the planner compares. Shared by
+#: choose_transport, transport_crossover_bytes, and the benchmark
+#: columns so they can never desynchronize.
+HOP_CHUNK_CANDIDATES = (1, 2, 4, 8)
+
+
+def clamp_hop_chunks(hop_chunks: int, n_chunks: int) -> int:
+    """Largest h <= hop_chunks that tiles ``n_chunks`` (>= 1).
+
+    Ring hop pieces must tile the payload's chunk count — otherwise the
+    per-piece padding changes the static payload geometry (e.g. the
+    ZeRO-1 segment length ``flat_geometry`` was computed from).
+    """
+    h = max(1, min(hop_chunks, n_chunks))
+    while n_chunks % h:
+        h -= 1
+    return h
+
+
+@dataclasses.dataclass(frozen=True)
+class AlphaBetaModel:
+    """alpha-beta cost model of one compressed-collective exchange.
+
+    * ``alpha_s`` — per-message latency (collective launch + first-byte),
+      paid once per one-shot collective and once per ring message.
+    * ``wire_Bps`` — link bandwidth the payload serializes through
+      (defaults to one v5e ICI link, ``roofline.hw.ICI_LINK_BW``).
+    * ``decode_Bps`` — fused decode→dequantize throughput in *decoded
+      value bytes* per second (calibrate with a measured number, e.g.
+      from ``benchmarks/transport_overlap.py``).
+    * ``dispatch_s`` — per-kernel-dispatch overhead (one decode dispatch
+      per ring hop piece).
+
+    Topology note: every hop is charged one ``alpha`` + payload/``wire
+    bandwidth``, which models the all-gather's neighbor-forwarding ring
+    exactly. The reduce-scatter/all-to-all schedules use distance-s
+    ppermutes; on a mesh axis that maps to one physical 1-D ring those
+    cost up to ``s`` link traversals, which this first-order model does
+    not charge — per-axis measured constants (ROADMAP: autotuned hop
+    size, multi-host ring) are the planned refinement.
+    """
+    alpha_s: float = 1e-6
+    wire_Bps: float = hw.ICI_LINK_BW
+    decode_Bps: float = 200e9
+    dispatch_s: float = 2e-6
+
+    def wire_time(self, wire_bytes: float) -> float:
+        return self.alpha_s + wire_bytes / self.wire_Bps
+
+    def decode_time(self, value_bytes: float) -> float:
+        return self.dispatch_s + value_bytes / self.decode_Bps
+
+
+def payload_wire_bytes(n_symbols: int, chunk_symbols: int,
+                       capacity_words: int, pool_slots_per_1k: int = 8,
+                       scale_bytes: int = 2) -> int:
+    """Static wire bytes of one shard's compressed payload (slots +
+    flags + pool + pool count + block-32 scales) — mirrors
+    ``compressed.wire_bytes`` without building arrays."""
+    n_chunks = max(1, math.ceil(n_symbols / chunk_symbols))
+    pool_slots = max(1, math.ceil(n_chunks * pool_slots_per_1k / 1024))
+    return (n_chunks * capacity_words * 4          # slots
+            + n_chunks                              # escape flags
+            + pool_slots * chunk_symbols            # pool (K/4 u32 rows)
+            + 4                                     # pool count
+            + scale_bytes * math.ceil(n_symbols / 32))
+
+
+def modeled_oneshot_time(model: AlphaBetaModel, shard_wire_bytes: float,
+                         shard_value_bytes: float, axis_size: int,
+                         n_decode_dispatches: int = 1) -> float:
+    """One-shot: every peer's payload crosses the wire, then decode
+    runs strictly after it.
+
+    ``n_decode_dispatches`` is 1 for the batched all-gather decode;
+    the one-shot reduce-scatter pays ``axis_size`` sequential
+    accumulate dispatches (the ring-parity op sequence — see
+    ``transport.exchange_reduce_scatter``), so its auto-selection
+    passes ``axis_size``.
+    """
+    d = axis_size
+    wire = model.wire_time(shard_wire_bytes * (d - 1))
+    return (wire + shard_value_bytes * d / model.decode_Bps
+            + max(1, n_decode_dispatches) * model.dispatch_s)
+
+
+def modeled_ring_time(model: AlphaBetaModel, shard_wire_bytes: float,
+                      shard_value_bytes: float, axis_size: int,
+                      hop_chunks: int = 1) -> float:
+    """Ring: ``(d-1) * hop_chunks`` messages; decode of unit *k*
+    overlaps the transfer of unit *k+1*, so steady state pays
+    ``max(transfer, decode)`` per unit plus pipeline fill/drain."""
+    d = axis_size
+    if d <= 1:
+        return model.decode_time(shard_value_bytes)
+    h = hop_chunks
+    unit_wire = model.wire_time(shard_wire_bytes / h)
+    unit_dec = model.decode_time(shard_value_bytes / h)
+    n_units = (d - 1) * h
+    # fill (first transfer) + overlapped steady state + drain (last
+    # decode) + the local shard's own decode (overlaps the first hop).
+    return (unit_wire + (n_units - 1) * max(unit_wire, unit_dec)
+            + unit_dec)
+
+
+def choose_transport(shard_wire_bytes: float, shard_value_bytes: float,
+                     axis_size: int,
+                     model: Optional[AlphaBetaModel] = None,
+                     hop_chunk_candidates: Sequence[int]
+                     = HOP_CHUNK_CANDIDATES,
+                     n_oneshot_decode_dispatches: int = 1,
+                     ) -> TransportConfig:
+    """Pick the transport (and ring hop chunking) minimizing modeled time.
+
+    ``shard_wire_bytes`` / ``shard_value_bytes`` describe ONE device's
+    compressed shard; ``axis_size`` is the collective's axis size. Small
+    payloads stay one-shot (per-message alpha dominates); above the
+    crossover the ring's decode/transfer overlap wins.
+    ``n_oneshot_decode_dispatches``: see ``modeled_oneshot_time``.
+    """
+    model = model or AlphaBetaModel()
+    if axis_size <= 1:
+        return ONESHOT
+    best = ("oneshot", 1,
+            modeled_oneshot_time(model, shard_wire_bytes,
+                                 shard_value_bytes, axis_size,
+                                 n_oneshot_decode_dispatches))
+    for h in hop_chunk_candidates:
+        t = modeled_ring_time(model, shard_wire_bytes, shard_value_bytes,
+                              axis_size, h)
+        if t < best[2]:
+            best = ("ring", h, t)
+    return TransportConfig(kind=best[0], hop_chunks=best[1])
+
+
+def transport_crossover_bytes(axis_size: int,
+                              model: Optional[AlphaBetaModel] = None,
+                              compression_ratio: float = 2.1,
+                              lo: float = 1024.0,
+                              hi: float = float(1 << 40)) -> float:
+    """Smallest shard VALUE size (bytes) where the ring transport's
+    modeled time beats one-shot (bisection; ``compression_ratio`` maps
+    value bytes to wire bytes)."""
+    model = model or AlphaBetaModel()
+
+    def ring_wins(value_bytes: float) -> bool:
+        wire = value_bytes / compression_ratio
+        one = modeled_oneshot_time(model, wire, value_bytes, axis_size)
+        ring = min(modeled_ring_time(model, wire, value_bytes, axis_size,
+                                     h) for h in HOP_CHUNK_CANDIDATES)
+        return ring < one
+
+    if ring_wins(lo):
+        return lo
+    if not ring_wins(hi):
+        return hi
+    for _ in range(60):
+        mid = math.sqrt(lo * hi)
+        if ring_wins(mid):
+            hi = mid
+        else:
+            lo = mid
+    return hi

@@ -1,0 +1,291 @@
+"""Transport layer for the compressed collectives: one-shot vs ring.
+
+The paper's value proposition is that QLC decode is cheap enough to sit
+on the critical path of bandwidth-bound collectives — but only if it
+actually overlaps the wire. This module owns HOW the compressed payload
+moves:
+
+* **one-shot** (legacy): a single ``lax.all_gather`` / ``lax.all_to_all``
+  of the full payload; every decode runs strictly after the last byte
+  lands. Decode latency adds serially to wire latency.
+
+* **ring**: the payload moves in ``axis_size - 1`` ``lax.ppermute``
+  hops. The graph is structured so hop *k*'s decode (+ dequantize, and
+  for reduce-scatter + accumulate — one fused Pallas dispatch with
+  ``cfg.use_kernels``) has NO data dependency on hop *k+1*'s transfer,
+  so the compiler's latency-hiding scheduler runs them concurrently:
+  decode hides behind the wire instead of following it.
+  ``TransportConfig.hop_chunks`` splits each hop payload into
+  independently-compressed pieces for finer-grained overlap (the
+  planner's alpha-beta model picks it).
+
+Schedules (d = axis size, i = this device):
+
+* all-gather — classic neighbor ring: forward what arrived last hop on
+  the fixed perm ``i -> i+1``; hop *s* delivers peer ``i-s``'s original
+  payload, which is decoded into its output row while hop *s+1* is in
+  flight.
+* reduce-scatter / all-to-all — rotated pairwise exchange: hop *s* uses
+  perm ``j -> j+s``, every device sends its ORIGINAL compressed segment
+  destined for peer ``j+s`` and receives peer ``i-s``'s segment for
+  itself. No partial sums ever cross the wire, so nothing is
+  re-quantized or re-encoded mid-flight — hop count trades for exact
+  transport equivalence.
+
+**Bit-identity contract**: both transports move the same compressed
+bytes and decode them with the same code, and the reduce-scatter runs
+the identical per-row-piece accumulate op sequence in fixed ring
+arrival order (own segment, then peers ``i-1, i-2, ...`` —
+``_accumulate_row_pieces``). One-shot and ring therefore produce bit-identical
+outputs and identical ``ok`` flags — transports are interchangeable
+per collective, selected by the planner's cost model. (With
+``hop_chunks > 1`` each piece carries its own escape pool, so the
+``ok`` flag is evaluated per piece — values stay bit-identical, but a
+pathological payload can overflow a piece pool while the one-shot pool
+absorbs it; the planner only picks ``hop_chunks > 1`` where the escape
+bound already makes that negligible.)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.planner import TransportConfig
+from repro.comm import compressed as comp
+
+
+def _require_axis_size(t: TransportConfig, axis_size: Optional[int]) -> int:
+    if axis_size is None:
+        raise ValueError(
+            "the ring transport needs the static axis_size (the hop loop "
+            "is unrolled at trace time); pass axis_size=mesh.shape[axis]")
+    return int(axis_size)
+
+
+def _tree_permute(tree, axis_name, perm):
+    return jax.tree.map(
+        lambda a: jax.lax.ppermute(a, axis_name, perm), tree)
+
+
+def _tree_row(tree, idx):
+    """Dynamic leading-axis row select on a pytree (traced index)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, idx, axis=0,
+                                               keepdims=False), tree)
+
+
+def _neighbor_perm(d: int):
+    return [(j, (j + 1) % d) for j in range(d)]
+
+
+def _shift_perm(d: int, s: int):
+    return [(j, (j + s) % d) for j in range(d)]
+
+
+def _compress_pieces(flat: jnp.ndarray, hop_chunks: int, tables, cfg):
+    """[..., seg] -> list of ``hop_chunks`` independently-compressed
+    piece trees ``(WirePayload, scales)`` (each with ``flat``'s lead
+    dims).
+
+    Each piece is a SEPARATE pytree — the ring issues one transfer and
+    one decode(+accumulate) dispatch per piece, so piece *p*'s decode
+    has no data dependency on piece *p'*'s transfer and the intra-hop
+    interleave the planner's cost model prices actually exists in the
+    graph (stacking the pieces into one array would fuse them back into
+    a single transfer + a single decode).
+    """
+    pieces = flat.reshape(flat.shape[:-1] + (hop_chunks, -1))
+    return [comp.compress_values(pieces[..., p, :], tables, cfg)
+            for p in range(hop_chunks)]
+
+
+def _accumulate_row_pieces(accs, pieces, tables, cfg, ok):
+    """Fold one peer row's piece list into the per-piece accumulators.
+
+    This is the transport contract's ONLY reduce step — the one-shot
+    transport (rows landed via ``all_to_all``) and the ring transport
+    (rows arriving hop by hop) run the identical per-piece
+    ``decompress``/``accumulate_values`` sequence. Fixing the op
+    sequence, not just the summation order, is what makes the
+    transports bit-identical: f32 addition is non-associative AND the
+    compiler may keep excess precision (FMA-contract a dequantize
+    multiply into an adjacent add), so the same values reduced through
+    a different graph shape could round differently.
+    """
+    for p, (pp, ps) in enumerate(pieces):
+        if accs[p] is None:
+            accs[p], ok_s = comp.decompress_values(pp, ps, tables, cfg)
+        else:
+            accs[p], ok_s = comp.accumulate_values(
+                accs[p], comp.WirePayload(*pp), ps, tables, cfg)
+        ok &= jnp.all(ok_s)
+    return accs, ok
+
+
+def ring_stream(local, axis_name, axis_size: int, consume, init):
+    """Generic neighbor-forwarding ring drive (the transport contract's
+    ONE implementation of the classic ring schedule — the compressed
+    all-gather and the sharded weight open both run on it).
+
+    ``local`` is this device's payload (any pytree). At hop *s* the
+    buffer holding peer ``i-s``'s original payload is consumed while
+    the ppermute forwarding it to the next neighbor is already issued —
+    ``consume(carry, buf, src, hop) -> carry`` must not depend on that
+    transfer, which is exactly what lets decode overlap the wire.
+    Returns the final carry.
+    """
+    d = axis_size
+    my = jax.lax.axis_index(axis_name)
+    perm = _neighbor_perm(d)
+    buf, carry = local, init
+    for s in range(d):
+        nxt = _tree_permute(buf, axis_name, perm) if s < d - 1 else None
+        carry = consume(carry, buf, jnp.mod(my - s, d), s)
+        buf = nxt
+    return carry
+
+
+# --------------------------------------------------------------------------
+# All-gather
+# --------------------------------------------------------------------------
+
+def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
+                        t: TransportConfig,
+                        axis_size: Optional[int] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather every peer's padded shard ``flat [seg]`` -> ``[d, seg]``.
+
+    Returns ``(vals f32 [d, seg], ok bool [])``.
+    """
+    if t.kind == "oneshot":
+        payload, scales = comp.compress_values(flat, tables, cfg)
+        g_payload = comp.WirePayload(*jax.tree.map(
+            lambda a: jax.lax.all_gather(a, axis_name), payload))
+        g_scales = jax.lax.all_gather(scales, axis_name)
+        vals, ok = comp.decompress_values(g_payload, g_scales, tables, cfg)
+        return vals, jnp.all(ok)
+
+    d = _require_axis_size(t, axis_size)
+    h = t.hop_chunks
+    pieces = _compress_pieces(flat, h, tables, cfg)
+
+    def consume(carry, buf, src, _hop):
+        out, ok = carry
+        for p, (pp, ps) in enumerate(buf):
+            vals, ok_s = comp.decompress_values(pp, ps, tables, cfg)
+            out = jax.lax.dynamic_update_slice(
+                out, vals.reshape(1, 1, -1), (src, jnp.int32(p), 0))
+            ok &= jnp.all(ok_s)
+        return out, ok
+
+    out0 = jnp.zeros((d, h, flat.shape[0] // h), jnp.float32)
+    out, ok = ring_stream(pieces, axis_name, d, consume,
+                          (out0, jnp.bool_(True)))
+    return out.reshape(d, -1), ok
+
+
+# --------------------------------------------------------------------------
+# Reduce-scatter
+# --------------------------------------------------------------------------
+
+def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
+                            tables, cfg, t: TransportConfig
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reduce-scatter of ``xs [d, seg]`` (row j = this device's summand
+    of peer j's output segment). Returns ``(acc f32 [seg], ok)``.
+
+    Every transport quantizes+encodes each segment exactly once and
+    sums dequantized f32 at the destination in ring arrival order —
+    bit-identical across transports.
+    """
+    d = axis_size
+    h = t.hop_chunks
+    pieces = _compress_pieces(xs, h, tables, cfg)   # h trees, lead [d]
+    my = jax.lax.axis_index(axis_name)
+
+    def row_pieces(idx):
+        return [_tree_row(pc, idx) for pc in pieces]
+
+    accs = [None] * h
+    ok = jnp.bool_(True)
+
+    if t.kind == "oneshot":
+        a2a = lambda a: jax.lax.all_to_all(                 # noqa: E731
+            a, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        r_pieces = [(comp.WirePayload(*jax.tree.map(a2a, pp)), a2a(ps))
+                    for pp, ps in pieces]
+        # Decode strictly AFTER the full exchange (that is what makes
+        # it one-shot), but through the shared per-row-piece accumulate
+        # primitive so the reduction is op-for-op the ring's. This
+        # costs d accumulate dispatches where a single batched decode
+        # + add chain would do — a deliberate trade: the batched form's
+        # external adds are subject to graph-dependent FMA contraction
+        # against the ring's in-kernel accumulate, and no graph-level
+        # fence reliably pins that down (_accumulate_row_pieces); the
+        # planner charges one-shot RS for the d dispatches.
+        for s in range(d):
+            idx = jnp.mod(my - s, d)
+            accs, ok = _accumulate_row_pieces(
+                accs, [_tree_row(pc, idx) for pc in r_pieces], tables,
+                cfg, ok)
+        return jnp.concatenate(accs), ok
+
+    # Rotated pairwise exchange: hop s sends the ORIGINAL compressed
+    # segment destined for peer i+s and receives peer i-s's segment for
+    # this device; the per-piece fused decode→dequantize→accumulate of
+    # hop s runs while hop s+1 (and this hop's other pieces) are in
+    # flight. Own contribution first — same decode as if it crossed the
+    # wire (segment j is encoded once, decoded once, everywhere).
+    for s in range(d):
+        unit = row_pieces(jnp.mod(my + s, d))
+        if s > 0:
+            unit = _tree_permute(unit, axis_name, _shift_perm(d, s))
+        accs, ok = _accumulate_row_pieces(accs, unit, tables, cfg, ok)
+    return jnp.concatenate(accs), ok
+
+
+# --------------------------------------------------------------------------
+# All-to-all
+# --------------------------------------------------------------------------
+
+def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
+                        t: TransportConfig,
+                        axis_size: Optional[int] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All-to-all of ``rows [d, n]`` (row j -> peer j); returns
+    ``(vals f32 [d, n], ok)`` where output row j holds peer j's
+    dequantized row for this device.
+    """
+    d = rows.shape[0]
+    if t.kind == "oneshot":
+        payload, scales = comp.compress_values(rows, tables, cfg)
+        a2a = lambda a: jax.lax.all_to_all(                 # noqa: E731
+            a, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        r_payload = comp.WirePayload(*jax.tree.map(a2a, payload))
+        r_scales = a2a(scales)
+        vals, ok = comp.decompress_values(r_payload, r_scales, tables, cfg)
+        return vals, jnp.all(ok)
+
+    # d is static from rows.shape; an explicit axis_size must agree.
+    assert axis_size is None or int(axis_size) == d, (axis_size, d)
+    h = t.hop_chunks
+    pieces = _compress_pieces(rows, h, tables, cfg)  # h trees, lead [d]
+    my = jax.lax.axis_index(axis_name)
+    out = jnp.zeros((d, h, rows.shape[-1] // h), jnp.float32)
+    ok = jnp.bool_(True)
+
+    # Own row needs no wire but the same decode (a2a keeps the local
+    # row quantized, matching the one-shot path bit for bit).
+    for s in range(d):
+        src = jnp.mod(my - s, d)
+        unit = [_tree_row(pc, jnp.mod(my + s, d)) for pc in pieces]
+        if s > 0:
+            unit = _tree_permute(unit, axis_name, _shift_perm(d, s))
+        for p, (pp, ps) in enumerate(unit):
+            vals, ok_s = comp.decompress_values(pp, ps, tables, cfg)
+            out = jax.lax.dynamic_update_slice(
+                out, vals.reshape(1, 1, -1), (src, jnp.int32(p), 0))
+            ok &= jnp.all(ok_s)
+    return out.reshape(d, -1), ok

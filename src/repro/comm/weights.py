@@ -79,6 +79,10 @@ class GroupWireCodec:
     meta: Dict[str, LeafMeta]
     registry: CodecRegistry
     use_kernels: bool = False
+    # Default transport for `open_group_sharded` (None => ring): how a
+    # chunk-sharded wire moves to this device — "oneshot" all_gather
+    # then decode, or ppermute ring hops with per-hop decode overlap.
+    transport: Optional[Any] = None
 
     @property
     def tables(self):
@@ -98,23 +102,115 @@ class GroupWireCodec:
             return node
         return walk(pg, "")
 
-    def _decode(self, wire, m: LeafMeta) -> jnp.ndarray:
-        # One explicit gather of the wire (replicate), THEN decode: the
-        # codec loop must consume local data or GSPMD re-gathers every
-        # iteration.
-        import jax as _jax
-        from jax.sharding import PartitionSpec as _P
-        try:
-            wire = {k: _jax.lax.with_sharding_constraint(v, _P())
-                    for k, v in wire.items()}
-        except Exception:
-            pass
+    def open_group_sharded(self, pg, axis_name, axis_size: int,
+                           transport=None):
+        """Open a wired tree whose compressed leaves are SHARDED along
+        the chunk dim across ``axis_name`` (call inside ``shard_map``).
+
+        This is the FSDP serving gather: instead of all-gathering bf16
+        weights, each device streams the QLC wire of every peer's chunk
+        shard and decodes it in-graph. With the ring transport
+        (default) hop *k*'s shard decodes — one fused
+        decode→dequantize dispatch per hop with ``use_kernels`` —
+        while hop *k+1*'s compressed bytes are in flight; the one-shot
+        transport all-gathers the whole wire first and decodes after.
+        Both produce values bit-identical to :meth:`open_group` on the
+        unsharded tree (per-chunk decode is independent of batching).
+        """
+        from repro.comm.planner import resolve_transport
+        t = resolve_transport(
+            transport if transport is not None
+            else (self.transport or "ring"))
+
+        def walk(node, prefix):
+            if isinstance(node, dict) and (
+                    set(node) == {"codes", "scales"}
+                    or set(node) == {"words", "scales"}):
+                return self._decode_sharded(
+                    node, self.meta[prefix], axis_name, axis_size, t)
+            if isinstance(node, dict):
+                return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                        for k, v in node.items()}
+            return node
+        return walk(pg, "")
+
+    def _decode_sharded(self, wire, m: LeafMeta, axis_name,
+                        axis_size: int, t) -> jnp.ndarray:
+        d = axis_size
+        main_key = "codes" if m.mode == "e4m3" else "words"
+        ncl = wire[main_key].shape[-2]           # local chunk shard
+        assert ncl * d == m.n_chunks, (
+            "leaf must be evenly chunk-sharded", ncl, d, m.n_chunks)
+
+        if t.kind == "oneshot":
+            g_wire = {k: jnp.moveaxis(
+                jax.lax.all_gather(v, axis_name), 0, -3 if k == main_key
+                else -2) for k, v in wire.items()}
+            # [..., d, ncl, W] -> [..., d*ncl, W] (chunk-major order)
+            g_wire = {
+                main_key: g_wire[main_key].reshape(
+                    wire[main_key].shape[:-2]
+                    + (m.n_chunks, wire[main_key].shape[-1])),
+                "scales": g_wire["scales"].reshape(
+                    wire["scales"].shape[:-1] + (-1,)),
+            }
+            vals = self._decode_flat(g_wire, m, m.n_chunks)
+        else:
+            from repro.comm.planner import clamp_hop_chunks
+            from repro.comm.transport import ring_stream
+            lead = wire[main_key].shape[:-2]
+            # hop_chunks pieces per shard (clamped to tile the local
+            # chunk count) — finer decode/transfer interleave, same as
+            # the collectives' hop chunking.
+            hp = clamp_hop_chunks(t.hop_chunks, ncl)
+            npc = ncl // hp                       # chunks per piece
+            piece = npc * CHUNK
+            sb = piece // e4m3.BLOCK
+            pieces = [{main_key: wire[main_key][..., p * npc:(p + 1) * npc,
+                                                :],
+                       "scales": wire["scales"][..., p * sb:(p + 1) * sb]}
+                      for p in range(hp)]
+
+            # Shared neighbor-forwarding ring (transport.ring_stream):
+            # decode the pieces already here while the next hop's
+            # compressed bytes are in flight.
+            def consume(out, buf, src, _hop):
+                for p, pc in enumerate(buf):
+                    vals = self._decode_flat(pc, m, npc)  # [*lead, piece]
+                    out = jax.lax.dynamic_update_slice(
+                        out, vals.reshape(lead + (1, 1, piece)),
+                        (0,) * len(lead) + (src, jnp.int32(p),
+                                            jnp.int32(0)))
+                return out
+
+            out0 = jnp.zeros(lead + (d, hp, piece), self._decode_dtype(m))
+            out = ring_stream(pieces, axis_name, d, consume, out0)
+            vals = out.reshape(lead + (d * ncl * CHUNK,))
+
+        out = vals[..., :m.n_symbols].reshape(
+            vals.shape[:-1] + m.group_shape)
+        return out.astype(m.dtype)
+
+    def _decode_dtype(self, m: LeafMeta):
+        """dtype `_decode_flat` emits for this leaf (pre-epilogue)."""
+        if m.mode == "qlc" and self.use_kernels:
+            if jnp.dtype(m.dtype) in (jnp.dtype(jnp.bfloat16),
+                                      jnp.dtype(jnp.float32)):
+                return jnp.dtype(m.dtype)
+        return jnp.dtype(jnp.float32)
+
+    def _decode_flat(self, wire, m: LeafMeta, n_chunks: int
+                     ) -> jnp.ndarray:
+        """Decode a (possibly chunk-sharded) wire dict to flat values
+        ``[*lead, n_chunks*CHUNK]`` — pre-slice, in the decode dtype.
+
+        ``n_chunks`` is the chunk count of THIS wire dict: ``m.n_chunks``
+        for a whole leaf, or the local shard's count on the sharded ring
+        path (per-chunk decode is independent, so shard decodes are
+        bit-identical to the corresponding slice of a whole-leaf decode).
+        """
         tables = self.registry.by_id(m.scheme_id).tables
-        # Wire leaves are [*lead_g, n_chunks, …] — lead_g is the group
-        # dim for a whole wired tree, or () inside the per-layer scan
-        # where the group dim was indexed away. Every group decodes;
-        # lead dims are preserved in the output.
-        padded = m.n_chunks * CHUNK
+        padded = n_chunks * CHUNK
         main = wire["codes"] if m.mode == "e4m3" else wire["words"]
         lead = main.shape[:-2]
         g = int(np.prod(lead, initial=1))
@@ -128,20 +224,37 @@ class GroupWireCodec:
                       if jnp.dtype(m.dtype) in (jnp.dtype(jnp.bfloat16),
                                                 jnp.dtype(jnp.float32))
                       else jnp.float32)
-            vals = kops.decode_dequantize(
-                main.reshape(g * m.n_chunks, m.capacity_words),
+            return kops.decode_dequantize(
+                main.reshape(g * n_chunks, m.capacity_words),
                 scales.astype(jnp.float32).reshape(
-                    g * m.n_chunks, CHUNK // e4m3.BLOCK),
+                    g * n_chunks, CHUNK // e4m3.BLOCK),
                 tables, CHUNK,
                 out_dtype=out_dt).reshape(lead + (padded,))
+        if m.mode == "e4m3":
+            codes_flat = main.reshape(lead + (padded,))
         else:
-            if m.mode == "e4m3":
-                codes_flat = main.reshape(lead + (padded,))
-            else:
-                codes_flat = codec.decode_chunks(
-                    main, tables, CHUNK).reshape(lead + (padded,))
-            vals = e4m3.dequantize_block32(
-                codes_flat, scales.astype(jnp.float32))
+            codes_flat = codec.decode_chunks(
+                main, tables, CHUNK).reshape(lead + (padded,))
+        return e4m3.dequantize_block32(
+            codes_flat, scales.astype(jnp.float32))
+
+    def _decode(self, wire, m: LeafMeta) -> jnp.ndarray:
+        # One explicit gather of the wire (replicate), THEN decode: the
+        # codec loop must consume local data or GSPMD re-gathers every
+        # iteration.
+        import jax as _jax
+        from jax.sharding import PartitionSpec as _P
+        try:
+            wire = {k: _jax.lax.with_sharding_constraint(v, _P())
+                    for k, v in wire.items()}
+        except Exception:
+            pass
+        # Wire leaves are [*lead_g, n_chunks, …] — lead_g is the group
+        # dim for a whole wired tree, or () inside the per-layer scan
+        # where the group dim was indexed away. Every group decodes;
+        # lead dims are preserved in the output.
+        vals = self._decode_flat(wire, m, m.n_chunks)
+        lead = vals.shape[:-1]
         out = vals[..., :m.n_symbols].reshape(lead + m.group_shape)
         return out.astype(m.dtype)
 

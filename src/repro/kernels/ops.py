@@ -13,6 +13,11 @@ Entry points
                                      e4m3 quantization happens inside
                                      the kernel, symbols stay in VMEM.
   decode_dequantize                — fused words+scales -> float.
+  decode_dequantize_accumulate     — fused words+scales+acc ->
+                                     acc + float: decode, dequantize,
+                                     and running-sum in ONE dispatch
+                                     (the ring reduce-scatter's
+                                     per-hop inner loop).
 
 Both decode entry points take **per-group LUT operands**: ``tables``
 may be a single ``CodecTables`` or a sequence of them, and
@@ -275,6 +280,58 @@ def decode_dequantize(words: jnp.ndarray, scales: jnp.ndarray,
         prefix_bits=prefix_bits,
         tile_chunks=tile_chunks,
         out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    return out[:n_chunks]
+
+
+def decode_dequantize_accumulate(acc: jnp.ndarray, words: jnp.ndarray,
+                                 scales: jnp.ndarray,
+                                 tables: CodecTables | Sequence[CodecTables],
+                                 chunk_symbols: int, *, scheme_ids=None,
+                                 tile_chunks: int | None = None,
+                                 interpret: bool | None = None
+                                 ) -> jnp.ndarray:
+    """Fused QLC-decode + e4m3-dequantize + accumulate: one dispatch
+    per ring reduce-scatter hop.
+
+    Args:
+      acc: f32 [n_chunks, K] running accumulator.
+      words: u32 [n_chunks, CW] packed slots of the arriving hop.
+      scales: f32 [n_chunks, K/32] block-32 scales of the hop.
+      tables / scheme_ids: as in :func:`decode_dequantize`.
+
+    Returns:
+      [n_chunks, K] f32 ``acc + dequantize(decode(words))``. With a
+      zero ``acc`` this is bit-exact against ``decode_dequantize``;
+      with a live accumulator it matches a separate decode-then-add to
+      one f32 ulp — the compiler may FMA-contract the in-kernel
+      dequantize multiply into the add (excess precision), which no
+      graph-level fence reliably prevents. Transport-level bit-identity
+      therefore comes from running the SAME accumulate op sequence on
+      every path (``transport._accumulate_row_pieces``), never from mixing
+      this fused form with decode-then-add.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n_chunks = words.shape[0]
+    assert acc.shape == (n_chunks, chunk_symbols), (
+        acc.shape, n_chunks, chunk_symbols)
+    if tile_chunks is None:
+        tile_chunks = auto_tile_chunks(chunk_symbols, n_chunks)
+    dec, sb, st, prefix_bits, n_schemes = _stacked_luts(tables)
+    padded_w = _pad_rows(words, tile_chunks)
+    padded_s = _pad_rows(scales.astype(jnp.float32), tile_chunks)
+    padded_a = _pad_rows(acc.astype(jnp.float32), tile_chunks)
+    sid = _sid_rows(scheme_ids, n_chunks, n_schemes, tile_chunks)
+    out = qlc_fused.fused_decode_pallas(
+        padded_w, padded_s, sid, dec, sb, st,
+        jnp.asarray(e4m3.decode_table(), dtype=jnp.float32),
+        padded_a,
+        chunk_symbols=chunk_symbols,
+        prefix_bits=prefix_bits,
+        tile_chunks=tile_chunks,
+        out_dtype=jnp.float32,
         interpret=interpret,
     )
     return out[:n_chunks]

@@ -224,8 +224,13 @@ def fused_encode_pallas(x: jnp.ndarray, enc_code: jnp.ndarray,
 
 def _fused_decode_kernel(words_ref, scales_ref, sid_ref, dec_lut_ref,
                          area_sb_ref, area_starts_ref, value_tab_ref,
-                         out_ref, sym_ref, *, chunk_symbols: int,
-                         prefix_bits: int, out_dtype):
+                         *rest_refs, chunk_symbols: int,
+                         prefix_bits: int, out_dtype, accumulate: bool):
+    if accumulate:
+        acc_ref, out_ref, sym_ref = rest_refs
+    else:
+        out_ref, sym_ref = rest_refs
+        acc_ref = None
     words = words_ref[...]                       # (TC, CW) uint32
     tc, cw = words.shape
     n_area = area_sb_ref.shape[-1]
@@ -270,7 +275,16 @@ def _fused_decode_kernel(words_ref, scales_ref, sid_ref, dec_lut_ref,
     vals = jnp.take(vtab, sym_ref[...])          # (TC, K) f32
     vb = vals.reshape(tc, chunk_symbols // BLOCK, BLOCK)
     vb = vb * scales_ref[...][..., None]
-    out_ref[...] = vb.reshape(tc, chunk_symbols).astype(out_dtype)
+    flat = vb.reshape(tc, chunk_symbols)
+    if accumulate:
+        # In-register running sum: the ring reduce-scatter's per-hop
+        # accumulate never materializes the hop's decoded values in HBM.
+        # The barrier stops the compiler from contracting the dequant
+        # multiply and this add into one FMA — the product must round
+        # to f32 first, or the fused form drifts a ulp from the
+        # decode-then-add paths it is tested bit-equal against.
+        flat = acc_ref[...] + jax.lax.optimization_barrier(flat)
+    out_ref[...] = flat.astype(out_dtype)
 
 
 @functools.partial(
@@ -280,7 +294,7 @@ def _fused_decode_kernel(words_ref, scales_ref, sid_ref, dec_lut_ref,
 def fused_decode_pallas(words: jnp.ndarray, scales: jnp.ndarray,
                         scheme_ids: jnp.ndarray, dec_lut: jnp.ndarray,
                         area_sb: jnp.ndarray, area_starts: jnp.ndarray,
-                        value_tab: jnp.ndarray,
+                        value_tab: jnp.ndarray, acc: jnp.ndarray = None,
                         *, chunk_symbols: int, prefix_bits: int = 3,
                         tile_chunks: int = DEFAULT_TILE_CHUNKS,
                         out_dtype=jnp.float32,
@@ -294,32 +308,51 @@ def fused_decode_pallas(words: jnp.ndarray, scales: jnp.ndarray,
     bf16 for weight-wire consumers) is cast in-register before the
     store — same rounding as an external cast. n_chunks must be a
     multiple of tile_chunks (ops.py pads).
+
+    ``acc`` ([n_chunks, K] f32, optional) switches the kernel to its
+    fused decode→dequantize→accumulate form: the output becomes
+    ``acc + decoded`` (f32 only) with the add performed in-register —
+    the ring reduce-scatter's single-dispatch-per-hop inner loop.
     """
     n_chunks, cw = words.shape
+    accumulate = acc is not None
     assert n_chunks % tile_chunks == 0, (n_chunks, tile_chunks)
     assert chunk_symbols % BLOCK == 0, chunk_symbols
     assert dec_lut.ndim == 2 and area_sb.ndim == 2, (
         "stacked LUT operands required: dec_lut [S, 256], area_* [S, A]")
+    if accumulate:
+        assert jnp.dtype(out_dtype) == jnp.dtype(jnp.float32), (
+            "accumulate form is f32-only", out_dtype)
+        assert acc.shape == (n_chunks, chunk_symbols), acc.shape
     s, a = area_sb.shape
     grid = (n_chunks // tile_chunks,)
 
     kernel = functools.partial(
         _fused_decode_kernel, chunk_symbols=chunk_symbols,
-        prefix_bits=prefix_bits, out_dtype=out_dtype)
+        prefix_bits=prefix_bits, out_dtype=out_dtype,
+        accumulate=accumulate)
+
+    in_specs = [
+        pl.BlockSpec((tile_chunks, cw), lambda i: (i, 0)),
+        pl.BlockSpec((tile_chunks, chunk_symbols // BLOCK),
+                     lambda i: (i, 0)),
+        pl.BlockSpec((tile_chunks, 1), lambda i: (i, 0)),
+        pl.BlockSpec((s, dec_lut.shape[1]), lambda i: (0, 0)),
+        pl.BlockSpec((s, a), lambda i: (0, 0)),
+        pl.BlockSpec((s, a), lambda i: (0, 0)),
+        pl.BlockSpec((value_tab.shape[0],), lambda i: (0,)),
+    ]
+    operands = [words, scales, scheme_ids, dec_lut, area_sb, area_starts,
+                value_tab]
+    if accumulate:
+        in_specs.append(pl.BlockSpec((tile_chunks, chunk_symbols),
+                                     lambda i: (i, 0)))
+        operands.append(acc)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_chunks, cw), lambda i: (i, 0)),
-            pl.BlockSpec((tile_chunks, chunk_symbols // BLOCK),
-                         lambda i: (i, 0)),
-            pl.BlockSpec((tile_chunks, 1), lambda i: (i, 0)),
-            pl.BlockSpec((s, dec_lut.shape[1]), lambda i: (0, 0)),
-            pl.BlockSpec((s, a), lambda i: (0, 0)),
-            pl.BlockSpec((s, a), lambda i: (0, 0)),
-            pl.BlockSpec((value_tab.shape[0],), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tile_chunks, chunk_symbols),
                                lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_chunks, chunk_symbols),
@@ -327,4 +360,4 @@ def fused_decode_pallas(words: jnp.ndarray, scales: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((tile_chunks, chunk_symbols),
                                    jnp.int32)],
         interpret=interpret,
-    )(words, scales, scheme_ids, dec_lut, area_sb, area_starts, value_tab)
+    )(*operands)

@@ -44,6 +44,11 @@ def main():
     ap.add_argument("--global-batch", type=int, default=None)
     ap.add_argument("--comm", default="baseline",
                     choices=["baseline", "qlc"])
+    ap.add_argument("--transport", default="auto",
+                    choices=["auto", "oneshot", "ring"],
+                    help="compressed-collective transport: 'auto' lets "
+                         "the planner's alpha-beta model pick one-shot "
+                         "vs ring (+ hop chunking) per collective/axis")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-dir", default=None)
@@ -90,7 +95,8 @@ def main():
             registry.register("params", histogram_of_tree(params),
                               chunk_symbols=plan.chunk_symbols)
             step = jax.jit(make_compressed_step(
-                cfg, opt_cfg, train_cfg, mesh, registry))
+                cfg, opt_cfg, train_cfg, mesh, registry,
+                transport=args.transport))
             opt_state = init_compressed_opt_state(
                 cfg, mesh, train_cfg, registry, opt_cfg)
         else:

@@ -121,14 +121,29 @@ def codec_from_manifest(manifest: dict, use_kernels: bool = True):
     return GroupWireCodec.from_manifest(manifest, use_kernels=use_kernels)
 
 
-def open_params(wired_params, wire_codec):
+def open_params(wired_params, wire_codec, *, axis_name=None,
+                axis_size=None, transport=None):
     """Decode a QLC-wired parameter tree back to dense arrays in-graph.
 
     With ``wire_codec.use_kernels`` each leaf is opened by the fused
     decode→dequantize Pallas kernel (one dispatch, symbols stay in
     VMEM); numerics are identical to the pure-JAX open either way.
+
+    Mesh path: when ``axis_name`` is given (call inside ``shard_map``
+    with each compressed leaf sharded along its chunk dim over that
+    axis), the wire streams through the transport layer instead of a
+    bf16 gather — with the ring transport (default) every peer shard's
+    containers decode while the next hop's compressed bytes are in
+    flight (``repro.comm.transport`` semantics; ``transport`` accepts a
+    planner ``TransportConfig`` or "oneshot"/"ring"). Values are
+    bit-identical to the unsharded open.
     """
-    return wire_codec.open_group(wired_params)
+    if axis_name is None:
+        return wire_codec.open_group(wired_params)
+    if axis_size is None:
+        raise ValueError("the sharded open needs the static axis_size")
+    return wire_codec.open_group_sharded(
+        wired_params, axis_name, int(axis_size), transport)
 
 
 def generate_from_wire(wired_params, wire_codec, cfg: ModelConfig,

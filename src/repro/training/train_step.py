@@ -37,6 +37,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.comm import CommConfig, qlc_all_gather, qlc_reduce_scatter
+from repro.comm import planner as comm_planner
 from repro.configs.base import ModelConfig
 from repro.core.registry import CodecRegistry
 from repro.models import init_params, next_token_loss, param_specs
@@ -82,6 +83,69 @@ def resolve_step_codecs(codec, comm_cfg: CommConfig = None, *,
     if comm_cfg is None:
         raise TypeError("bare CodecTables needs an explicit CommConfig")
     return (codec, comm_cfg), (codec, comm_cfg)
+
+
+def resolve_step_transports(transport, *, grad_key: str = GRAD_TYPE,
+                            param_key: str = PARAM_TYPE):
+    """Per-collective transport selection, mirroring the codec keys.
+
+    ``transport`` is ``None`` (one-shot everywhere, legacy), a
+    ``TransportConfig``/str applied to both collectives, the string
+    ``"auto"`` (the planner's alpha-beta model picks per collective and
+    per axis at build time), or a dict with ``grad_key`` (gradient
+    reduce-scatter) / ``param_key`` (parameter all-gather) entries —
+    per-collective transport keys next to the per-collective codec
+    keys. Returns ``(rs_transport, ag_transport)`` where each is a
+    ``TransportConfig`` or the sentinel string ``"auto"``.
+    """
+    if isinstance(transport, dict):
+        return (resolve_step_transports(transport.get(grad_key))[0],
+                resolve_step_transports(transport.get(param_key))[1])
+    if isinstance(transport, str) and transport == "auto":
+        return "auto", "auto"
+    t = comm_planner.resolve_transport(transport)
+    return t, t
+
+
+def _auto_axis_transports(transport, rs_order, dp_sizes, n_padded: int,
+                          cfg: CommConfig, model=None, *,
+                          is_reduce: bool = False):
+    """Per-axis TransportConfigs for the hierarchical RS/AG ladder.
+
+    For ``"auto"``, walks the reduce-scatter axis order with the payload
+    shrinking by each axis size (the all-gather mirrors it in reverse,
+    with the same per-axis geometry) and lets
+    ``planner.choose_transport`` pick per hop; a fixed config applies
+    to every axis. Either way, ring ``hop_chunks`` is clamped to tile
+    each axis's per-shard chunk count — otherwise the extra hop padding
+    would change the static segment length the ZeRO-1 geometry
+    (``flat_geometry``) was computed from.
+    """
+    model = model or comm_planner.AlphaBetaModel()
+    out = {}
+    n = n_padded
+    for ax in rs_order:
+        d = dp_sizes[ax]
+        shard_syms = n // d
+        if transport == "auto":
+            wire = comm_planner.payload_wire_bytes(
+                shard_syms, cfg.chunk_symbols, cfg.capacity_words,
+                cfg.pool_slots_per_1k)
+            # the one-shot RS pays d accumulate dispatches (ring-parity
+            # op sequence) which the model must charge it for; the
+            # one-shot AG decode is ONE batched dispatch
+            t = comm_planner.choose_transport(
+                wire, 4.0 * shard_syms, d, model=model,
+                n_oneshot_decode_dispatches=d if is_reduce else 1)
+        else:
+            t = transport
+        if t.kind == "ring":
+            n_chunks = max(1, shard_syms // cfg.chunk_symbols)
+            h = comm_planner.clamp_hop_chunks(t.hop_chunks, n_chunks)
+            t = dataclasses.replace(t, hop_chunks=h)
+        out[ax] = t
+        n = shard_syms
+    return out
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes=None):
@@ -267,13 +331,26 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
                          train_cfg: TrainConfig, mesh: Mesh,
                          tables, comm_cfg: CommConfig = None, *,
                          grad_key: str = GRAD_TYPE,
-                         param_key: str = PARAM_TYPE) -> Callable:
+                         param_key: str = PARAM_TYPE,
+                         transport=None,
+                         transport_model=None) -> Callable:
     """train_step(params, flat_opt_state, batch) for compressed mode.
 
     ``tables`` is a legacy ``CodecTables`` (with ``comm_cfg``) or a
     ``CodecRegistry``: the gradient reduce-scatter then uses the
     ``grad_key`` codec and the parameter all-gather the ``param_key``
     codec — per-collective tensor-type selection (paper §7).
+
+    ``transport`` selects the collective transport the same way:
+    ``None`` (one-shot), a ``TransportConfig``/"ring" for both, a dict
+    with ``grad_key``/``param_key`` entries (per-collective transport
+    keys), or ``"auto"`` — the planner's alpha-beta model picks
+    one-shot vs ring (and the ring's hop chunking) per collective and
+    per dp axis from the flat-gradient geometry. ``transport_model``
+    (an ``AlphaBetaModel``) supplies measured constants for the
+    ``"auto"`` choice — e.g. the decode throughput
+    ``benchmarks/transport_overlap.py`` measures; default constants
+    are the v5e first-order guesses.
     """
     (rs_tables, rs_cfg), (ag_tables, ag_cfg) = resolve_step_codecs(
         tables, comm_cfg, grad_key=grad_key, param_key=param_key)
@@ -283,6 +360,8 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
     dp_sizes = {a: mesh.shape[a] for a in dp_axes}
     dp_total = dp_size_of(mesh, train_cfg)
     rs_order = tuple(a for a in ("data", "pod") if a in dp_axes)
+    rs_transport, ag_transport = resolve_step_transports(
+        transport, grad_key=grad_key, param_key=param_key)
 
     p_specs, _ = _manual_param_specs(model_cfg, mesh)
     # Stacked-grad specs: stage 1 (model under auto) may only reference
@@ -296,6 +375,12 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
     b_spec = batch_pspec(mesh, train_cfg)
     n_local, n_padded, seg_len, weight_vec = flat_geometry(
         model_cfg, mesh, train_cfg, comm_cfg)
+    rs_t_by_ax = _auto_axis_transports(
+        rs_transport, rs_order, dp_sizes, n_padded, rs_cfg,
+        transport_model, is_reduce=True)
+    ag_t_by_ax = _auto_axis_transports(
+        ag_transport, rs_order, dp_sizes, n_padded, ag_cfg,
+        transport_model)
 
     # ---- stage 1: per-dp-shard gradients (model axis under GSPMD) -------
     if hasattr(jax, "shard_map"):
@@ -342,8 +427,9 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
         seg = g_flat
         ok = jnp.bool_(True)
         for ax in rs_order:                     # intra-pod, then cross-pod
-            seg, ok_i = qlc_reduce_scatter(
-                seg, ax, dp_sizes[ax], rs_tables, rs_cfg)
+            seg, _valid, ok_i = qlc_reduce_scatter(
+                seg, ax, dp_sizes[ax], rs_tables, rs_cfg,
+                transport=rs_t_by_ax[ax])
             ok &= ok_i
         seg = seg / dp_total                    # mean over dp
 
@@ -365,8 +451,18 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
 
         full = new_seg
         for ax in reversed(rs_order):           # cross-pod, then intra-pod
-            full, ok_i = qlc_all_gather(full, ax, ag_tables, ag_cfg)
+            full, ok_i = qlc_all_gather(full, ax, ag_tables, ag_cfg,
+                                        transport=ag_t_by_ax[ax],
+                                        axis_size=dp_sizes[ax])
             ok &= ok_i
+        # ok is per-rank (each rank decodes different payloads, and the
+        # model axis shards the flat vector); the step's retry signal
+        # must trip when ANY rank's escape pool overflowed. Reduce it
+        # globally — the P() out-spec would otherwise silently report
+        # rank 0's flag.
+        ok = jnp.equal(jax.lax.psum(
+            jnp.where(ok, jnp.int32(0), jnp.int32(1)),
+            tuple(dp_axes) + ("model",)), 0)
         new_params = _unflatten_local(full[:n_local], meta)
         new_params = jax.tree.map(lambda a, old: a.astype(old.dtype),
                                   new_params, params)

@@ -154,12 +154,14 @@ print("all_gather OK")
         run_md(MD_PRELUDE + """
 def mk(c):
     def f(x):
-        seg, ok = qlc_reduce_scatter(x[0], "d", 8, tables, c)
-        return seg[None], ok[None]
+        seg, valid, ok = qlc_reduce_scatter(x[0], "d", 8, tables, c)
+        # 8 * 4096 input, segment = 512: every entry is real data
+        return seg[None], valid[None], ok[None]
     return jax.jit(shard_map(f, mesh=mesh, in_specs=P("d", None),
-                             out_specs=(P("d", None), P("d"))))
-seg_c, ok_c = mk(cfg)(X)
-seg_r, _ = mk(cfg_raw)(X)
+                             out_specs=(P("d", None), P("d"), P("d"))))
+seg_c, valid_c, ok_c = mk(cfg)(X)
+np.testing.assert_array_equal(np.asarray(valid_c), 512)
+seg_r, _, _ = mk(cfg_raw)(X)
 np.testing.assert_array_equal(np.asarray(seg_c), np.asarray(seg_r))
 assert np.asarray(ok_c).all()
 # vs float reference, within quantization error
@@ -187,7 +189,8 @@ def mk(c, fn):
 for name, fn in [
     ("all_gather", lambda x, c: qlc_all_gather(x, "d", tables, c)),
     ("reduce_scatter",
-     lambda x, c: qlc_reduce_scatter(x, "d", 8, tables, c)),
+     lambda x, c: (lambda r: (r.segment, r.ok))(
+         qlc_reduce_scatter(x, "d", 8, tables, c))),
     ("psum", lambda x, c: qlc_psum(x, "d", 8, tables, c)),
 ]:
     o1, ok1 = mk(cfg, fn)(X)

@@ -343,7 +343,8 @@ X = (rng.standard_normal((8, 4096)) *
 for name, fn in [
     ("all_gather", lambda x: qlc_all_gather(x, "d", tables, cfg)),
     ("reduce_scatter",
-     lambda x: qlc_reduce_scatter(x, "d", 8, tables, cfg)),
+     lambda x: (lambda r: (r.segment, r.ok))(
+         qlc_reduce_scatter(x, "d", 8, tables, cfg))),
     ("psum", lambda x: qlc_psum(x, "d", 8, tables, cfg)),
 ]:
     def f(x):

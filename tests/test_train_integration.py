@@ -44,7 +44,15 @@ comm_cfg = CommConfig.from_plan(plan)
 class TestCompressedVsBaseline:
     def test_loss_trajectories_match(self):
         out = run_md(MD_TRAIN + """
+import dataclasses
 from repro.training.train_step import _manual_param_specs
+
+# Total escape pool: this reduced model's flat gradient holds only tens
+# of chunks per rank, so the planner's ~1-slot pool can overflow on
+# heavy-tailed steps. The step's ok now reflects EVERY rank (a real
+# overflow means retry, not a silently corrupt trajectory), so make the
+# wire unconditionally lossless here.
+comm_cfg = dataclasses.replace(comm_cfg, pool_slots_per_1k=1024)
 
 base_step = jax.jit(make_baseline_step(cfg, opt_cfg, train_cfg))
 comp_step = jax.jit(make_compressed_step(cfg, opt_cfg, train_cfg, mesh,
