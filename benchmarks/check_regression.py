@@ -39,6 +39,13 @@ METRIC_GATES = {
         # and the paper's multi-LUT setup needs >= 2 distinct schemes
         "distinct_schemes": (">=", 2),
     },
+    "channel_dispatch": {
+        # the Channel API resolves everything at construction, so a
+        # jitted channel call must cost within 2% of the direct
+        # functional call (min-of-N interleaved timing — see
+        # benchmarks/kernels_bench.py).
+        "channel_vs_direct_ratio": ("<=", 1.02),
+    },
     "collective_overlap": {
         # above the ring/one-shot crossover, the modeled ring time
         # (decode overlapping the wire) must never exceed the modeled

@@ -101,4 +101,59 @@ def run(n: int = 1 << 18):
     assert (np.asarray(fw) == np.asarray(uw)).all()
     assert (np.asarray(fsc) == np.asarray(usc)).all()
 
+    # --- channel dispatch overhead (Channel API vs direct call) ---------
+    # The Channel resolves codec/config at CONSTRUCTION, so inside jit a
+    # channel method must trace to the IDENTICAL computation as the
+    # direct functional call. The gated metric (check_regression
+    # METRIC_GATES: channel_vs_direct_ratio <= 1.02) is the measured
+    # interleaved min-of-N time ratio — except when the two compiled
+    # programs are verified bit-identical (normalized HLO text match),
+    # where the structural overhead is exactly zero and the metric
+    # reports 1.0: on a shared CI box the timer noise on one executable
+    # exceeds 2%, and re-timing the same program must not flake the
+    # gate. The raw measurement stays in the row (measured_ratio) under
+    # the usual 10x timing rule.
+    import re
+    from repro.comm.channel import Channel, ChannelSpec
+    from repro.comm.compressed import (CommConfig, _compress_values,
+                                       _decompress_values)
+    ccfg = CommConfig(chunk_symbols=k, capacity_words=cap)
+    ch = Channel(ChannelSpec(codec=tables, cfg=ccfg))
+    flat = vals
+
+    @jax.jit
+    def direct_rt(v):
+        p, s = _compress_values(v, tables, ccfg)
+        return _decompress_values(p, s, tables, ccfg)[0]
+
+    @jax.jit
+    def channel_rt(v):
+        p, s = ch.compress(v)
+        return ch.decompress(p, s)[0]
+
+    def _norm_hlo(f):                    # function name is the only
+        text = f.lower(flat).compile().as_text()      # allowed delta
+        return re.sub(r"(direct_rt|channel_rt)", "F", text)
+
+    hlo_identical = _norm_hlo(direct_rt) == _norm_hlo(channel_rt)
+    jax.block_until_ready(direct_rt(flat))          # warm both
+    jax.block_until_ready(channel_rt(flat))
+    t_direct, t_channel = float("inf"), float("inf")
+    for _ in range(10):                             # interleaved min-of-N
+        t0 = time.perf_counter()
+        jax.block_until_ready(direct_rt(flat))
+        t_direct = min(t_direct, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(channel_rt(flat))
+        t_channel = min(t_channel, time.perf_counter() - t0)
+    measured = t_channel / t_direct
+    row("channel_dispatch", t_channel,
+        direct_us_per_call=round(t_direct * 1e6, 1),
+        hlo_identical=int(hlo_identical),
+        measured_ratio=round(measured, 4),
+        channel_vs_direct_ratio=(1.0 if hlo_identical
+                                 else round(measured, 4)))
+    np.testing.assert_array_equal(np.asarray(direct_rt(flat)),
+                                  np.asarray(channel_rt(flat)))
+
     return rows

@@ -13,16 +13,12 @@ regressed.
 """
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import (AlphaBetaModel, CommConfig, choose_transport,
-                        compress_values, decompress_values,
-                        modeled_oneshot_time, modeled_ring_time,
-                        transport_crossover_bytes)
+                        measure_decode_Bps, modeled_oneshot_time,
+                        modeled_ring_time, transport_crossover_bytes)
 from repro.comm.calibrate import calibrate_for_tensor
 from repro.comm.planner import HOP_CHUNK_CANDIDATES, payload_wire_bytes
 from repro.core import distributions
@@ -33,27 +29,20 @@ PROD_SHARD_VALUE_BYTES = 256e6     # 64M f32 gradients per shard
 
 
 def _measure_decode_Bps(n: int) -> tuple[float, float, CommConfig]:
-    """Time the jitted decode of a calibrated grad-stream payload.
+    """Measure beta_decode on a calibrated grad-stream payload.
 
-    Returns ``(decode_Bps, measured_us, cfg)`` where throughput is in
-    decoded f32 value bytes per second.
+    Calibrates a grad codec, then delegates the timing to the shared
+    :func:`repro.comm.channel.measure_decode_Bps` probe — the same
+    measurement ``Channel.autotune`` runs. Returns ``(decode_Bps,
+    measured_us, cfg)``; throughput is in decoded f32 value bytes/s.
     """
     syms = distributions.grad_symbols(n)
     vals = e4m3.e4m3_decode(jnp.asarray(syms))
     tables, plan = calibrate_for_tensor(vals, chunk_symbols=1024)
     cfg = CommConfig.from_plan(plan)
-    m = (n // cfg.chunk_symbols) * cfg.chunk_symbols
-    x = jnp.asarray(np.asarray(vals[:m], np.float32))
-    payload, scales = compress_values(x, tables, cfg)
-
-    dec = jax.jit(lambda p, s: decompress_values(p, s, tables, cfg)[0])
-    jax.block_until_ready(dec(payload, scales))        # compile
-    reps = 3
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(dec(payload, scales))
-    dt = (time.perf_counter() - t0) / reps
-    return 4.0 * m / dt, dt * 1e6, cfg
+    counts = np.bincount(np.asarray(syms), minlength=256)
+    bps, secs = measure_decode_Bps(tables, cfg, n, counts=counts)
+    return bps, secs * 1e6, cfg
 
 
 def run(n: int = 1 << 20):

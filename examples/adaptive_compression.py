@@ -14,7 +14,7 @@ Run:  PYTHONPATH=src python examples/adaptive_compression.py
 """
 import numpy as np
 
-from repro.comm import container as qc
+from repro.comm import container as qc, open_channels
 from repro.core import (CodecRegistry, TABLE1, TABLE2, distributions,
                         entropy, huffman, select_scheme)
 from repro.core.scheme_search import optimal_scheme
@@ -86,6 +86,21 @@ def registry_demo():
           f"({len(outs)} sections, "
           f"{len({h.scheme_id for _, h in qc.stream_headers(stream)})} "
           "distinct schemes)")
+
+    # and the Channel API binds each type's wire decision once: codec +
+    # transport policy + mesh axis. With transport="auto" the channel
+    # picks one-shot vs ring per payload size (planner model, or a
+    # cached Channel.autotune measurement when one exists).
+    channels = open_channels(reg, axis="data", transport="auto",
+                             spec_overrides={n: {"axis_size": 8}
+                                             for n in reg.names()})
+    print("\n=== per-type channels (transport resolved per payload) ===")
+    for name in streams:
+        ch = channels[name]
+        small, big = ch.resolved_transport(1 << 12), \
+            ch.resolved_transport(1 << 26)
+        print(f"{name:>22}: 16KiB -> {small.kind}, "
+              f"256MiB -> {big.kind} (hop_chunks={big.hop_chunks})")
 
 
 def main():

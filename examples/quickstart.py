@@ -1,6 +1,7 @@
-"""Quickstart: build a per-tensor-type codec registry, compress payloads
-into self-describing QLC containers, and decode them back bit-exactly
-with nothing but the container bytes + the registry.
+"""Quickstart: build a per-tensor-type codec registry, open a wire
+Channel per tensor type, compress payloads into self-describing QLC
+containers, and decode them back bit-exactly with nothing but the
+container bytes + the registry.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import container as qc
+from repro.comm import container as qc, open_channels
 from repro.core import CodecRegistry, codec, entropy
 from repro.quant import e4m3
 
@@ -32,7 +33,24 @@ def main():
               f"({entry.scheme.areas}), "
               f"{entry.plan.expected_bits_per_symbol:.2f} bits/sym")
 
-    # 3) Compress fresh payloads of each type into one mixed stream of
+    # 3) One wire Channel per tensor type (the Channel API): codec +
+    #    transport policy + kernel toggle bound ONCE, then the whole
+    #    wire surface is methods. Local compress/decompress round trip:
+    channels = open_channels(reg)
+    ch = channels["ffn1_act"]
+    x = jax.random.normal(jax.random.PRNGKey(3),
+                          (8 * ch.cfg.chunk_symbols,))
+    payload, scales = ch.compress(x)
+    back, ok = ch.decompress(payload, scales)
+    assert bool(ok)
+    c, s = e4m3.quantize_block32(x.astype(jnp.float32))
+    want = e4m3.dequantize_block32(c, s.astype(jnp.bfloat16)
+                                   .astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(want))
+    print(f"channel {ch}: {ch.wire_bytes(payload, scales)} wire bytes "
+          f"for {x.size} values, lossless vs e4m3: OK")
+
+    # 4) Compress fresh payloads of each type into one mixed stream of
     #    self-describing containers: each section's header carries its
     #    scheme-id + chunk geometry, so no CommConfig rides along.
     fresh1 = jax.random.normal(jax.random.PRNGKey(1), (1 << 18,))
@@ -50,7 +68,7 @@ def main():
         print(f"  section @{off}: scheme-id {h.scheme_id}, "
               f"{h.n_chunks} chunks x {h.capacity_words} words")
 
-    # 4) Decode with ONLY the stream + a registry reloaded from JSON —
+    # 5) Decode with ONLY the stream + a registry reloaded from JSON —
     #    e.g. on a different host. Bit-exact lossless vs the e4m3 values.
     reg2 = CodecRegistry.from_json(reg.to_json())
     outs = qc.decode_values_stream(stream, reg2)
@@ -62,7 +80,7 @@ def main():
         np.testing.assert_array_equal(np.asarray(vals), np.asarray(want))
     print("mixed-scheme lossless roundtrip: OK")
 
-    # 5) Compressibility metric (paper's headline number) per type.
+    # 6) Compressibility metric (paper's headline number) per type.
     for name, x in [("ffn1_act", acts), ("ffn2_act", gated)]:
         codes, _ = e4m3.quantize_block32(x.astype(np.float32))
         tables = reg.tables_for(name)

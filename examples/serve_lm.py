@@ -1,7 +1,11 @@
 """Batched serving example: prefill a batch of prompts, decode greedily.
 
 The decode step here is exactly what the decode_32k / long_500k dry-run
-cells lower at production scale.
+cells lower at production scale. With ``--wire qlc`` the weights are
+served from QLC wire: a codec registry calibrates per-parameter codecs,
+the wire codec binds a Channel (kernel toggle + placement made once),
+and the serving manifest round-trips the whole recipe through JSON
+before the wire is opened in-graph.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch xlstm-125m
 """
@@ -23,6 +27,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--wire", default="none", choices=["none", "qlc"],
+                    help="'qlc' serves from compressed weights opened "
+                         "through a channel-bound wire codec")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch), frontend_prefix_len=0,
@@ -36,7 +43,25 @@ def main():
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size)
 
-    gen = jax.jit(lambda p, pr: generate(p, cfg, pr, serve_cfg))
+    if args.wire == "qlc":
+        from repro.comm.calibrate import histogram_of_tree
+        from repro.core import CodecRegistry
+        from repro.serving import (codec_from_manifest,
+                                   compress_params_for_serving,
+                                   open_params, serving_manifest)
+        reg = CodecRegistry()
+        reg.register("default", histogram_of_tree(params))
+        wired, wc = compress_params_for_serving(params, reg)
+        # manifest round trip — what a serving host reloads (registry,
+        # per-leaf scheme-ids, AND the channel placement)
+        wc2 = codec_from_manifest(serving_manifest(wc))
+        ch = wc2.channel()
+        print(f"serving {len(wc2.meta)} QLC-wired leaves via {ch}")
+        gen = jax.jit(lambda w, pr: generate(
+            open_params(w, wc2, channel=ch), cfg, pr, serve_cfg))
+        params = wired
+    else:
+        gen = jax.jit(lambda p, pr: generate(p, cfg, pr, serve_cfg))
     t0 = time.time()
     out = jax.block_until_ready(gen(params, prompts))
     t_compile = time.time() - t0

@@ -27,7 +27,7 @@ from repro.models import init_params
 from repro.parallel import sharding as shd
 from repro.training import (OptConfig, Trainer, TrainerConfig, TrainConfig,
                             init_compressed_opt_state, make_baseline_step,
-                            make_compressed_step)
+                            make_compressed_step, step_channels)
 from repro.training import optimizer as optm
 
 
@@ -51,6 +51,10 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--comm", default="qlc", choices=["baseline", "qlc"])
+    ap.add_argument("--transport", default="auto",
+                    choices=["auto", "oneshot", "ring"],
+                    help="wire transport policy bound into the step's "
+                         "channels (auto = per-payload planner choice)")
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
     args = ap.parse_args()
 
@@ -88,8 +92,21 @@ def main():
                       f"{e.plan.expected_bits_per_symbol:.2f} bits/sym, "
                       f"slot {e.plan.capacity_words * 32 / 512:.2f}")
             comm_cfg = registry["grads"].config()
+            # The step binds codec x transport x axis ONCE per
+            # (collective, dp axis) as Channel objects — inspect the
+            # same binding it will open:
+            rs_ch, _ag_ch, _cfg = step_channels(
+                registry, dp_sizes={a: mesh.shape[a]
+                                    for a in train_cfg.batch_axes
+                                    if a in mesh.axis_names},
+                rs_order=tuple(a for a in ("data", "pod")
+                               if a in mesh.axis_names),
+                transport=args.transport)
+            for ax, ch in rs_ch.items():
+                print(f"grad RS channel over {ax!r}: {ch}")
             step = jax.jit(make_compressed_step(
-                cfg, opt_cfg, train_cfg, mesh, registry))
+                cfg, opt_cfg, train_cfg, mesh, registry,
+                transport=args.transport))
             opt_state = init_compressed_opt_state(
                 cfg, mesh, train_cfg, registry, opt_cfg)
             fallback = baseline_adapter(baseline, cfg, mesh, train_cfg,

@@ -139,6 +139,7 @@ class CheckpointManager:
         counts = np.bincount(syms, minlength=256)
 
         from repro.comm import container as qc
+        from repro.comm.channel import Channel, ChannelSpec
         from repro.comm.compressed import CommConfig
         from repro.core import adapt
 
@@ -158,7 +159,7 @@ class CheckpointManager:
         # Exact measured capacity => zero escapes; the minimal 1-slot
         # pool is container overhead only.
         cfg = CommConfig(chunk_symbols=QLC_CHUNK, capacity_words=cap,
-                         pool_slots_per_1k=1, use_kernels=True)
+                         pool_slots_per_1k=1)
         pool_slots = cfg.pool_slots(n_chunks)
         container_words = (qc.HEADER_WORDS + n_chunks * cap
                            + -(-n_chunks // 4)
@@ -167,7 +168,14 @@ class CheckpointManager:
             return arr, None
         entry = registry.register(key, counts.astype(np.float64),
                                   chunk_symbols=QLC_CHUNK)
-        blob = qc.encode_codes(syms, entry, cfg=cfg)
+        # One local (axis-less) channel binds the leaf's codec + exact
+        # measured wire config + kernel toggle, encodes the symbol
+        # stream, and the container frames it self-describingly.
+        ch = Channel(ChannelSpec(codec=entry, cfg=cfg, use_kernels=True))
+        payload = ch.compress_codes(jax.numpy.asarray(padded))
+        blob = qc.pack_payload(payload, None, scheme_id=entry.scheme_id,
+                               cfg=ch.cfg, n_valid=n,
+                               prefix_bits=entry.tables.prefix_bits)
         meta = {"scheme_id": int(entry.scheme_id), "n": int(n)}
         return blob, meta
 

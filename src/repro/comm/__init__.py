@@ -20,6 +20,13 @@ from repro.comm.compressed import (  # noqa: F401
     wire_bytes,
 )
 from repro.comm import transport  # noqa: F401
+from repro.comm import channel  # noqa: F401
+from repro.comm.channel import (  # noqa: F401
+    Channel,
+    ChannelSpec,
+    measure_decode_Bps,
+    open_channels,
+)
 from repro.comm.planner import (  # noqa: F401
     ONESHOT,
     RING,

@@ -28,6 +28,13 @@ out-of-band config (checkpoints, serving manifests, offline exchange),
 ``repro.comm.container`` frames them with a self-describing header
 (scheme-id + chunk geometry + capacity + pool + scale layout).
 
+**Deprecation**: the loose-kwarg functional API here (``qlc_*``,
+``compress_values``, ``decompress_values``, ...) is superseded by
+:class:`repro.comm.channel.Channel`, which binds codec + transport +
+mesh axis once and exposes the same surface as methods. The functions
+remain as thin wrappers building a channel per call — bit-identical
+outputs — and emit a ``DeprecationWarning``.
+
 With ``cfg.use_kernels=True`` the local quantize→encode and
 decode→dequantize stages each run as one fused Pallas dispatch
 (``repro.kernels.ops``) instead of separate XLA ops — same numerics.
@@ -43,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -51,8 +59,24 @@ import numpy as np
 
 from repro.core import codec
 from repro.core.lut import CodecTables
-from repro.comm.planner import CommPlan, resolve_transport
+from repro.comm.planner import CommPlan
 from repro.quant import e4m3
+
+
+def _warn_legacy(old: str, new: str):
+    warnings.warn(
+        f"{old} is deprecated; bind the codec once with "
+        f"repro.comm.channel.Channel and call {new}",
+        DeprecationWarning, stacklevel=3)
+
+
+def _legacy_channel(tables, cfg, *, transport=None, axis_name=None,
+                    axis_size=None):
+    """One-shot Channel for a deprecated functional call."""
+    from repro.comm.channel import Channel, ChannelSpec
+    tables, cfg = resolve_codec(tables, cfg)
+    return Channel(ChannelSpec(codec=tables, cfg=cfg, transport=transport,
+                               axis=axis_name, axis_size=axis_size))
 
 
 def resolve_codec(codec_like, cfg: Optional["CommConfig"] = None,
@@ -229,14 +253,11 @@ def _assemble_payload(chunks: jnp.ndarray, words: jnp.ndarray,
                        pool=pool, pool_count=pool_count)
 
 
-def compress_codes(codes: jnp.ndarray, tables, cfg: CommConfig = None
-                   ) -> WirePayload:
-    """uint8 [..., M] (M % chunk_symbols == 0) -> WirePayload.
-
-    ``tables`` is a ``CodecTables`` (with explicit ``cfg``) or a
-    registry ``CodecEntry`` (cfg defaults to its calibrated plan).
-    """
-    tables, cfg = resolve_codec(tables, cfg)
+def _compress_codes(codes: jnp.ndarray, tables: CodecTables,
+                    cfg: CommConfig) -> WirePayload:
+    """Resolved-argument impl of :func:`compress_codes` (the
+    non-deprecated path — ``Channel.compress_codes`` and the transport
+    layer land here)."""
     k = cfg.chunk_symbols
     *lead, m = codes.shape
     assert m % k == 0, (m, k)
@@ -248,6 +269,19 @@ def compress_codes(codes: jnp.ndarray, tables, cfg: CommConfig = None
 
     words, nbits = _encode(chunks, tables, cfg)
     return _assemble_payload(chunks, words, nbits, cfg)
+
+
+def compress_codes(codes: jnp.ndarray, tables, cfg: CommConfig = None
+                   ) -> WirePayload:
+    """uint8 [..., M] (M % chunk_symbols == 0) -> WirePayload.
+
+    ``tables`` is a ``CodecTables`` (with explicit ``cfg``) or a
+    registry ``CodecEntry`` (cfg defaults to its calibrated plan).
+
+    .. deprecated:: use ``Channel.compress_codes``.
+    """
+    _warn_legacy("compress_codes", "Channel.compress_codes")
+    return _legacy_channel(tables, cfg).compress_codes(codes)
 
 
 def _gather_pool_raw(payload: WirePayload, cfg: CommConfig) -> jnp.ndarray:
@@ -269,9 +303,21 @@ def _gather_pool_raw(payload: WirePayload, cfg: CommConfig) -> jnp.ndarray:
 def decompress_codes(payload: WirePayload, tables,
                      cfg: CommConfig = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """WirePayload -> (uint8 codes [..., M], ok bool[...])."""
+    """WirePayload -> (uint8 codes [..., M], ok bool[...]).
+
+    .. deprecated:: use ``Channel.decompress_codes``.
+    """
+    _warn_legacy("decompress_codes", "Channel.decompress_codes")
     if tables is not None or cfg is None:
         tables, cfg = resolve_codec(tables, cfg)
+    return _decompress_codes(payload, tables, cfg)
+
+
+def _decompress_codes(payload: WirePayload, tables: Optional[CodecTables],
+                      cfg: CommConfig
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Resolved-argument impl of :func:`decompress_codes`. ``tables``
+    may be ``None`` only for a raw (``cfg.enabled=False``) wire."""
     k = cfg.chunk_symbols
     *lead, n_chunks, _ = payload.words.shape
 
@@ -319,6 +365,16 @@ def compress_values(x: jnp.ndarray, tables, cfg: CommConfig = None
     ``repro.comm.container`` — the container header carries the wire
     geometry + scheme-id so the payload decodes without this cfg.
 
+    .. deprecated:: use ``Channel.compress``.
+    """
+    _warn_legacy("compress_values", "Channel.compress")
+    return _legacy_channel(tables, cfg).compress(x)
+
+
+def _compress_values(x: jnp.ndarray, tables: CodecTables, cfg: CommConfig
+                     ) -> Tuple[WirePayload, jnp.ndarray]:
+    """Resolved-argument impl of :func:`compress_values`.
+
     With ``cfg.use_kernels`` the e4m3 quantization and QLC encode run as
     ONE fused Pallas dispatch (the symbols are emitted once, for the
     escape pool, instead of being written by quantize and re-read by
@@ -327,7 +383,6 @@ def compress_values(x: jnp.ndarray, tables, cfg: CommConfig = None
     tested bit-equal to ``e4m3.quantize_block32`` and its packer to
     ``codec.encode_chunks``.
     """
-    tables, cfg = resolve_codec(tables, cfg)
     k = cfg.chunk_symbols
     *lead, m = x.shape
     assert m % k == 0, (m, k)
@@ -347,7 +402,7 @@ def compress_values(x: jnp.ndarray, tables, cfg: CommConfig = None
         return _assemble_payload(chunks, words, nbits, cfg), scales
 
     codes, scales = _quantize(x, cfg)
-    return compress_codes(codes, tables, cfg), scales
+    return _compress_codes(codes, tables, cfg), scales
 
 
 def _pool_values(payload: WirePayload, scales: jnp.ndarray,
@@ -388,6 +443,17 @@ def decompress_values(payload: WirePayload, scales: jnp.ndarray,
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(WirePayload, scales) -> (float32 values [..., M], ok bool[...]).
 
+    .. deprecated:: use ``Channel.decompress``.
+    """
+    _warn_legacy("decompress_values", "Channel.decompress")
+    return _legacy_channel(tables, cfg).decompress(payload, scales)
+
+
+def _decompress_values(payload: WirePayload, scales: jnp.ndarray,
+                       tables: CodecTables, cfg: CommConfig
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Resolved-argument impl of :func:`decompress_values`.
+
     With ``cfg.use_kernels`` the QLC decode and e4m3 dequantize run as
     one fused Pallas dispatch producing floats directly from packed
     words; escaped chunks are dequantized from their raw pool form and
@@ -395,7 +461,6 @@ def decompress_values(payload: WirePayload, scales: jnp.ndarray,
     level (dequantization is a per-symbol table gather times the block
     scale either way).
     """
-    tables, cfg = resolve_codec(tables, cfg)
     k = cfg.chunk_symbols
     *lead, n_chunks, _ = payload.words.shape
 
@@ -411,7 +476,7 @@ def decompress_values(payload: WirePayload, scales: jnp.ndarray,
         out = jnp.where(escape[..., None], raw_vals, vals)
         return out.reshape(*lead, n_chunks * k), ok
 
-    codes, ok = decompress_codes(payload, tables, cfg)
+    codes, ok = _decompress_codes(payload, tables, cfg)
     return _dequantize(codes, scales), ok
 
 
@@ -420,6 +485,20 @@ def accumulate_values(acc: jnp.ndarray, payload: WirePayload,
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """``acc + decompress_values(payload)`` — the ring reduce-scatter's
     per-hop step. Returns ``(new_acc f32 [..., M], ok)``.
+
+    .. deprecated:: use a ``Channel`` (the ring transport accumulates
+    through ``transport._accumulate_row_pieces`` internally).
+    """
+    _warn_legacy("accumulate_values", "Channel collectives")
+    tables, cfg = resolve_codec(tables, cfg)
+    return _accumulate_values(acc, payload, scales, tables, cfg)
+
+
+def _accumulate_values(acc: jnp.ndarray, payload: WirePayload,
+                       scales: jnp.ndarray, tables: CodecTables,
+                       cfg: CommConfig
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Resolved-argument impl of :func:`accumulate_values`.
 
     With ``cfg.use_kernels`` the decode, dequantize, AND the running sum
     run as ONE fused Pallas dispatch
@@ -430,7 +509,6 @@ def accumulate_values(acc: jnp.ndarray, payload: WirePayload,
     which is bit-identical to ``acc + where(escape, raw, decoded)``
     (f32 addition distributes over the elementwise select exactly).
     """
-    tables, cfg = resolve_codec(tables, cfg)
     k = cfg.chunk_symbols
     *lead, n_chunks, _ = payload.words.shape
 
@@ -449,7 +527,7 @@ def accumulate_values(acc: jnp.ndarray, payload: WirePayload,
         out = jnp.where(escape[..., None], acc_chunks + raw_vals, summed)
         return out.reshape(*lead, n_chunks * k), ok
 
-    vals, ok = decompress_values(payload, scales, tables, cfg)
+    vals, ok = _decompress_values(payload, scales, tables, cfg)
     return acc + vals, ok
 
 
@@ -465,12 +543,14 @@ def pad_to_multiple(x: jnp.ndarray, multiple: int) -> Tuple[jnp.ndarray, int]:
 # --------------------------------------------------------------------------
 # Collectives (call inside shard_map with a named axis)
 #
-# Thin dispatchers over the transport layer (repro.comm.transport): the
-# one-shot transport is the legacy single lax.all_gather/all_to_all of
-# the full payload; the ring transport moves the same compressed bytes
-# in ppermute hops, decoding hop k while hop k+1 is in flight. Both
-# transports are bit-identical (tested) — the reduce accumulation order
-# is part of the transport contract (see transport.ordered_peer_sum).
+# DEPRECATED wrappers: each builds a one-shot Channel
+# (repro.comm.channel) binding codec + transport + axis, then calls the
+# corresponding method — the collective orchestration (padding,
+# transport dispatch, valid-length accounting) lives on Channel now.
+# Outputs are bit-identical to the pre-channel implementations; both
+# transports remain bit-identical to each other (tested) — the reduce
+# accumulation order is part of the transport contract (see
+# transport._accumulate_row_pieces).
 # --------------------------------------------------------------------------
 
 class ReduceScatterResult(NamedTuple):
@@ -501,14 +581,13 @@ def qlc_all_gather(x: jnp.ndarray, axis_name, tables,
     ``transport`` is ``None``/"oneshot" (legacy), "ring", or a planner
     :class:`~repro.comm.planner.TransportConfig`; the ring transport
     additionally needs the static ``axis_size``.
+
+    .. deprecated:: use ``Channel.all_gather``.
     """
-    from repro.comm import transport as tr
-    tables, cfg = resolve_codec(tables, cfg)
-    t = resolve_transport(transport)
-    flat, n = pad_to_multiple(x, t.hop_chunks * cfg.chunk_symbols)
-    vals, ok = tr.exchange_all_gather(
-        flat, axis_name, tables, cfg, t, axis_size)      # [D, seg]
-    return vals[:, :n].reshape(-1), ok
+    _warn_legacy("qlc_all_gather", "Channel.all_gather")
+    ch = _legacy_channel(tables, cfg, transport=transport,
+                         axis_name=axis_name, axis_size=axis_size)
+    return ch.all_gather(x)
 
 
 def qlc_reduce_scatter(x: jnp.ndarray, axis_name, axis_size: int,
@@ -528,21 +607,13 @@ def qlc_reduce_scatter(x: jnp.ndarray, axis_name, axis_size: int,
     Returns :class:`ReduceScatterResult` ``(segment, valid, ok)``; the
     segment is padded to the static length, ``valid`` counts its real
     entries. See ``qlc_psum`` for the round trip.
+
+    .. deprecated:: use ``Channel.reduce_scatter``.
     """
-    from repro.comm import transport as tr
-    tables, cfg = resolve_codec(tables, cfg)
-    t = resolve_transport(transport)
-    d = axis_size
-    flat, n = pad_to_multiple(x, d * t.hop_chunks * cfg.chunk_symbols)
-    seg = flat.shape[0] // d
-    xs = flat.reshape(d, seg)
-
-    acc, ok = tr.exchange_reduce_scatter(
-        xs, axis_name, axis_size, tables, cfg, t)        # [seg]
-
-    idx = jax.lax.axis_index(axis_name)
-    valid = jnp.clip(jnp.int32(n) - idx.astype(jnp.int32) * seg, 0, seg)
-    return ReduceScatterResult(segment=acc, valid=valid, ok=ok)
+    _warn_legacy("qlc_reduce_scatter", "Channel.reduce_scatter")
+    ch = _legacy_channel(tables, cfg, transport=transport,
+                         axis_name=axis_name, axis_size=axis_size)
+    return ch.reduce_scatter(x)
 
 
 def qlc_psum(x: jnp.ndarray, axis_name, axis_size: int, tables,
@@ -551,35 +622,34 @@ def qlc_psum(x: jnp.ndarray, axis_name, axis_size: int, tables,
     """All-reduce(sum) = compressed RS + compressed AG.
 
     Note both phases quantize (two e4m3 roundings), as in standard
-    compressed all-reduce; the QLC coding itself adds zero error.
+    compressed all-reduce; the QLC coding itself adds zero error. The
+    codec is resolved ONCE (by the channel) and threaded through both
+    phases.
+
+    .. deprecated:: use ``Channel.psum``.
     """
-    tables, cfg = resolve_codec(tables, cfg)
-    seg, _valid, ok_rs = qlc_reduce_scatter(
-        x, axis_name, axis_size, tables, cfg, transport=transport)
-    full, ok_ag = qlc_all_gather(seg, axis_name, tables, cfg,
-                                 transport=transport, axis_size=axis_size)
-    out = full[:x.size].reshape(x.shape)
-    return out, ok_rs & ok_ag
+    _warn_legacy("qlc_psum", "Channel.psum")
+    ch = _legacy_channel(tables, cfg, transport=transport,
+                         axis_name=axis_name, axis_size=axis_size)
+    return ch.psum(x)
 
 
 def qlc_all_to_all(x: jnp.ndarray, axis_name, tables,
                    cfg: CommConfig = None, *, transport=None,
                    axis_size: Optional[int] = None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Compressed all-to-all of x [D, ...] (row j -> peer j)."""
-    from repro.comm import transport as tr
-    tables, cfg = resolve_codec(tables, cfg)
-    t = resolve_transport(transport)
-    d = x.shape[0]
-    row = x.reshape(d, -1)
-    n = row.shape[1]
-    pad = (-n) % (t.hop_chunks * cfg.chunk_symbols)
-    if pad:
-        row = jnp.pad(row, ((0, 0), (0, pad)))
+    """Compressed all-to-all of x [D, ...] (row j -> peer j).
 
-    vals, ok = tr.exchange_all_to_all(
-        row, axis_name, tables, cfg, t, axis_size)       # [D, n_padded]
-    return vals[:, :n].reshape(x.shape), ok
+    .. deprecated:: use ``Channel.all_to_all``.
+    """
+    _warn_legacy("qlc_all_to_all", "Channel.all_to_all")
+    # d is static from x.shape, so the legacy no-axis_size call keeps
+    # working; Channel itself refuses a ring transport without it.
+    ch = _legacy_channel(tables, cfg, transport=transport,
+                         axis_name=axis_name,
+                         axis_size=x.shape[0] if axis_size is None
+                         else axis_size)
+    return ch.all_to_all(x)
 
 
 # --------------------------------------------------------------------------

@@ -53,10 +53,10 @@ import numpy as np
 
 from repro.core import codec as _codec
 from repro.core.registry import CodecEntry, CodecRegistry
-from repro.comm.compressed import (CommConfig, WirePayload, compress_codes,
-                                   compress_values, decompress_codes,
-                                   decompress_values, _gather_pool_raw,
-                                   pad_to_multiple)
+from repro.comm.compressed import (CommConfig, WirePayload,
+                                   _compress_codes, _compress_values,
+                                   _decompress_codes, _decompress_values,
+                                   _gather_pool_raw, pad_to_multiple)
 
 MAGIC = 0x514C4331           # "QLC1"
 CONTAINER_VERSION = 1
@@ -307,7 +307,7 @@ def encode_values(x, entry: CodecEntry, cfg: Optional[CommConfig] = None,
         cfg = entry.config(**cfg_overrides)
     flat, n = pad_to_multiple(jnp.asarray(x, jnp.float32).reshape(-1),
                               cfg.chunk_symbols)
-    payload, scales = compress_values(flat, entry.tables, cfg)
+    payload, scales = _compress_values(flat, entry.tables, cfg)
     return pack_payload(payload, scales, scheme_id=entry.scheme_id,
                         cfg=cfg, n_valid=n,
                         prefix_bits=entry.tables.prefix_bits)
@@ -327,7 +327,7 @@ def decode_values(buf, registry: CodecRegistry, offset: int = 0, *,
         **({} if use_kernels is None else {"use_kernels": use_kernels}))
     if scales is None:
         raise ValueError("container carries no scales; use decode_codes")
-    vals, ok = decompress_values(payload, scales, tables, cfg)
+    vals, ok = _decompress_values(payload, scales, tables, cfg)
     return vals.reshape(-1)[:h.n_valid], ok, pos
 
 
@@ -339,7 +339,7 @@ def encode_codes(codes, entry: CodecEntry,
         cfg = entry.config(**cfg_overrides)
     flat, n = pad_to_multiple(jnp.asarray(codes, jnp.uint8).reshape(-1),
                               cfg.chunk_symbols)
-    payload = compress_codes(flat, entry.tables, cfg)
+    payload = _compress_codes(flat, entry.tables, cfg)
     return pack_payload(payload, None, scheme_id=entry.scheme_id,
                         cfg=cfg, n_valid=n,
                         prefix_bits=entry.tables.prefix_bits)
@@ -353,7 +353,7 @@ def decode_codes(buf, registry: CodecRegistry, offset: int = 0, *,
     tables = _tables_for(h, registry)
     cfg = h.comm_config(
         **({} if use_kernels is None else {"use_kernels": use_kernels}))
-    out, ok = decompress_codes(payload, tables, cfg)
+    out, ok = _decompress_codes(payload, tables, cfg)
     return out.reshape(-1)[:h.n_valid], ok, pos
 
 
@@ -447,7 +447,7 @@ def decode_codes_stream(buf, registry: CodecRegistry, *,
             h, payload, _ = parsed[i]
             sec = dec[row:row + h.n_chunks]
             row += h.n_chunks
-            # Merge section-local escapes, as decompress_codes does.
+            # Merge section-local escapes, as _decompress_codes does.
             cfg = h.comm_config()
             escape = payload.flags.astype(bool)
             raw = _gather_pool_raw(payload, cfg)
@@ -457,7 +457,7 @@ def decode_codes_stream(buf, registry: CodecRegistry, *,
 
     for i, (h, payload, _) in enumerate(parsed):
         if results[i] is None:          # raw e4m3 section
-            out, ok = decompress_codes(payload, None, h.comm_config())
+            out, ok = _decompress_codes(payload, None, h.comm_config())
             results[i] = (out.reshape(-1)[:h.n_valid], bool(ok))
     return results
 

@@ -97,7 +97,7 @@ def _compress_pieces(flat: jnp.ndarray, hop_chunks: int, tables, cfg):
     a single transfer + a single decode).
     """
     pieces = flat.reshape(flat.shape[:-1] + (hop_chunks, -1))
-    return [comp.compress_values(pieces[..., p, :], tables, cfg)
+    return [comp._compress_values(pieces[..., p, :], tables, cfg)
             for p in range(hop_chunks)]
 
 
@@ -116,9 +116,9 @@ def _accumulate_row_pieces(accs, pieces, tables, cfg, ok):
     """
     for p, (pp, ps) in enumerate(pieces):
         if accs[p] is None:
-            accs[p], ok_s = comp.decompress_values(pp, ps, tables, cfg)
+            accs[p], ok_s = comp._decompress_values(pp, ps, tables, cfg)
         else:
-            accs[p], ok_s = comp.accumulate_values(
+            accs[p], ok_s = comp._accumulate_values(
                 accs[p], comp.WirePayload(*pp), ps, tables, cfg)
         ok &= jnp.all(ok_s)
     return accs, ok
@@ -160,11 +160,11 @@ def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
     Returns ``(vals f32 [d, seg], ok bool [])``.
     """
     if t.kind == "oneshot":
-        payload, scales = comp.compress_values(flat, tables, cfg)
+        payload, scales = comp._compress_values(flat, tables, cfg)
         g_payload = comp.WirePayload(*jax.tree.map(
             lambda a: jax.lax.all_gather(a, axis_name), payload))
         g_scales = jax.lax.all_gather(scales, axis_name)
-        vals, ok = comp.decompress_values(g_payload, g_scales, tables, cfg)
+        vals, ok = comp._decompress_values(g_payload, g_scales, tables, cfg)
         return vals, jnp.all(ok)
 
     d = _require_axis_size(t, axis_size)
@@ -174,7 +174,7 @@ def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
     def consume(carry, buf, src, _hop):
         out, ok = carry
         for p, (pp, ps) in enumerate(buf):
-            vals, ok_s = comp.decompress_values(pp, ps, tables, cfg)
+            vals, ok_s = comp._decompress_values(pp, ps, tables, cfg)
             out = jax.lax.dynamic_update_slice(
                 out, vals.reshape(1, 1, -1), (src, jnp.int32(p), 0))
             ok &= jnp.all(ok_s)
@@ -260,12 +260,12 @@ def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
     """
     d = rows.shape[0]
     if t.kind == "oneshot":
-        payload, scales = comp.compress_values(rows, tables, cfg)
+        payload, scales = comp._compress_values(rows, tables, cfg)
         a2a = lambda a: jax.lax.all_to_all(                 # noqa: E731
             a, axis_name, split_axis=0, concat_axis=0, tiled=True)
         r_payload = comp.WirePayload(*jax.tree.map(a2a, payload))
         r_scales = a2a(scales)
-        vals, ok = comp.decompress_values(r_payload, r_scales, tables, cfg)
+        vals, ok = comp._decompress_values(r_payload, r_scales, tables, cfg)
         return vals, jnp.all(ok)
 
     # d is static from rows.shape; an explicit axis_size must agree.
@@ -284,7 +284,7 @@ def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
         if s > 0:
             unit = _tree_permute(unit, axis_name, _shift_perm(d, s))
         for p, (pp, ps) in enumerate(unit):
-            vals, ok_s = comp.decompress_values(pp, ps, tables, cfg)
+            vals, ok_s = comp._decompress_values(pp, ps, tables, cfg)
             out = jax.lax.dynamic_update_slice(
                 out, vals.reshape(1, 1, -1), (src, jnp.int32(p), 0))
             ok &= jnp.all(ok_s)

@@ -69,12 +69,18 @@ class GroupWireCodec:
     Each leaf's :class:`LeafMeta` carries a scheme-id into
     ``registry``, so one wired tree mixes codecs freely (per-tensor-
     type LUTs). ``manifest()``/``from_manifest()`` round-trip the whole
-    recipe — registry included — through JSON.
+    recipe — registry AND channel placement (transport/axis/kernel
+    toggle) included — through JSON.
 
     ``use_kernels=True`` opens QLC leaves with the fused
     decode→dequantize Pallas kernel (``repro.kernels.ops``): one
     dispatch from packed words to float values, decoded symbols never
     touch HBM. Numerics are bit-identical to the pure-JAX path.
+
+    :meth:`channel` binds the wire codec's placement as a
+    :class:`~repro.comm.channel.Channel`; ``open_group_sharded`` (and
+    ``serving.open_params``) accept one in place of loose
+    axis/transport kwargs.
     """
     meta: Dict[str, LeafMeta]
     registry: CodecRegistry
@@ -83,12 +89,46 @@ class GroupWireCodec:
     # chunk-sharded wire moves to this device — "oneshot" all_gather
     # then decode, or ppermute ring hops with per-hop decode overlap.
     transport: Optional[Any] = None
+    # Mesh axis the chunk-sharded open runs over (manifest metadata;
+    # axis_size stays deployment-local).
+    axis: Optional[str] = None
 
     @property
     def tables(self):
         """Back-compat: the registry's sole/first entry's tables."""
         entries = self.registry.entries()
         return entries[0].tables if entries else None
+
+    def channel(self, axis_name: Optional[str] = None,
+                axis_size: Optional[int] = None, *, transport=None,
+                use_kernels: Optional[bool] = None):
+        """This wire's placement as a bound
+        :class:`~repro.comm.channel.Channel`.
+
+        The channel carries transport policy + mesh axis + kernel
+        toggle (per-leaf codecs still resolve by scheme-id from the
+        registry); pass it to :func:`repro.serving.open_params` /
+        :meth:`open_group_sharded`. Arguments default to the codec's
+        recorded placement (``self.transport`` / ``self.axis`` /
+        ``self.use_kernels``); an axis-bound channel with no recorded
+        transport defaults to ``"ring"``, matching the sharded open's
+        loose-kwarg default — both spellings stream the wire the same
+        way.
+        """
+        from repro.comm.channel import Channel, ChannelSpec
+        axis = axis_name if axis_name is not None else self.axis
+        t = transport if transport is not None else self.transport
+        if t is None and axis is not None:
+            t = "ring"          # the sharded open's default transport
+        return Channel(
+            ChannelSpec(
+                codec=None,
+                transport=t,
+                axis=axis,
+                axis_size=axis_size,
+                use_kernels=(self.use_kernels if use_kernels is None
+                             else use_kernels)),
+            registry=self.registry)
 
     def open_group(self, pg):
         def walk(node, prefix):
@@ -102,8 +142,9 @@ class GroupWireCodec:
             return node
         return walk(pg, "")
 
-    def open_group_sharded(self, pg, axis_name, axis_size: int,
-                           transport=None):
+    def open_group_sharded(self, pg, axis_name=None,
+                           axis_size: Optional[int] = None,
+                           transport=None, *, channel=None):
         """Open a wired tree whose compressed leaves are SHARDED along
         the chunk dim across ``axis_name`` (call inside ``shard_map``).
 
@@ -116,18 +157,32 @@ class GroupWireCodec:
         transport all-gathers the whole wire first and decodes after.
         Both produce values bit-identical to :meth:`open_group` on the
         unsharded tree (per-chunk decode is independent of batching).
+
+        ``channel`` (a :class:`~repro.comm.channel.Channel`) supplies
+        axis/axis_size/transport in one bound object; its ``"auto"``
+        policy resolves per leaf from the shard's static geometry.
         """
-        from repro.comm.planner import resolve_transport
-        t = resolve_transport(
-            transport if transport is not None
-            else (self.transport or "ring"))
+        if channel is not None:
+            axis_name = axis_name or channel.axis
+            axis_size = axis_size or channel.axis_size
+        if axis_name is None or axis_size is None:
+            raise ValueError(
+                "the sharded open needs a mesh axis + static axis_size "
+                "(pass axis_name/axis_size or a bound Channel)")
+        t = None
+        if channel is None or transport is not None:
+            from repro.comm.planner import resolve_transport
+            t = resolve_transport(
+                transport if transport is not None
+                else (self.transport or "ring"))
 
         def walk(node, prefix):
             if isinstance(node, dict) and (
                     set(node) == {"codes", "scales"}
                     or set(node) == {"words", "scales"}):
                 return self._decode_sharded(
-                    node, self.meta[prefix], axis_name, axis_size, t)
+                    node, self.meta[prefix], axis_name, axis_size, t,
+                    channel=channel)
             if isinstance(node, dict):
                 return {k: walk(v, f"{prefix}/{k}" if prefix else k)
                         for k, v in node.items()}
@@ -135,12 +190,14 @@ class GroupWireCodec:
         return walk(pg, "")
 
     def _decode_sharded(self, wire, m: LeafMeta, axis_name,
-                        axis_size: int, t) -> jnp.ndarray:
+                        axis_size: int, t, channel=None) -> jnp.ndarray:
         d = axis_size
         main_key = "codes" if m.mode == "e4m3" else "words"
         ncl = wire[main_key].shape[-2]           # local chunk shard
         assert ncl * d == m.n_chunks, (
             "leaf must be evenly chunk-sharded", ncl, d, m.n_chunks)
+        if t is None:                # channel-bound transport, per leaf
+            t = channel.resolved_transport(ncl * CHUNK, axis_size=d)
 
         if t.kind == "oneshot":
             g_wire = {k: jnp.moveaxis(
@@ -261,8 +318,10 @@ class GroupWireCodec:
     # ---- manifest (serving handoff) -------------------------------------
 
     def manifest(self) -> Dict:
-        """JSON-able recipe: per-leaf geometry + scheme-ids, plus the
-        registry itself."""
+        """JSON-able recipe: per-leaf geometry + scheme-ids, the
+        registry itself, and the channel placement (transport / axis /
+        kernel toggle) — the whole binding round-trips."""
+        from repro.comm.channel import transport_to_json
         leaves = {}
         for key, m in self.meta.items():
             leaves[key] = {
@@ -275,11 +334,18 @@ class GroupWireCodec:
                 "scheme_id": m.scheme_id,
             }
         return {"version": 1, "leaves": leaves,
-                "registry": self.registry.to_json_dict()}
+                "registry": self.registry.to_json_dict(),
+                "channel": {
+                    "transport": transport_to_json(self.transport),
+                    "axis": self.axis,
+                    "use_kernels": self.use_kernels,
+                }}
 
     @classmethod
-    def from_manifest(cls, d: Dict, use_kernels: bool = False
+    def from_manifest(cls, d: Dict,
+                      use_kernels: Optional[bool] = None
                       ) -> "GroupWireCodec":
+        from repro.comm.channel import transport_from_json
         registry = CodecRegistry.from_json_dict(d["registry"])
         meta = {}
         for key, lm in d["leaves"].items():
@@ -292,7 +358,12 @@ class GroupWireCodec:
                 mode=lm["mode"],
                 scheme_id=int(lm["scheme_id"]),
             )
-        return cls(meta=meta, registry=registry, use_kernels=use_kernels)
+        ch = d.get("channel", {})
+        if use_kernels is None:        # explicit arg beats the manifest
+            use_kernels = bool(ch.get("use_kernels", False))
+        return cls(meta=meta, registry=registry, use_kernels=use_kernels,
+                   transport=transport_from_json(ch.get("transport")),
+                   axis=ch.get("axis"))
 
 
 def _eligible(leaf_shape) -> bool:

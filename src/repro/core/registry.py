@@ -43,6 +43,17 @@ REGISTRY_VERSION = 1
 MAX_SCHEME_ID = 0xFFFF
 
 
+def payload_bucket(payload_bytes: int) -> int:
+    """Power-of-two bucket of a payload size (``ceil(log2(bytes))``).
+
+    The autotune cache (``Channel.autotune``) keys tuned
+    ``TransportConfig``s by ``(scheme_id, axis, payload_bucket)`` —
+    transport choice is insensitive to sub-2x payload variation, so
+    bucketing lets one measurement cover a size class.
+    """
+    return max(0, int(payload_bytes) - 1).bit_length()
+
+
 @dataclasses.dataclass(frozen=True)
 class CodecEntry:
     """One tensor type's codec: scheme + tables + wire plan, under a
@@ -109,6 +120,11 @@ class CodecRegistry:
         self._by_name: Dict[str, CodecEntry] = {}
         self._by_id: Dict[int, CodecEntry] = {}
         self._digest_to_id: Dict[str, int] = {}
+        # (scheme_id, axis, payload_bucket) -> TransportConfig; written
+        # by Channel.autotune, read by the "auto" transport policy, and
+        # serialized with the registry so tunings survive reload.
+        self._transport_cache: Dict[Tuple[int, str, int],
+                                    "TransportConfig"] = {}
 
     # ---- registration ----------------------------------------------------
 
@@ -226,6 +242,39 @@ class CodecRegistry:
     def config_for(self, name: str, **overrides) -> "CommConfig":
         return self[name].config(**overrides)
 
+    # ---- autotuned transport cache (Channel.autotune) --------------------
+
+    def cache_transport(self, scheme_id: int, axis: str,
+                        payload_bytes: int, transport: "TransportConfig",
+                        *, is_reduce: bool = False):
+        """Record an autotuned transport for ``(scheme_id, axis,
+        payload bucket, is_reduce)``. Overwrites any previous tuning
+        for the key. ``is_reduce`` keys reduce-scatter tunings apart
+        from gather/all-to-all ones — the one-shot RS pays per-rank
+        accumulate dispatches the other collectives don't, so their
+        optimal transports differ at the same payload size.
+        """
+        from repro.comm.planner import TransportConfig
+        if not isinstance(transport, TransportConfig):
+            raise TypeError(f"expected TransportConfig, got "
+                            f"{type(transport).__name__}")
+        key = (int(scheme_id), str(axis), payload_bucket(payload_bytes),
+               bool(is_reduce))
+        self._transport_cache[key] = transport
+
+    def cached_transport(self, scheme_id: int, axis: str,
+                         payload_bytes: int, *, is_reduce: bool = False
+                         ) -> Optional["TransportConfig"]:
+        """Tuned transport for the payload's size class, or ``None``."""
+        return self._transport_cache.get(
+            (int(scheme_id), str(axis), payload_bucket(payload_bytes),
+             bool(is_reduce)))
+
+    def transport_cache(self) -> Dict[Tuple[int, str, int, bool],
+                                      "TransportConfig"]:
+        """Read-only view of the tuning cache (tests / diagnostics)."""
+        return dict(self._transport_cache)
+
     # ---- multi-LUT batched decode operands -------------------------------
 
     def stacked_decode_tables(
@@ -274,7 +323,15 @@ class CodecRegistry:
                     "escape_prob_bound": entry.plan.escape_prob_bound,
                 },
             })
-        return {"version": REGISTRY_VERSION, "entries": entries}
+        out = {"version": REGISTRY_VERSION, "entries": entries}
+        if self._transport_cache:
+            out["transport_cache"] = [
+                {"scheme_id": sid, "axis": axis, "bucket": bucket,
+                 "is_reduce": red, "kind": t.kind,
+                 "hop_chunks": t.hop_chunks}
+                for (sid, axis, bucket, red), t
+                in sorted(self._transport_cache.items())]
+        return out
 
     def to_json(self) -> str:
         return json.dumps(self.to_json_dict())
@@ -302,6 +359,15 @@ class CodecRegistry:
                                         scheme_id=int(e["scheme_id"]))
             for alias in e.get("aliases", []):
                 reg._by_name[alias] = entry
+        if d.get("transport_cache"):
+            from repro.comm.planner import TransportConfig
+            for c in d["transport_cache"]:
+                reg._transport_cache[
+                    (int(c["scheme_id"]), str(c["axis"]),
+                     int(c["bucket"]),
+                     bool(c.get("is_reduce", False)))] = TransportConfig(
+                        kind=c["kind"],
+                        hop_chunks=int(c.get("hop_chunks", 1)))
         return reg
 
     @classmethod

@@ -1,8 +1,13 @@
 """Production serving launcher: batched greedy generation.
 
+``--wire qlc`` serves from QLC-compressed weights: the parameter stack
+is stored as block-32 e4m3 + QLC words and opened in-graph through a
+channel-bound fused decode (``repro.comm.channel`` + the serving wire
+codec) — the production path where weight bytes move compressed.
+
 Example:
   python -m repro.launch.serve --arch musicgen-medium --reduced \\
-      --batch 8 --new-tokens 32
+      --batch 8 --new-tokens 32 --wire qlc
 """
 from __future__ import annotations
 
@@ -27,6 +32,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--wire", default="none", choices=["none", "qlc"],
+                    help="'qlc' stores weights as QLC wire and decodes "
+                         "them in-graph via a bound channel")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -47,7 +55,22 @@ def main():
         prompts = jax.random.randint(
             jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
             cfg.vocab_size)
-        gen = jax.jit(lambda p, pr: generate(p, cfg, pr, serve_cfg))
+        if args.wire == "qlc":
+            from repro.comm.calibrate import histogram_of_tree
+            from repro.core import CodecRegistry
+            from repro.serving import (compress_params_for_serving,
+                                       open_params)
+            reg = CodecRegistry()
+            reg.register("default", histogram_of_tree(params))
+            wired, wc = compress_params_for_serving(params, reg)
+            ch = wc.channel()          # local open, fused kernel decode
+            print(f"weight wire: {len(wc.meta)} compressed leaves, "
+                  f"channel {ch}")
+            gen = jax.jit(lambda w, pr: generate(
+                open_params(w, wc, channel=ch), cfg, pr, serve_cfg))
+            params = wired
+        else:
+            gen = jax.jit(lambda p, pr: generate(p, cfg, pr, serve_cfg))
         out = jax.block_until_ready(gen(params, prompts))
         t0 = time.time()
         out = jax.block_until_ready(gen(params, prompts))

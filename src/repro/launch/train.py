@@ -49,6 +49,12 @@ def main():
                     help="compressed-collective transport: 'auto' lets "
                          "the planner's alpha-beta model pick one-shot "
                          "vs ring (+ hop chunking) per collective/axis")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure this host's decode throughput and "
+                         "autotune the per-axis transport "
+                         "(Channel.autotune); tunings are cached in the "
+                         "codec registry and picked up by --transport "
+                         "auto")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-dir", default=None)
@@ -94,6 +100,8 @@ def main():
             registry.register_tables("grads", tables, plan)
             registry.register("params", histogram_of_tree(params),
                               chunk_symbols=plan.chunk_symbols)
+            if args.autotune:
+                _autotune_transports(registry, cfg, mesh, train_cfg)
             step = jax.jit(make_compressed_step(
                 cfg, opt_cfg, train_cfg, mesh, registry,
                 transport=args.transport))
@@ -112,6 +120,35 @@ def main():
 
     losses = [h["loss"] for h in trainer.history]
     print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+def _autotune_transports(registry, model_cfg, mesh, train_cfg):
+    """Autotune the step's per-axis transports into the registry.
+
+    Builds one ``transport="auto"`` channel per (tensor type, dp axis)
+    — the same binding ``make_compressed_step`` opens — and runs
+    ``Channel.autotune`` at the flat-gradient payload each axis
+    actually moves; the tuned ``TransportConfig``s land in the
+    registry's cache, which the step's auto channels consult first.
+    """
+    from repro.comm.channel import Channel, ChannelSpec
+    from repro.training.train_step import dp_axes_in, flat_geometry
+    dp_axes = dp_axes_in(mesh, train_cfg)
+    _, n_padded, _, _ = flat_geometry(
+        model_cfg, mesh, train_cfg, registry["grads"].config())
+    n = n_padded
+    for ax in (a for a in ("data", "pod") if a in dp_axes):
+        d = int(mesh.shape[ax])
+        # grads feed the reduce-scatter (charged its per-rank
+        # accumulate dispatches), params the all-gather
+        for name, is_reduce in (("grads", True), ("params", False)):
+            ch = Channel(ChannelSpec(codec=name, transport="auto",
+                                     axis=ax, axis_size=d),
+                         registry=registry)
+            tuned = ch.autotune(4 * (n // d), is_reduce=is_reduce)
+            logging.info("autotuned %s over %s (d=%d): %s",
+                         name, ax, d, tuned.transport)
+        n //= d
 
 
 if __name__ == "__main__":

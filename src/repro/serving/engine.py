@@ -110,18 +110,25 @@ def compress_params_for_serving(params, tables, mode: str = "qlc",
 
 def serving_manifest(wire_codec) -> dict:
     """JSON-able manifest of a wired parameter tree: per-leaf geometry
-    + scheme-ids + the codec registry."""
+    + scheme-ids + the codec registry + the channel placement
+    (transport / axis / kernel toggle)."""
     return wire_codec.manifest()
 
 
-def codec_from_manifest(manifest: dict, use_kernels: bool = True):
+def codec_from_manifest(manifest: dict, use_kernels=None):
     """Rebuild a ``GroupWireCodec`` from :func:`serving_manifest` output
-    (tables are re-derived bit-identically from the registry)."""
+    (tables are re-derived bit-identically from the registry; the
+    channel placement rides along). ``use_kernels=None`` keeps the
+    manifest's recorded toggle; a bool overrides it. Manifests written
+    before the channel placement existed keep this function's historic
+    fused-kernel default."""
     from repro.comm.weights import GroupWireCodec
+    if use_kernels is None and "channel" not in manifest:
+        use_kernels = True          # pre-channel manifests: old default
     return GroupWireCodec.from_manifest(manifest, use_kernels=use_kernels)
 
 
-def open_params(wired_params, wire_codec, *, axis_name=None,
+def open_params(wired_params, wire_codec, *, channel=None, axis_name=None,
                 axis_size=None, transport=None):
     """Decode a QLC-wired parameter tree back to dense arrays in-graph.
 
@@ -129,15 +136,22 @@ def open_params(wired_params, wire_codec, *, axis_name=None,
     decode→dequantize Pallas kernel (one dispatch, symbols stay in
     VMEM); numerics are identical to the pure-JAX open either way.
 
-    Mesh path: when ``axis_name`` is given (call inside ``shard_map``
-    with each compressed leaf sharded along its chunk dim over that
-    axis), the wire streams through the transport layer instead of a
-    bf16 gather — with the ring transport (default) every peer shard's
-    containers decode while the next hop's compressed bytes are in
-    flight (``repro.comm.transport`` semantics; ``transport`` accepts a
-    planner ``TransportConfig`` or "oneshot"/"ring"). Values are
-    bit-identical to the unsharded open.
+    Mesh path: with a bound :class:`~repro.comm.channel.Channel` (or
+    the loose ``axis_name``/``axis_size``/``transport`` kwargs — the
+    channel is the preferred spelling, built once via
+    ``wire_codec.channel(axis, axis_size)``), call inside ``shard_map``
+    with each compressed leaf sharded along its chunk dim over the
+    channel's axis: the wire streams through the transport layer
+    instead of a bf16 gather — with the ring transport (default) every
+    peer shard's containers decode while the next hop's compressed
+    bytes are in flight (``repro.comm.transport`` semantics). Values
+    are bit-identical to the unsharded open.
     """
+    if channel is not None:
+        if channel.axis is None:          # local placement: plain open
+            return wire_codec.open_group(wired_params)
+        return wire_codec.open_group_sharded(
+            wired_params, transport=transport, channel=channel)
     if axis_name is None:
         return wire_codec.open_group(wired_params)
     if axis_size is None:

@@ -2,8 +2,8 @@ from repro.training.optimizer import OptConfig  # noqa: F401
 from repro.training.train_step import (  # noqa: F401
     TrainConfig,
     init_compressed_opt_state,
-    resolve_step_codecs,
     make_baseline_step,
     make_compressed_step,
+    step_channels,
 )
 from repro.training.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -36,8 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.comm import CommConfig, qlc_all_gather, qlc_reduce_scatter
-from repro.comm import planner as comm_planner
+from repro.comm import CommConfig
+from repro.comm.channel import Channel, ChannelSpec
 from repro.configs.base import ModelConfig
 from repro.core.registry import CodecRegistry
 from repro.models import init_params, next_token_loss, param_specs
@@ -48,10 +48,13 @@ GRAD_TYPE = "grads"      # registry key for the gradient reduce-scatter
 PARAM_TYPE = "params"    # registry key for the parameter all-gather
 
 
-def resolve_step_codecs(codec, comm_cfg: CommConfig = None, *,
-                        grad_key: str = GRAD_TYPE,
-                        param_key: str = PARAM_TYPE):
-    """Per-collective codec selection for the compressed step.
+def step_channels(codec, comm_cfg: CommConfig = None, *,
+                  dp_sizes, rs_order, transport=None, transport_model=None,
+                  grad_key: str = GRAD_TYPE, param_key: str = PARAM_TYPE):
+    """Open the compressed step's wire channels: one per (collective,
+    dp axis) — the single point where codec x transport x axis is bound
+    (this replaced the old ``resolve_step_codecs`` /
+    ``resolve_step_transports`` / ``_auto_axis_transports`` trio).
 
     ``codec`` is either a bare ``CodecTables`` (legacy: one LUT + one
     ``comm_cfg`` for both collectives) or a ``CodecRegistry`` holding a
@@ -60,92 +63,62 @@ def resolve_step_codecs(codec, comm_cfg: CommConfig = None, *,
     to the grad entry). With a registry, ``comm_cfg`` acts as an
     override source for the non-plan knobs (``enabled``,
     ``use_kernels``, ``scale_dtype``) on top of each entry's calibrated
-    plan. Returns ``((rs_tables, rs_cfg), (ag_tables, ag_cfg))``.
+    plan.
+
+    ``transport`` is ``None`` (one-shot everywhere, legacy), a
+    ``TransportConfig``/str applied to both collectives, ``"auto"``
+    (each channel resolves one-shot vs ring + hop chunking per call
+    from the static payload geometry — registry-cached autotunings
+    first, then the planner's alpha-beta model, with the one-shot RS
+    charged its per-rank accumulate dispatches), or a dict with
+    ``grad_key``/``param_key`` entries — per-collective transport
+    policies next to the per-collective codec keys.
+
+    Returns ``(rs_channels, ag_channels, rs_cfg)``: ``{axis: Channel}``
+    maps over ``rs_order``, plus the gradient wire's resolved
+    ``CommConfig`` (the step's flat-vector geometry is derived from
+    it).
     """
-    if isinstance(codec, CodecRegistry):
-        g = codec.get(grad_key)
+    if isinstance(transport, dict):
+        rs_t = transport.get(grad_key)
+        ag_t = transport.get(param_key)
+    else:
+        rs_t = ag_t = transport
+
+    registry = codec if isinstance(codec, CodecRegistry) else None
+    if registry is not None:
+        g = registry.get(grad_key)
         if g is None:
             raise KeyError(
-                f"registry has no {grad_key!r} entry; have {codec.names()}")
-        p = codec.get(param_key) or g
+                f"registry has no {grad_key!r} entry; have "
+                f"{registry.names()}")
+        p = registry.get(param_key) or g
         overrides = {}
         if comm_cfg is not None:
             overrides = dict(enabled=comm_cfg.enabled,
                              use_kernels=comm_cfg.use_kernels,
                              scale_dtype=comm_cfg.scale_dtype)
-        rs_cfg = g.config(**overrides)
-        ag_cfg = p.config(**overrides)
-        if rs_cfg.chunk_symbols != ag_cfg.chunk_symbols:
-            raise ValueError(
-                "grad and param codecs must share chunk_symbols, got "
-                f"{rs_cfg.chunk_symbols} vs {ag_cfg.chunk_symbols}")
-        return (g.tables, rs_cfg), (p.tables, ag_cfg)
-    if comm_cfg is None:
-        raise TypeError("bare CodecTables needs an explicit CommConfig")
-    return (codec, comm_cfg), (codec, comm_cfg)
+        rs_codec, ag_codec = g, p
+        rs_cfg, ag_cfg = g.config(**overrides), p.config(**overrides)
+    else:
+        if comm_cfg is None:
+            raise TypeError("bare CodecTables needs an explicit CommConfig")
+        rs_codec = ag_codec = codec
+        rs_cfg = ag_cfg = comm_cfg
+    if rs_cfg.chunk_symbols != ag_cfg.chunk_symbols:
+        raise ValueError(
+            "grad and param codecs must share chunk_symbols, got "
+            f"{rs_cfg.chunk_symbols} vs {ag_cfg.chunk_symbols}")
 
+    def open_axis(codec_, cfg_, t, ax):
+        return Channel(
+            ChannelSpec(codec=codec_, cfg=cfg_, transport=t, axis=ax,
+                        axis_size=int(dp_sizes[ax])),
+            registry=registry, model=transport_model)
 
-def resolve_step_transports(transport, *, grad_key: str = GRAD_TYPE,
-                            param_key: str = PARAM_TYPE):
-    """Per-collective transport selection, mirroring the codec keys.
-
-    ``transport`` is ``None`` (one-shot everywhere, legacy), a
-    ``TransportConfig``/str applied to both collectives, the string
-    ``"auto"`` (the planner's alpha-beta model picks per collective and
-    per axis at build time), or a dict with ``grad_key`` (gradient
-    reduce-scatter) / ``param_key`` (parameter all-gather) entries —
-    per-collective transport keys next to the per-collective codec
-    keys. Returns ``(rs_transport, ag_transport)`` where each is a
-    ``TransportConfig`` or the sentinel string ``"auto"``.
-    """
-    if isinstance(transport, dict):
-        return (resolve_step_transports(transport.get(grad_key))[0],
-                resolve_step_transports(transport.get(param_key))[1])
-    if isinstance(transport, str) and transport == "auto":
-        return "auto", "auto"
-    t = comm_planner.resolve_transport(transport)
-    return t, t
-
-
-def _auto_axis_transports(transport, rs_order, dp_sizes, n_padded: int,
-                          cfg: CommConfig, model=None, *,
-                          is_reduce: bool = False):
-    """Per-axis TransportConfigs for the hierarchical RS/AG ladder.
-
-    For ``"auto"``, walks the reduce-scatter axis order with the payload
-    shrinking by each axis size (the all-gather mirrors it in reverse,
-    with the same per-axis geometry) and lets
-    ``planner.choose_transport`` pick per hop; a fixed config applies
-    to every axis. Either way, ring ``hop_chunks`` is clamped to tile
-    each axis's per-shard chunk count — otherwise the extra hop padding
-    would change the static segment length the ZeRO-1 geometry
-    (``flat_geometry``) was computed from.
-    """
-    model = model or comm_planner.AlphaBetaModel()
-    out = {}
-    n = n_padded
-    for ax in rs_order:
-        d = dp_sizes[ax]
-        shard_syms = n // d
-        if transport == "auto":
-            wire = comm_planner.payload_wire_bytes(
-                shard_syms, cfg.chunk_symbols, cfg.capacity_words,
-                cfg.pool_slots_per_1k)
-            # the one-shot RS pays d accumulate dispatches (ring-parity
-            # op sequence) which the model must charge it for; the
-            # one-shot AG decode is ONE batched dispatch
-            t = comm_planner.choose_transport(
-                wire, 4.0 * shard_syms, d, model=model,
-                n_oneshot_decode_dispatches=d if is_reduce else 1)
-        else:
-            t = transport
-        if t.kind == "ring":
-            n_chunks = max(1, shard_syms // cfg.chunk_symbols)
-            h = comm_planner.clamp_hop_chunks(t.hop_chunks, n_chunks)
-            t = dataclasses.replace(t, hop_chunks=h)
-        out[ax] = t
-        n = shard_syms
-    return out
+    rs_ch = {ax: open_axis(rs_codec, rs_cfg, rs_t, ax) for ax in rs_order}
+    ag_ch = {ax: open_axis(ag_codec, ag_cfg, ag_t, ax) for ax in rs_order}
+    return rs_ch, ag_ch, rs_cfg
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes=None):
@@ -344,24 +317,28 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
     ``transport`` selects the collective transport the same way:
     ``None`` (one-shot), a ``TransportConfig``/"ring" for both, a dict
     with ``grad_key``/``param_key`` entries (per-collective transport
-    keys), or ``"auto"`` — the planner's alpha-beta model picks
-    one-shot vs ring (and the ring's hop chunking) per collective and
-    per dp axis from the flat-gradient geometry. ``transport_model``
-    (an ``AlphaBetaModel``) supplies measured constants for the
-    ``"auto"`` choice — e.g. the decode throughput
+    keys), or ``"auto"`` — each channel picks one-shot vs ring (and
+    the ring's hop chunking) per dp axis from the static payload
+    geometry, preferring transports autotuned into the registry
+    (``Channel.autotune``). ``transport_model`` (an
+    ``AlphaBetaModel``) supplies measured constants for the ``"auto"``
+    choice — e.g. the decode throughput
     ``benchmarks/transport_overlap.py`` measures; default constants
     are the v5e first-order guesses.
+
+    All wire decisions are bound ONCE at step build time as
+    :class:`~repro.comm.channel.Channel` objects — one per
+    (collective, dp axis) — via :func:`step_channels`.
     """
-    (rs_tables, rs_cfg), (ag_tables, ag_cfg) = resolve_step_codecs(
-        tables, comm_cfg, grad_key=grad_key, param_key=param_key)
-    comm_cfg = rs_cfg
     loss_fn = _loss_fn(model_cfg)
     dp_axes = dp_axes_in(mesh, train_cfg)
     dp_sizes = {a: mesh.shape[a] for a in dp_axes}
     dp_total = dp_size_of(mesh, train_cfg)
     rs_order = tuple(a for a in ("data", "pod") if a in dp_axes)
-    rs_transport, ag_transport = resolve_step_transports(
-        transport, grad_key=grad_key, param_key=param_key)
+    rs_ch, ag_ch, comm_cfg = step_channels(
+        tables, comm_cfg, dp_sizes=dp_sizes, rs_order=rs_order,
+        transport=transport, transport_model=transport_model,
+        grad_key=grad_key, param_key=param_key)
 
     p_specs, _ = _manual_param_specs(model_cfg, mesh)
     # Stacked-grad specs: stage 1 (model under auto) may only reference
@@ -375,12 +352,6 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
     b_spec = batch_pspec(mesh, train_cfg)
     n_local, n_padded, seg_len, weight_vec = flat_geometry(
         model_cfg, mesh, train_cfg, comm_cfg)
-    rs_t_by_ax = _auto_axis_transports(
-        rs_transport, rs_order, dp_sizes, n_padded, rs_cfg,
-        transport_model, is_reduce=True)
-    ag_t_by_ax = _auto_axis_transports(
-        ag_transport, rs_order, dp_sizes, n_padded, ag_cfg,
-        transport_model)
 
     # ---- stage 1: per-dp-shard gradients (model axis under GSPMD) -------
     if hasattr(jax, "shard_map"):
@@ -427,9 +398,7 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
         seg = g_flat
         ok = jnp.bool_(True)
         for ax in rs_order:                     # intra-pod, then cross-pod
-            seg, _valid, ok_i = qlc_reduce_scatter(
-                seg, ax, dp_sizes[ax], rs_tables, rs_cfg,
-                transport=rs_t_by_ax[ax])
+            seg, _valid, ok_i = rs_ch[ax].reduce_scatter(seg)
             ok &= ok_i
         seg = seg / dp_total                    # mean over dp
 
@@ -451,9 +420,7 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
 
         full = new_seg
         for ax in reversed(rs_order):           # cross-pod, then intra-pod
-            full, ok_i = qlc_all_gather(full, ax, ag_tables, ag_cfg,
-                                        transport=ag_t_by_ax[ax],
-                                        axis_size=dp_sizes[ax])
+            full, ok_i = ag_ch[ax].all_gather(full)
             ok &= ok_i
         # ok is per-rank (each rank decodes different payloads, and the
         # model axis shards the flat vector); the step's retry signal
@@ -500,7 +467,8 @@ def init_compressed_opt_state(model_cfg: ModelConfig, mesh: Mesh,
     ``comm_cfg``: a ``CommConfig``, or the ``CodecRegistry`` passed to
     ``make_compressed_step`` (geometry comes from its grad entry)."""
     if isinstance(comm_cfg, CodecRegistry):
-        (_, comm_cfg), _ = resolve_step_codecs(comm_cfg)
+        comm_cfg = Channel(ChannelSpec(codec=GRAD_TYPE),
+                           registry=comm_cfg).cfg
     _, _, seg, _ = flat_geometry(model_cfg, mesh, train_cfg, comm_cfg)
     dp_axes = dp_axes_in(mesh, train_cfg)
     lead = tuple(mesh.shape[a] for a in dp_axes) + (mesh.shape["model"],)

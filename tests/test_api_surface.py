@@ -1,0 +1,90 @@
+"""API-surface snapshot for ``repro.comm``.
+
+The PR-4 channel redesign collapsed three duplicated resolution
+codepaths into ONE seam (`Channel`); this test freezes the package's
+exported names so the surface can only grow (or shrink) through a
+deliberate, reviewed edit of the snapshot below — accidental re-export
+sprawl fails CI.
+
+Deprecated names (the legacy functional wrappers) are tracked in their
+own set: they must keep existing until a removal PR deletes them from
+both the package and this snapshot together.
+"""
+import inspect
+
+import repro.comm as comm
+
+#: The channel-first surface (PR 4).
+EXPECTED = {
+    # channel API — the binding seam
+    "Channel", "ChannelSpec", "open_channels", "measure_decode_Bps",
+    # wire format / local codec machinery
+    "CommConfig", "CommPlan", "WirePayload", "ReduceScatterResult",
+    "wire_bytes", "pad_to_multiple", "resolve_codec", "plan_for_tables",
+    # transport planning
+    "AlphaBetaModel", "TransportConfig", "ONESHOT", "RING",
+    "choose_transport", "modeled_oneshot_time", "modeled_ring_time",
+    "resolve_transport", "transport_crossover_bytes",
+    # container wire (self-describing payloads)
+    "ContainerHeader", "parse_header", "pack_stream", "stream_headers",
+    "container_encode_values", "container_decode_values",
+    "container_encode_codes", "container_decode_codes",
+    "decode_values_stream", "decode_codes_stream",
+    # calibration
+    "calibrate_for_gradients", "calibrate_for_tensor",
+    "histogram_of_quantized", "histogram_of_tree",
+    # weight wire
+    "GroupWireCodec", "compress_groups", "wire_shape_structs",
+    # references
+    "ref_all_gather", "ref_psum", "ref_reduce_scatter",
+}
+
+#: Legacy functional API: kept for compatibility, warns on use.
+DEPRECATED = {
+    "qlc_all_gather", "qlc_all_to_all", "qlc_psum", "qlc_reduce_scatter",
+    "compress_values", "decompress_values", "compress_codes",
+    "decompress_codes", "accumulate_values",
+}
+
+
+def _surface():
+    return {n for n in dir(comm)
+            if not n.startswith("_")
+            and not inspect.ismodule(getattr(comm, n))}
+
+
+def test_comm_surface_is_frozen():
+    got = _surface()
+    want = EXPECTED | DEPRECATED
+    added = sorted(got - want)
+    removed = sorted(want - got)
+    assert not added and not removed, (
+        f"repro.comm surface drifted — added {added}, removed "
+        f"{removed}. If intentional, update tests/test_api_surface.py "
+        "in the same PR.")
+
+
+def test_deprecated_names_warn():
+    """Everything in DEPRECATED must actually be deprecated (so the
+    snapshot's removal path stays honest)."""
+    import warnings
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import TABLE1, build_tables, distributions
+    tables = build_tables(distributions.ffn1_counts(1 << 14), TABLE1)
+    cfg = comm.CommConfig(chunk_symbols=256, capacity_words=64)
+    x = jnp.asarray(np.zeros(256, np.float32))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        payload, scales = comm.compress_values(x, tables, cfg)
+        comm.decompress_values(payload, scales, tables, cfg)
+        comm.accumulate_values(x, payload, scales, tables, cfg)
+        p = comm.compress_codes(x.astype(jnp.uint8), tables, cfg)
+        comm.decompress_codes(p, tables, cfg)
+    hit = {str(i.message).split(" ", 1)[0] for i in w
+           if issubclass(i.category, DeprecationWarning)}
+    assert {"compress_values", "decompress_values", "accumulate_values",
+            "compress_codes", "decompress_codes"} <= hit
+    # the qlc_* wrappers need a mesh; their warning behavior is covered
+    # by tests/test_channel.py::TestDeprecationWarnings.
+    assert DEPRECATED <= _surface()
