@@ -59,6 +59,16 @@ METRIC_GATES = {
         # that would make ring look impossibly fast).
         "ring_vs_wire_floor_ratio": (">=", 1.0),
     },
+    "kv_cache_wire": {
+        # the lossless byte-plane KV cache must beat the dense cache
+        # through the REAL container wire (bf16 attention KV, the
+        # production cache dtype) or the subsystem has no reason to
+        # exist — see benchmarks/kv_cache_bench.py ...
+        "kv_compressed_vs_dense_ratio": ("<=", 0.98),
+        # ... and the e4m3-quantized cache must keep a decisive
+        # margin (symbols are the paper's native regime there).
+        "e4m3_vs_dense_ratio": ("<=", 0.75),
+    },
 }
 
 _OPS = {"<=": lambda a, b: a <= b, ">=": lambda a, b: a >= b}
@@ -85,6 +95,36 @@ def _rows_by_name(payload):
     return {r["name"]: r for r in payload["rows"]}
 
 
+def write_report(path, current, baseline, failures, threshold):
+    """Readable markdown diff of a run vs the baseline — uploaded as a
+    PR artifact so perf diffs are reviewable from the run page without
+    opening the raw JSON."""
+    skip = {"name", "us_per_call", "error"}
+    lines = ["# Benchmark smoke — regression report", "",
+             f"{len(current)} rows vs {len(baseline)} baseline rows, "
+             f"timing threshold {threshold:.1f}x.", ""]
+    if failures:
+        lines += ["## FAILURES", ""]
+        lines += [f"- {f}" for f in failures]
+        lines.append("")
+    else:
+        lines += ["All gates passed.", ""]
+    lines += ["| row | baseline us | current us | ratio | metrics |",
+              "|---|---:|---:|---:|---|"]
+    for name in sorted(set(baseline) | set(current)):
+        b, c = baseline.get(name), current.get(name)
+        bus = f"{b['us_per_call']:.1f}" if b else "—"
+        cus = f"{c['us_per_call']:.1f}" if c else "MISSING"
+        ratio = "—"
+        if b and c and b["us_per_call"] > 0:
+            ratio = f"{c['us_per_call'] / b['us_per_call']:.2f}x"
+        metrics = "" if not c else " ".join(
+            f"{k}={v}" for k, v in c.items() if k not in skip)
+        lines.append(f"| {name} | {bus} | {cus} | {ratio} | {metrics} |")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="JSON from benchmarks/run.py --json")
@@ -93,6 +133,9 @@ def main(argv=None) -> int:
                     help="allowed slowdown factor vs baseline")
     ap.add_argument("--update", action="store_true",
                     help="overwrite the baseline with the current run")
+    ap.add_argument("--report", metavar="PATH",
+                    help="also write a readable markdown report of the "
+                         "diff vs baseline (CI uploads it as an artifact)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -130,6 +173,10 @@ def main(argv=None) -> int:
             failures.append(
                 f"regression: {name}: {cur_us:.1f}us vs baseline "
                 f"{base_us:.1f}us (> {args.threshold:.1f}x)")
+
+    if args.report:
+        write_report(args.report, current, baseline, failures,
+                     args.threshold)
 
     if failures:
         print("\n".join(failures), file=sys.stderr)

@@ -7,6 +7,14 @@ the wire codec binds a Channel (kernel toggle + placement made once),
 and the serving manifest round-trips the whole recipe through JSON
 before the wire is opened in-graph.
 
+With ``--kv-cache qlc`` the decode states are block-paged through the
+compressed KV cache (``repro.serving.kv_cache``): per-layer codecs are
+calibrated from a prefill snapshot into the same registry, full blocks
+are encoded into QLC containers on eviction and decoded on access, and
+the output is asserted TOKEN-IDENTICAL to the dense-cache run — the
+lossless contract. (``--kv-cache e4m3`` additionally quantizes blocks
+to e4m3 on eviction: smaller, but lossy like any fp8 cache.)
+
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch xlstm-125m
 """
 import argparse
@@ -16,8 +24,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.models import init_params
-from repro.serving import ServeConfig, generate
+from repro.models import init_decode_states, init_params
+from repro.serving import ServeConfig, generate, generate_paged, prefill
 
 
 def main():
@@ -30,6 +38,13 @@ def main():
     ap.add_argument("--wire", default="none", choices=["none", "qlc"],
                     help="'qlc' serves from compressed weights opened "
                          "through a channel-bound wire codec")
+    ap.add_argument("--kv-cache", default="none",
+                    choices=["none", "qlc", "e4m3"],
+                    help="'qlc' pages decode states through lossless "
+                         "QLC containers (token-identical); 'e4m3' "
+                         "also quantizes blocks on eviction (lossy)")
+    ap.add_argument("--kv-block", type=int, default=128,
+                    help="tokens per paged-cache block")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch), frontend_prefix_len=0,
@@ -43,6 +58,8 @@ def main():
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size)
 
+    reg = None
+    wc2 = None
     if args.wire == "qlc":
         from repro.comm.calibrate import histogram_of_tree
         from repro.core import CodecRegistry
@@ -59,14 +76,15 @@ def main():
         print(f"serving {len(wc2.meta)} QLC-wired leaves via {ch}")
         gen = jax.jit(lambda w, pr: generate(
             open_params(w, wc2, channel=ch), cfg, pr, serve_cfg))
-        params = wired
+        serve_params = wired
     else:
         gen = jax.jit(lambda p, pr: generate(p, cfg, pr, serve_cfg))
+        serve_params = params
     t0 = time.time()
-    out = jax.block_until_ready(gen(params, prompts))
+    out = jax.block_until_ready(gen(serve_params, prompts))
     t_compile = time.time() - t0
     t0 = time.time()
-    out = jax.block_until_ready(gen(params, prompts))
+    out = jax.block_until_ready(gen(serve_params, prompts))
     t_run = time.time() - t0
 
     toks = args.batch * args.new_tokens
@@ -77,6 +95,44 @@ def main():
     print("sample:", np.asarray(out[0])[:12], "...")
     assert out.shape == (args.batch, args.new_tokens)
     assert (np.asarray(out) >= 0).all()
+
+    if args.kv_cache != "none":
+        from repro.core import CodecRegistry
+        from repro.serving import (KVCacheSpec, PagedKVCache,
+                                   calibrate_cache, kv_spec_from_manifest,
+                                   serving_manifest)
+        # per-layer KV codecs calibrate from a prefill-state snapshot
+        # into the (shared, when --wire qlc) registry
+        states = init_decode_states(cfg, args.batch, serve_cfg.max_seq_len)
+        _, states = prefill(params, cfg, prompts, states)
+        if reg is None:
+            reg = CodecRegistry()
+        spec = KVCacheSpec(block_tokens=args.kv_block, mode=args.kv_cache)
+        calibrate_cache(reg, cfg, states, args.prompt_len, spec)
+        if wc2 is not None:
+            # KV scheme-ids round-trip next to the weight placement
+            manifest = serving_manifest(wc2, kv_spec=spec, kv_registry=reg)
+            spec, sids = kv_spec_from_manifest(manifest["kv"])
+            print(f"kv manifest: {len(sids)} per-layer codecs "
+                  f"{sorted(set(sids.values()))}")
+        cache = PagedKVCache(spec, cfg, reg)
+        # dense-cache baseline through the SAME host-driven decode loop
+        out_dense = generate_paged(params, cfg, prompts, serve_cfg, None)
+        out_paged = generate_paged(params, cfg, prompts, serve_cfg, cache)
+        stats = cache.stats()
+        print(f"kv-cache={args.kv_cache} block={args.kv_block}: "
+              f"{stats['cold_blocks']} cold blocks, "
+              f"{stats['compressed_bytes_per_token']:.0f} vs "
+              f"{stats['dense_bytes_per_token']:.0f} dense B/token "
+              f"(ratio {stats['compressed_vs_dense_ratio']:.3f}, "
+              f"{stats['raw_sections']} raw sections)")
+        if args.kv_cache == "qlc":
+            # the lossless contract: byte-exact round trip => tokens
+            # identical to the dense cache
+            assert np.array_equal(np.asarray(out_paged),
+                                  np.asarray(out_dense)), \
+                "qlc KV cache changed tokens (lossless contract broken)"
+            print("paged == dense: token-identical OK")
     print("OK")
 
 

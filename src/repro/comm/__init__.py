@@ -57,8 +57,11 @@ from repro.comm.planner import CommPlan, plan_for_tables  # noqa: F401
 from repro.comm.calibrate import (  # noqa: F401
     calibrate_for_gradients,
     calibrate_for_tensor,
+    calibrate_kv_entries,
+    empirical_plan,
     histogram_of_quantized,
     histogram_of_tree,
+    kv_symbol_stream,
 )
 from repro.comm.weights import (  # noqa: F401
     GroupWireCodec,

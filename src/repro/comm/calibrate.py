@@ -8,7 +8,7 @@ for production; here numpy suffices.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,26 +70,54 @@ def calibrate_for_tensor(x: jnp.ndarray, scheme: Optional[QLCScheme] = None,
     plan = plan_for_tables(tables, counts, chunk_symbols=chunk_symbols,
                            target_escape_prob=target_escape_prob)
     if empirical:
-        lens = tables.enc_len[codes_np].astype(np.int64)
-        n_chunks = len(lens) // chunk_symbols
-        if n_chunks >= 8:
-            sums = lens[:n_chunks * chunk_symbols].reshape(
-                n_chunks, chunk_symbols).sum(axis=1)
-            # 99.9th percentile + half-bit/symbol drift margin
-            q = float(np.quantile(sums, 0.999))
-            bits = min(8.0 * chunk_symbols,
-                       q + 0.5 * chunk_symbols)
-            cap_words = max(1, int(np.ceil(bits / 32)))
-            emp_escape = float((sums > cap_words * 32).mean())
-            plan = CommPlan(
-                chunk_symbols=chunk_symbols,
-                capacity_words=cap_words,
-                pool_slots_per_1k=max(
-                    8, int(np.ceil(emp_escape * 1024 * 8)) + 8),
-                expected_bits_per_symbol=plan.expected_bits_per_symbol,
-                escape_prob_bound=max(emp_escape, target_escape_prob),
-            )
+        plan = empirical_plan(tables, codes_np, plan,
+                              chunk_symbols=chunk_symbols,
+                              target_escape_prob=target_escape_prob)
     return tables, plan
+
+
+def empirical_plan(tables: CodecTables, syms: np.ndarray, plan: CommPlan,
+                   *, chunk_symbols: int = 1024,
+                   target_escape_prob: float = 1e-6,
+                   max_pool_slots_per_1k: Optional[int] = None) -> CommPlan:
+    """Re-size a plan's chunk slot from the *measured* per-chunk
+    bit-count distribution of a representative symbol stream.
+
+    Real payloads are mixtures of local statistics (tensor types,
+    byte planes), so chunk sums are more dispersed than iid sampling
+    of the global PMF predicts; the 99.9th-percentile + half-bit/symbol
+    margin keeps the escape rate at the target without giving up the
+    compressible bulk. Streams shorter than 8 chunks keep the iid plan.
+
+    ``max_pool_slots_per_1k`` caps the escape pool for callers that
+    have a raw-wire fallback for incompressible streams (the paged KV
+    cache) — an uncapped near-uniform byte stream would otherwise size
+    a pool bigger than its payload. The default (no cap) keeps the
+    collectives' guarantee that the pool covers the measured escape
+    rate.
+    """
+    syms = np.asarray(syms).reshape(-1)
+    lens = tables.enc_len[syms].astype(np.int64)
+    n_chunks = len(lens) // chunk_symbols
+    if n_chunks < 8:
+        return plan
+    sums = lens[:n_chunks * chunk_symbols].reshape(
+        n_chunks, chunk_symbols).sum(axis=1)
+    # 99.9th percentile + half-bit/symbol drift margin
+    q = float(np.quantile(sums, 0.999))
+    bits = min(8.0 * chunk_symbols, q + 0.5 * chunk_symbols)
+    cap_words = max(1, int(np.ceil(bits / 32)))
+    emp_escape = float((sums > cap_words * 32).mean())
+    pool = max(8, int(np.ceil(emp_escape * 1024 * 8)) + 8)
+    if max_pool_slots_per_1k is not None:
+        pool = min(max_pool_slots_per_1k, pool)
+    return CommPlan(
+        chunk_symbols=chunk_symbols,
+        capacity_words=cap_words,
+        pool_slots_per_1k=pool,
+        expected_bits_per_symbol=plan.expected_bits_per_symbol,
+        escape_prob_bound=max(emp_escape, target_escape_prob),
+    )
 
 
 def calibrate_for_gradients(model_cfg, params, batch,
@@ -108,3 +136,132 @@ def calibrate_for_gradients(model_cfg, params, batch,
                             for g in jax.tree.leaves(grads)])
     return calibrate_for_tensor(flat, chunk_symbols=chunk_symbols,
                                 allow_search=allow_search)
+
+
+# --------------------------------------------------------------------------
+# Per-layer KV / SSM-state codecs (serving paged cache)
+# --------------------------------------------------------------------------
+
+def kv_symbol_stream(arrays, mode: str = "qlc") -> np.ndarray:
+    """Decode-state arrays -> the uint8 symbol stream the KV codec sees.
+
+    ``mode="qlc"`` (lossless): the arrays' raw bytes ARE the symbols —
+    the checkpoint manager's byte-width trick extended to wider dtypes,
+    so encode→decode is bit-exact and serving output is token-identical
+    to a dense cache. ``mode="e4m3"``: block-32 e4m3 symbols of the
+    values (the fp8-cache trade: quantization is lossy once, the QLC
+    coding on top is not).
+    """
+    if mode == "e4m3":
+        parts = []
+        for a in arrays:
+            flat = jnp.asarray(a, jnp.float32).reshape(-1)
+            n = (flat.shape[0] // e4m3.BLOCK) * e4m3.BLOCK
+            if n:
+                codes, _ = e4m3.quantize_block32(flat[:n])
+                parts.append(np.asarray(codes).reshape(-1))
+        return (np.concatenate(parts) if parts
+                else np.zeros(0, np.uint8))
+    return np.concatenate(
+        [np.ascontiguousarray(np.asarray(a)).view(np.uint8).reshape(-1)
+         for a in arrays]) if arrays else np.zeros(0, np.uint8)
+
+
+def byte_planes(arrays) -> Dict[Tuple[int, int], np.ndarray]:
+    """Byte-plane decomposition of float state arrays (lossless mode's
+    symbol streams).
+
+    Little-endian byte *j* of every ``itemsize``-wide value, pooled
+    across arrays in order: ``{(itemsize, j): uint8 stream}``. A
+    float's planes have wildly different entropy — sign/exponent bytes
+    code down to a few bits, mantissa bytes are near-uniform — so one
+    interleaved stream wastes slot capacity on the worst plane, while
+    per-plane containers (each with its own calibrated LUT and
+    measured capacity, raw where the codec cannot win) compress the
+    compressible planes without the mantissa dragging them down.
+    """
+    groups: Dict[int, list] = {}
+    for a in arrays:
+        isz = np.dtype(np.asarray(a).dtype).itemsize
+        b = np.ascontiguousarray(np.asarray(a)).view(np.uint8)
+        groups.setdefault(isz, []).append(b.reshape(-1, isz))
+    out: Dict[Tuple[int, int], np.ndarray] = {}
+    for isz in sorted(groups):
+        mat = np.concatenate(groups[isz], axis=0)        # [n_values, isz]
+        for j in range(isz):
+            out[(isz, j)] = np.ascontiguousarray(mat[:, j])
+    return out
+
+
+def _layer_index(key) -> int:
+    if isinstance(key, int):
+        return key
+    s = str(key)
+    return int(s[1:] if s.startswith("l") else s)
+
+
+def calibrate_kv_entries(registry, layer_arrays, *, mode: str = "qlc",
+                         chunk_symbols: int = 1024,
+                         target_escape_prob: float = 1e-4,
+                         prefix: str = "kv",
+                         plane_split_min_symbols: Optional[int] = None,
+                         allow_search: bool = False) -> Dict[str, "object"]:
+    """Calibrate per-layer KV/SSM-state codecs into ``registry``.
+
+    ``layer_arrays`` maps layer keys (``"l0"``/``0``/...) to the state
+    arrays that layer's cache blocks will carry (attention K/V slices,
+    SSM state leaves) — e.g. a prefill-state snapshot. In ``"e4m3"``
+    mode each layer's e4m3-symbol histogram registers one codec under
+    ``f"{prefix}/layer{i}"``; in the lossless ``"qlc"`` mode each
+    **byte plane** (:func:`byte_planes`) registers its own codec under
+    ``f"{prefix}/layer{i}/w{itemsize}b{j}"`` — planes are where the
+    byte stream is stationary, so per-plane LUTs + slot capacities win
+    where one interleaved codec cannot. Layers whose planes are smaller
+    than ``plane_split_min_symbols`` (default ``2 * chunk_symbols``)
+    register ONE interleaved codec under the base name instead —
+    per-plane container framing would eat the win on tiny states. The
+    chosen layout is recorded by which names exist, so the paged cache
+    derives it from the registry, never re-guessing from block sizes.
+
+    Slot capacity is empirically sized from the snapshot's measured
+    chunk sums (:func:`empirical_plan`); entries whose derived tables
+    come out bit-identical dedupe onto one scheme-id via the registry's
+    table digest. Returns ``{name: CodecEntry}``.
+    """
+    if plane_split_min_symbols is None:
+        plane_split_min_symbols = 2 * chunk_symbols
+
+    def _register(name, syms):
+        if name in registry:
+            return registry[name]
+        counts = np.maximum(
+            np.bincount(syms, minlength=256).astype(np.float64), 1e-6)
+        tables = adapt.calibrate_tables(counts, allow_search=allow_search)
+        plan = plan_for_tables(tables, counts, chunk_symbols=chunk_symbols,
+                               target_escape_prob=target_escape_prob)
+        # Capped pool: the paged cache wires incompressible streams raw
+        # (codec_wins), so the pool never needs to cover a pathological
+        # escape rate here.
+        plan = empirical_plan(tables, syms, plan,
+                              chunk_symbols=chunk_symbols,
+                              target_escape_prob=target_escape_prob,
+                              max_pool_slots_per_1k=64)
+        return registry.register_tables(name, tables, plan, counts=counts)
+
+    entries = {}
+    for key in sorted(layer_arrays, key=_layer_index):
+        base = f"{prefix}/layer{_layer_index(key)}"
+        if mode == "e4m3":
+            entries[base] = _register(
+                base, kv_symbol_stream(layer_arrays[key], mode))
+            continue
+        planes = byte_planes(layer_arrays[key])
+        if min((p.size for p in planes.values()), default=0) \
+                >= plane_split_min_symbols:
+            for (isz, j), plane in planes.items():
+                name = f"{base}/w{isz}b{j}"
+                entries[name] = _register(name, plane)
+        else:
+            entries[base] = _register(
+                base, kv_symbol_stream(layer_arrays[key], "qlc"))
+    return entries

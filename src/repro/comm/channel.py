@@ -32,7 +32,8 @@ measurement, packaged as :func:`measure_decode_Bps`), feeds it to the
 planner's alpha-beta model, and caches the tuned
 :class:`~repro.comm.planner.TransportConfig` in the channel's
 :class:`~repro.core.registry.CodecRegistry` keyed by
-``(scheme_id, axis, payload bucket)``. The cache serializes with the
+``(scheme_id, axis, payload bucket, is_reduce)``. The cache
+serializes with the
 registry JSON, so a reloaded registry reuses the tuning — and any
 channel with ``transport="auto"`` bound to that registry picks it up
 before falling back to the modeled choice.

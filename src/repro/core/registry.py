@@ -47,9 +47,9 @@ def payload_bucket(payload_bytes: int) -> int:
     """Power-of-two bucket of a payload size (``ceil(log2(bytes))``).
 
     The autotune cache (``Channel.autotune``) keys tuned
-    ``TransportConfig``s by ``(scheme_id, axis, payload_bucket)`` —
-    transport choice is insensitive to sub-2x payload variation, so
-    bucketing lets one measurement cover a size class.
+    ``TransportConfig``s by ``(scheme_id, axis, payload_bucket,
+    is_reduce)`` — transport choice is insensitive to sub-2x payload
+    variation, so bucketing lets one measurement cover a size class.
     """
     return max(0, int(payload_bytes) - 1).bit_length()
 
@@ -120,10 +120,11 @@ class CodecRegistry:
         self._by_name: Dict[str, CodecEntry] = {}
         self._by_id: Dict[int, CodecEntry] = {}
         self._digest_to_id: Dict[str, int] = {}
-        # (scheme_id, axis, payload_bucket) -> TransportConfig; written
-        # by Channel.autotune, read by the "auto" transport policy, and
-        # serialized with the registry so tunings survive reload.
-        self._transport_cache: Dict[Tuple[int, str, int],
+        # (scheme_id, axis, payload_bucket, is_reduce) -> TransportConfig;
+        # written by Channel.autotune, read by the "auto" transport
+        # policy, and serialized with the registry so tunings survive
+        # reload.
+        self._transport_cache: Dict[Tuple[int, str, int, bool],
                                     "TransportConfig"] = {}
 
     # ---- registration ----------------------------------------------------

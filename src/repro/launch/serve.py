@@ -5,9 +5,15 @@ is stored as block-32 e4m3 + QLC words and opened in-graph through a
 channel-bound fused decode (``repro.comm.channel`` + the serving wire
 codec) — the production path where weight bytes move compressed.
 
+``--kv-cache qlc`` block-pages the decode states through the
+compressed KV cache (``repro.serving.kv_cache``): per-layer codecs
+calibrated from a prefill snapshot, blocks encoded to QLC containers
+on eviction, decoded on access — losslessly, so tokens match the
+dense cache. ``--kv-block`` sets the block size.
+
 Example:
   python -m repro.launch.serve --arch musicgen-medium --reduced \\
-      --batch 8 --new-tokens 32 --wire qlc
+      --batch 8 --new-tokens 32 --wire qlc --kv-cache qlc
 """
 from __future__ import annotations
 
@@ -35,6 +41,12 @@ def main():
     ap.add_argument("--wire", default="none", choices=["none", "qlc"],
                     help="'qlc' stores weights as QLC wire and decodes "
                          "them in-graph via a bound channel")
+    ap.add_argument("--kv-cache", default="none",
+                    choices=["none", "qlc", "e4m3"],
+                    help="page decode states through QLC containers "
+                         "('qlc' lossless, 'e4m3' quantized)")
+    ap.add_argument("--kv-block", type=int, default=128,
+                    help="tokens per paged-cache block")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -75,6 +87,37 @@ def main():
         t0 = time.time()
         out = jax.block_until_ready(gen(params, prompts))
         dt = time.time() - t0
+
+        if args.kv_cache != "none":
+            from repro.core import CodecRegistry
+            from repro.models import init_decode_states
+            from repro.serving import (KVCacheSpec, PagedKVCache,
+                                       calibrate_cache, generate_paged,
+                                       prefill)
+            dense_params = (params if args.wire != "qlc"
+                            else jax.jit(lambda w: open_params(
+                                w, wc, channel=ch))(params))
+            states = init_decode_states(cfg, args.batch,
+                                        serve_cfg.max_seq_len)
+            _, states = prefill(dense_params, cfg, prompts, states)
+            kv_reg = reg if args.wire == "qlc" else CodecRegistry()
+            spec = KVCacheSpec(block_tokens=args.kv_block,
+                               mode=args.kv_cache)
+            calibrate_cache(kv_reg, cfg, states, args.prompt_len, spec)
+            cache = PagedKVCache(spec, cfg, kv_reg)
+            paged = generate_paged(dense_params, cfg, prompts, serve_cfg,
+                                   cache)
+            stats = cache.stats()
+            print(f"kv-cache={args.kv_cache}: "
+                  f"{stats['compressed_bytes_per_token']:.0f} vs "
+                  f"{stats['dense_bytes_per_token']:.0f} dense B/token "
+                  f"(ratio {stats['compressed_vs_dense_ratio']:.3f})")
+            if args.kv_cache == "qlc":
+                dense = generate_paged(dense_params, cfg, prompts,
+                                       serve_cfg, None)
+                assert np.array_equal(np.asarray(paged),
+                                      np.asarray(dense)), \
+                    "qlc KV cache must be token-identical"
 
     print(f"{args.batch}x{args.new_tokens} tokens in {dt*1e3:.0f}ms "
           f"({args.batch * args.new_tokens / dt:.0f} tok/s)")

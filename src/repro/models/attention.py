@@ -9,7 +9,7 @@ a q-block/kv-block scan bound, halving causal attention FLOPs.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -183,6 +183,29 @@ class KVCache(NamedTuple):
             v=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
             length=jnp.zeros((batch,), jnp.int32),
         )
+
+
+#: seq axis of the K/V arrays counted from the END (leading dims vary:
+#: [B, S, KV, H] per layer, [G, B, S, KV, H] stacked over scan groups).
+KV_SEQ_AXIS = -3
+
+
+def kv_block_slice(cache: KVCache, t0: int, t1: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token block ``[t0, t1)`` of a cache — the unit the paged serving
+    cache (``repro.serving.kv_cache``) evicts/encodes. Works on a
+    per-layer cache or the group-stacked decode-states leaf."""
+    sl = (Ellipsis, slice(t0, t1)) + (slice(None),) * (-KV_SEQ_AXIS - 1)
+    return cache.k[sl], cache.v[sl]
+
+
+def kv_block_restore(cache: KVCache, t0: int, t1: int,
+                     k: jnp.ndarray, v: jnp.ndarray) -> KVCache:
+    """Write block ``[t0, t1)`` back into the cache (decode-on-access
+    epilogue of the paged cache) — inverse of :func:`kv_block_slice`."""
+    sl = (Ellipsis, slice(t0, t1)) + (slice(None),) * (-KV_SEQ_AXIS - 1)
+    return cache._replace(k=cache.k.at[sl].set(k.astype(cache.k.dtype)),
+                          v=cache.v.at[sl].set(v.astype(cache.v.dtype)))
 
 
 def attention_block(params, x, cfg: ModelConfig, positions,

@@ -301,3 +301,35 @@ def slstm_init_state(x_like, b: int, cfg: ModelConfig) -> SLSTMState:
         n=_zero_like_data(x_like, (b, h)),
         m=_zero_like_data(x_like, (b, h)),
     )
+
+
+# ==========================================================================
+# State snapshot seam (paged serving cache)
+# ==========================================================================
+
+#: the SSM decode states the paged cache can snapshot/restore.
+STATE_TYPES = (MambaState, MLSTMState, SLSTMState)
+
+
+def state_snapshot(state) -> Tuple[jnp.ndarray, ...]:
+    """An SSM decode state's arrays, in field order — what the paged
+    serving cache (``repro.serving.kv_cache``) encodes at a block
+    boundary. Unlike attention KV there is no growing seq dim: the
+    whole carried state IS the block."""
+    if not isinstance(state, STATE_TYPES):
+        raise TypeError(f"not an SSM decode state: {type(state).__name__}")
+    return tuple(state)
+
+
+def state_restore(state, arrays) -> "MambaState | MLSTMState | SLSTMState":
+    """Rebuild a state from :func:`state_snapshot` arrays (the
+    decode-on-access epilogue: the recurrence continues from the
+    decoded wire form)."""
+    if not isinstance(state, STATE_TYPES):
+        raise TypeError(f"not an SSM decode state: {type(state).__name__}")
+    arrays = tuple(arrays)
+    if len(arrays) != len(state):
+        raise ValueError(f"{type(state).__name__} expects {len(state)} "
+                         f"arrays, got {len(arrays)}")
+    return type(state)(*(a.astype(t.dtype).reshape(t.shape)
+                         for a, t in zip(arrays, state)))

@@ -1,3 +1,8 @@
 from repro.serving.engine import (  # noqa: F401
     ServeConfig, codec_from_manifest, compress_params_for_serving,
-    generate, generate_from_wire, open_params, prefill, serving_manifest)
+    generate, generate_from_wire, generate_paged, open_params, prefill,
+    serving_manifest)
+from repro.serving.kv_cache import (  # noqa: F401
+    KVBlock, KVCacheOverflowError, KVCacheSpec, PagedKVCache,
+    all_gather_block_wire, calibrate_cache, kv_cache_manifest,
+    kv_spec_from_manifest, open_kv_channels)

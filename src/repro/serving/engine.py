@@ -19,6 +19,7 @@ serving host reloads it without out-of-band table agreement.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -108,11 +109,23 @@ def compress_params_for_serving(params, tables, mode: str = "qlc",
                            type_key_fn=type_key_fn)
 
 
-def serving_manifest(wire_codec) -> dict:
+def serving_manifest(wire_codec, *, kv_spec=None, kv_registry=None) -> dict:
     """JSON-able manifest of a wired parameter tree: per-leaf geometry
     + scheme-ids + the codec registry + the channel placement
-    (transport / axis / kernel toggle)."""
-    return wire_codec.manifest()
+    (transport / axis / kernel toggle).
+
+    With ``kv_spec`` (a :class:`~repro.serving.kv_cache.KVCacheSpec`),
+    the compressed-KV-cache recipe rides along under ``"kv"`` — the
+    paging spec plus per-layer ``kv/layer{i}`` scheme-ids, resolved
+    against ``kv_registry`` (default: the wire codec's registry, the
+    usual one-registry deployment)."""
+    from repro.serving.kv_cache import kv_cache_manifest
+    m = wire_codec.manifest()
+    if kv_spec is not None:
+        m["kv"] = kv_cache_manifest(
+            kv_spec, kv_registry if kv_registry is not None
+            else wire_codec.registry)
+    return m
 
 
 def codec_from_manifest(manifest: dict, use_kernels=None):
@@ -166,3 +179,51 @@ def generate_from_wire(wired_params, wire_codec, cfg: ModelConfig,
     """Greedy generation directly from QLC-compressed parameters."""
     params = open_params(wired_params, wire_codec)
     return generate(params, cfg, prompts, serve_cfg, rng)
+
+
+# --------------------------------------------------------------------------
+# Compressed KV-cache serving (block-paged decode states)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _paged_step(cfg: ModelConfig):
+    """Jitted one-token decode step, cached per config — repeated
+    ``generate_paged`` calls (dense baseline + paged run) reuse one
+    compiled executable instead of re-tracing a fresh lambda."""
+    return jax.jit(lambda p, tok, st, pos: decode_step(p, cfg, tok, st,
+                                                       pos))
+
+
+def generate_paged(params, cfg: ModelConfig, prompts: jnp.ndarray,
+                   serve_cfg: ServeConfig, kv_cache=None) -> jnp.ndarray:
+    """Greedy generation with a host-driven decode loop paging the
+    decode states through a
+    :class:`~repro.serving.kv_cache.PagedKVCache`.
+
+    Per-step math is exactly :func:`generate`'s (same ``decode_step``,
+    same greedy argmax); between steps the paged cache evicts every
+    completed block — encode to a QLC container, decode back into the
+    resident window — so the attended cache content genuinely
+    round-trips the compressed wire. With the lossless ``"qlc"`` mode
+    the round trip is bit-exact and the output is token-identical to
+    ``kv_cache=None`` (the dense-cache run through this same loop).
+
+    prompts: [B, S] int32. Returns [B, max_new_tokens].
+    """
+    b, s = prompts.shape
+    states = init_decode_states(cfg, b, serve_cfg.max_seq_len)
+    logits, states = prefill(params, cfg, prompts, states)
+    if kv_cache is not None:
+        states = kv_cache.note_tokens(states, s)
+
+    step = _paged_step(cfg)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    toks = [tok]
+    for t in range(serve_cfg.max_new_tokens - 1):
+        pos = jnp.full((b, 1), s + t, jnp.int32)
+        lg, states = step(params, tok, states, pos)
+        if kv_cache is not None:
+            states = kv_cache.note_tokens(states, s + t + 1)
+        tok = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,585 @@
+"""Compressed block-paged KV / SSM-state cache for decode-step serving.
+
+The decode-step state stream is the last bandwidth-bound tensor family
+the repo did not compress (paper §7: per-tensor-type LUTs beyond
+weights / grads / activations; ZipServ-style serving stacks live or die
+on exactly this stream). This module pages it:
+
+    hot window (dense tail) ──evict──▶ e4m3/byte symbols ──QLC──▶
+    self-describing container (cold block) ──decode on access──▶
+    dense values the decode step attends over
+
+* :class:`KVCacheSpec` declares the paging policy: tokens per block,
+  symbol mode, kernel toggle, codec prefix, optional cache mesh axis.
+* :class:`PagedKVCache` owns the cold blocks. At every block boundary
+  the completed block (attention K/V slice via
+  ``models.attention.kv_block_slice``; the whole carried SSM state via
+  ``models.ssm.state_snapshot``) is encoded through its layer's bound
+  :class:`~repro.comm.channel.Channel` into a container
+  (``repro.comm.container``), then decoded back into the resident
+  window — the model only ever attends over values that round-tripped
+  the wire, so the compressed path is genuinely on the token hot path,
+  not a shadow copy.
+
+Symbol modes (:func:`repro.comm.calibrate.kv_symbol_stream`):
+
+``"qlc"`` (default, lossless)
+    The block's raw bytes are the symbols — the checkpoint manager's
+    byte-width trick extended to bf16/f32 states. Encode→decode is
+    bit-exact, so serving output is **token-identical** to a dense
+    cache while the wire moves fewer bytes (exponent/sign bytes of
+    float states are highly skewed).
+``"e4m3"``
+    Blocks are block-32 e4m3-quantized on eviction and the QLC symbols
+    are coded losslessly on top (the paper's native regime). The
+    quantization is lossy — the standard fp8-KV-cache trade; the QLC
+    coding itself adds zero further error (tested bit-exact against
+    the quantize→dequantize reference).
+
+Per-layer codecs are calibrated into the :class:`CodecRegistry` under
+``kv/layer{i}`` (``repro.comm.calibrate.calibrate_kv_entries``;
+bit-identical tables dedupe onto one scheme-id) and opened as channels
+via :func:`open_kv_channels` — the same ``open_channels`` seam the
+train/serve wires use, so cross-rank cache migration is one
+``all_gather`` of container words over the channel's cache axis
+(:func:`all_gather_block_wire`): compressed bytes are what cross the
+wire, and the receiver decodes them from the registry alone.
+
+Escape-pool overflow never corrupts a block: an overflowing encode
+falls back to a raw (uncoded) container and is counted in
+``stats()["overflow_sections"]``; a coded container whose pool
+overflowed on the wire raises :class:`KVCacheOverflowError` at decode
+instead of returning garbage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import container as qc
+from repro.comm.calibrate import (_layer_index, byte_planes,
+                                  calibrate_kv_entries, kv_symbol_stream)
+from repro.comm.compressed import (_compress_codes, _quantize,
+                                   pad_to_multiple)
+from repro.configs.base import ModelConfig
+from repro.core import codec as _codec
+from repro.models import attention as attn
+from repro.models import ssm
+
+
+class KVCacheOverflowError(RuntimeError):
+    """A coded cache block's escape pool overflowed — decoding it would
+    silently corrupt the cache, so the paged cache refuses."""
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Paging policy of a :class:`PagedKVCache`.
+
+    ``block_tokens``
+        Tokens per cold block (the encode/evict unit).
+    ``hot_blocks``
+        Extra *completed* blocks kept dense behind the write head
+        (the filling block is always dense; 0 = encode at completion).
+    ``mode``
+        ``"qlc"`` (lossless byte symbols) or ``"e4m3"`` (quantize on
+        eviction) — see the module docstring.
+    ``use_kernels``
+        Route block encode/decode through the fused Pallas dispatches.
+    ``codec_prefix``
+        Registry key prefix; layer *i*'s codec is
+        ``f"{codec_prefix}/layer{i}"``.
+    ``chunk_symbols``
+        KV codec chunk size. Smaller than the collectives' 1024 because
+        a cache block's container carries at least one pool slot of
+        this size — 256 keeps the framing overhead small at realistic
+        block sizes.
+    ``exact_capacity``
+        Cold blocks are static once completed (like weights), so by
+        default each container's slot capacity is the block's measured
+        max chunk size — zero escapes, unconditionally lossless.
+        ``False`` uses the calibrated plan capacity + escape pool (the
+        collectives' wire shape) instead.
+    ``axis``
+        Optional mesh axis cold blocks migrate over
+        (:func:`all_gather_block_wire`).
+    """
+    block_tokens: int = 128
+    hot_blocks: int = 0
+    mode: str = "qlc"
+    use_kernels: bool = False
+    codec_prefix: str = "kv"
+    chunk_symbols: int = 256
+    exact_capacity: bool = True
+    axis: Optional[str] = None
+
+    def __post_init__(self):
+        if self.block_tokens < 1:
+            raise ValueError(f"block_tokens must be >= 1, got "
+                             f"{self.block_tokens}")
+        if self.mode not in ("qlc", "e4m3"):
+            raise ValueError(f"unknown KV cache mode {self.mode!r}")
+
+    def layer_codec(self, i: int) -> str:
+        return f"{self.codec_prefix}/layer{i}"
+
+    def to_json(self) -> Dict:
+        return {"block_tokens": self.block_tokens,
+                "hot_blocks": self.hot_blocks,
+                "mode": self.mode,
+                "use_kernels": self.use_kernels,
+                "codec_prefix": self.codec_prefix,
+                "chunk_symbols": self.chunk_symbols,
+                "exact_capacity": self.exact_capacity,
+                "axis": self.axis}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "KVCacheSpec":
+        return cls(block_tokens=int(d["block_tokens"]),
+                   hot_blocks=int(d.get("hot_blocks", 0)),
+                   mode=d.get("mode", "qlc"),
+                   use_kernels=bool(d.get("use_kernels", False)),
+                   codec_prefix=d.get("codec_prefix", "kv"),
+                   chunk_symbols=int(d.get("chunk_symbols", 256)),
+                   exact_capacity=bool(d.get("exact_capacity", True)),
+                   axis=d.get("axis"))
+
+
+@dataclasses.dataclass(frozen=True)
+class KVBlock:
+    """One cold block: a self-describing container plus the geometry to
+    rebuild its arrays."""
+    layer: str                      # state slot key ("l0", "l1", ...)
+    start: int                      # first token of the block (attn)
+    tokens: int                     # tokens covered
+    container: np.ndarray           # uint32 container words
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    coded: bool                     # any section QLC-coded (False =>
+    #   all raw: calibration verdict or escape-pool overflow fallback)
+
+    @property
+    def wire_bytes(self) -> int:
+        return qc.container_bytes(self.container)
+
+    @property
+    def dense_bytes(self) -> int:
+        return int(sum(int(np.prod(s)) * np.dtype(d).itemsize
+                       for s, d in zip(self.shapes, self.dtypes)))
+
+
+def codec_wins(entry) -> bool:
+    """Whether a calibrated KV entry actually beats the raw wire.
+
+    A byte stream dominated by high-entropy mantissa planes calibrates
+    to >= 8 expected bits/symbol (or an escape bound so large the pool
+    stops being an exception path) — QLC cannot win there, so the paged
+    cache wires such layers as raw containers instead of coding every
+    chunk into the escape pool."""
+    plan = entry.plan
+    return (plan.expected_bits_per_symbol < 8.0
+            and plan.escape_prob_bound < 0.25)
+
+
+def open_kv_channels(registry, mesh=None, *, prefix: str = "kv",
+                     axis: Optional[str] = None, transport: Any = None,
+                     use_kernels: Optional[bool] = None) -> Dict[str, Any]:
+    """Open one bound :class:`~repro.comm.channel.Channel` per
+    ``f"{prefix}/..."`` registry entry — the KV slice of
+    :func:`repro.comm.channel.open_channels`, sharing its axis-size
+    resolution and autotune-cache plumbing."""
+    from repro.comm.channel import open_channels
+    chans = open_channels(registry, mesh, axis=axis, transport=transport,
+                          use_kernels=use_kernels)
+    return {n: c for n, c in chans.items() if n.startswith(prefix + "/")}
+
+
+def all_gather_block_wire(words: jnp.ndarray, channel) -> jnp.ndarray:
+    """Cross-rank cache migration body (call inside ``shard_map`` over
+    the channel's cache axis): all-gather one cold block's container
+    words ``u32 [W] -> u32 [D, W]``.
+
+    Block geometry must be identical on every rank for the gather's
+    static shape: same spec, same calibrated plan, and
+    ``KVCacheSpec(exact_capacity=False)`` — the plan capacity is
+    rank-independent where the per-block measured capacity is not.
+    The *compressed* bytes are what cross the wire; each gathered row
+    decodes on the receiver from the registry alone
+    (:meth:`PagedKVCache.decode_block_arrays`)."""
+    if channel.axis is None:
+        raise ValueError("cache migration needs a channel with a mesh "
+                         "axis; pass KVCacheSpec(axis=...)")
+    return jax.lax.all_gather(jnp.asarray(words, jnp.uint32), channel.axis)
+
+
+class PagedKVCache:
+    """Block-paged compressed decode-state cache (host-driven paging
+    around the jitted decode step — see
+    :func:`repro.serving.engine.generate_paged`).
+
+    ``registry`` must already hold the per-layer ``kv/layer{i}``
+    entries (:func:`calibrate_cache` /
+    :func:`repro.comm.calibrate.calibrate_kv_entries`); ``channels``
+    defaults to :func:`open_kv_channels` over them.
+    """
+
+    def __init__(self, spec: KVCacheSpec, cfg: ModelConfig, registry,
+                 channels: Optional[Dict[str, Any]] = None, mesh=None):
+        self.spec = spec
+        self.cfg = cfg
+        self.registry = registry
+        self.kinds = cfg.layer_kinds()
+        if channels is None:
+            channels = open_kv_channels(
+                registry, mesh, prefix=spec.codec_prefix, axis=spec.axis,
+                use_kernels=spec.use_kernels)
+        self.channels = channels
+        for i in range(len(self.kinds)):
+            base = spec.layer_codec(i)
+            if not any(n == base or n.startswith(base + "/")
+                       for n in channels):
+                raise KeyError(
+                    f"no channel for {base!r}; calibrate the registry "
+                    "first (calibrate_cache)")
+        self.cold: List[KVBlock] = []          # attention blocks, ordered
+        self.snapshots: Dict[str, KVBlock] = {}  # latest SSM state/layer
+        self.tokens = 0                        # tokens absorbed
+        self.evicted_tokens = 0                # tokens behind cold blocks
+        self.overflow_sections = 0             # pool overflows (-> raw)
+        self.raw_sections = 0                  # calibration said raw wins
+        self._split_cache: Dict[str, bool] = {}
+
+    # ---- paging ----------------------------------------------------------
+
+    def note_tokens(self, states, total_tokens: int):
+        """Advance the write head to ``total_tokens`` and page out every
+        newly completed block (encode → container → decode back into
+        the resident window). Returns the updated states pytree —
+        bit-identical in ``"qlc"`` mode, e4m3-rounded in ``"e4m3"``."""
+        total_tokens = int(total_tokens)
+        if total_tokens < self.tokens:
+            raise ValueError(f"token counter moved backwards: "
+                             f"{self.tokens} -> {total_tokens}")
+        self.tokens = total_tokens
+        bt = self.spec.block_tokens
+        while (self.evicted_tokens + (1 + self.spec.hot_blocks) * bt
+               <= self.tokens):
+            t0 = self.evicted_tokens
+            states = self._evict(states, t0, t0 + bt)
+            self.evicted_tokens = t0 + bt
+        return states
+
+    def _evict(self, states, t0: int, t1: int):
+        new_states = dict(states)
+        for i, kind in enumerate(self.kinds):
+            key = f"l{i}"
+            name = self.spec.layer_codec(i)
+            st = states[key]
+            if kind == "attention":
+                k, v = attn.kv_block_slice(st, t0, t1)
+                block = self.encode_block_arrays(name, key, (k, v),
+                                                 start=t0, tokens=t1 - t0)
+                k2, v2 = self.decode_block_arrays(block)
+                new_states[key] = attn.kv_block_restore(
+                    st, t0, t1, jnp.asarray(k2), jnp.asarray(v2))
+                self.cold.append(block)
+            else:
+                arrays = ssm.state_snapshot(st)
+                block = self.encode_block_arrays(name, key, arrays,
+                                                 start=t1, tokens=t1 - t0)
+                decoded = [jnp.asarray(a)
+                           for a in self.decode_block_arrays(block)]
+                new_states[key] = ssm.state_restore(st, decoded)
+                self.snapshots[key] = block
+        return new_states
+
+    # ---- block codec -----------------------------------------------------
+
+    def encode_block_arrays(self, name: str, layer: str,
+                            arrays: Sequence[jnp.ndarray], *, start: int,
+                            tokens: int) -> KVBlock:
+        """Encode one block's arrays into a self-describing container
+        through the layer's bound channel. Escape-pool overflow falls
+        back to a raw (uncoded) container — surfaced in ``stats()``,
+        never silently corrupted."""
+        shapes = tuple(tuple(int(d) for d in a.shape) for a in arrays)
+        dtypes = tuple(str(np.dtype(
+            a.dtype if hasattr(a, "dtype") else np.asarray(a).dtype))
+            for a in arrays)
+
+        if self.spec.mode == "e4m3":
+            ch = self.channels[name]
+            flat = jnp.concatenate(
+                [jnp.asarray(a, jnp.float32).reshape(-1) for a in arrays])
+            padded, n = pad_to_multiple(flat, ch.cfg.chunk_symbols)
+            codes, scales = _quantize(padded, ch.cfg)
+            buf, coded = self._encode_section(name, codes, scales, n)
+        elif self._plane_split(name):
+            # One container per byte plane (mixed-scheme stream): the
+            # compressible sign/exponent planes code under their own
+            # LUT + measured capacity, mantissa planes ride raw.
+            bufs, coded = [], False
+            for (isz, j), plane in byte_planes(arrays).items():
+                pname = f"{name}/w{isz}b{j}"
+                ch = self.channels[pname]
+                codes, n = pad_to_multiple(jnp.asarray(plane),
+                                           ch.cfg.chunk_symbols)
+                b, c = self._encode_section(pname, codes, None, n)
+                bufs.append(b)
+                coded = coded or c
+            buf = qc.pack_stream(bufs)
+        else:
+            # tiny layer: one interleaved byte stream (calibration
+            # found plane framing would cost more than it saves)
+            ch = self.channels[name]
+            syms = kv_symbol_stream(arrays, "qlc")
+            codes, n = pad_to_multiple(jnp.asarray(syms),
+                                       ch.cfg.chunk_symbols)
+            buf, coded = self._encode_section(name, codes, None, n)
+        return KVBlock(layer=layer, start=start, tokens=tokens,
+                       container=buf, shapes=shapes, dtypes=dtypes,
+                       coded=coded)
+
+    def _plane_split(self, base: str) -> bool:
+        """Whether calibration chose per-plane codecs for this layer
+        (recorded by which registry names exist)."""
+        cached = self._split_cache.get(base)
+        if cached is None:
+            cached = any(n.startswith(base + "/w")
+                         for n in self.registry.names())
+            self._split_cache[base] = cached
+        return cached
+
+    def _encode_section(self, name: str, codes, scales, n_valid: int
+                        ) -> Tuple[np.ndarray, bool]:
+        """Encode one symbol stream into a container section through
+        its bound channel. A section is only coded when that actually
+        shrinks it: the calibration verdict (:func:`codec_wins`) is a
+        cheap pre-filter, and the measured slot capacity is compared
+        against the raw wire per block — a drifted distribution can
+        never expand the cache past raw + header."""
+        ch = self.channels[name]
+        entry = self.registry[name]
+        k = ch.cfg.chunk_symbols
+        n_chunks = int(codes.size) // k
+        coded = codec_wins(entry)
+        if coded:
+            cfg = self._block_cfg(ch, codes)
+            coded_words = (n_chunks * cfg.capacity_words
+                           + cfg.pool_slots(n_chunks) * (k // 4))
+            coded = coded_words < n_chunks * (k // 4)
+        if coded:
+            payload = _compress_codes(codes, ch.tables, cfg)
+            coded, payload, cfg = self._overflow_fallback(
+                payload, cfg, ch=ch, codes=codes)
+        else:
+            self.raw_sections += 1
+            coded, payload, cfg = self._raw_wire(ch, codes)
+        return qc.pack_payload(
+            payload, scales, scheme_id=entry.scheme_id, cfg=cfg,
+            n_valid=n_valid,
+            prefix_bits=entry.tables.prefix_bits), coded
+
+    def _block_cfg(self, ch, codes):
+        """Wire config for one coded block. With
+        ``spec.exact_capacity`` the slot capacity is this block's
+        measured max chunk size (the weight wire's zero-escape trick —
+        cold blocks are equally static); otherwise the calibrated plan
+        capacity + escape pool."""
+        if not self.spec.exact_capacity:
+            return ch.cfg
+        chunks = codes.reshape(-1, ch.cfg.chunk_symbols)
+        nbits = _codec.encode_chunk_bits(
+            chunks, jnp.asarray(ch.tables.enc_len, jnp.uint32))
+        cap = max(1, int(np.ceil(float(jnp.max(nbits)) / 32)))
+        return dataclasses.replace(ch.cfg, capacity_words=cap,
+                                   pool_slots_per_1k=1)
+
+    def _raw_wire(self, ch, codes):
+        """Uncoded (``enabled=False``) wire form of a block. The raw
+        decode path never touches the escape pool, so the container
+        carries zero pool slots — pure payload + header."""
+        raw_cfg = dataclasses.replace(ch.cfg, enabled=False)
+        payload = _compress_codes(codes, ch.tables, raw_cfg)
+        payload = payload._replace(
+            pool=jnp.zeros(payload.pool.shape[:-2]
+                           + (0, payload.pool.shape[-1]), jnp.uint32))
+        return False, payload, raw_cfg
+
+    def _overflow_fallback(self, payload, cfg, *, ch, codes):
+        """ok-check one encoded payload; on pool overflow re-wire the
+        block raw (``enabled=False``) instead of dropping escapes.
+        (Unreachable with ``exact_capacity`` — zero escapes by
+        construction.)"""
+        pool_slots = payload.pool.shape[-2]
+        if int(np.asarray(payload.pool_count).reshape(-1)[0]) <= pool_slots:
+            return True, payload, cfg
+        self.overflow_sections += 1
+        return self._raw_wire(ch, codes)
+
+    def decode_block_arrays(self, block: KVBlock) -> List[np.ndarray]:
+        """Container stream -> the block's arrays, exactly as encoded
+        (byte planes in ``"qlc"`` mode, dequantized e4m3 values in
+        ``"e4m3"``). Raises :class:`KVCacheOverflowError` when a coded
+        section's escape pool overflowed (decoding would corrupt
+        silently)."""
+        if self.spec.mode == "e4m3":
+            vals, ok, _ = qc.decode_values(
+                block.container, self.registry,
+                use_kernels=self.spec.use_kernels)
+            if not bool(ok):
+                raise KVCacheOverflowError(
+                    f"block {block.layer}@{block.start}: escape pool "
+                    "overflow")
+            vals = np.asarray(vals)
+            out, pos = [], 0
+            for s, d in zip(block.shapes, block.dtypes):
+                n = int(np.prod(s))
+                out.append(vals[pos:pos + n].astype(np.dtype(d))
+                           .reshape(s))
+                pos += n
+            return out
+        base = self.spec.layer_codec(_layer_index(block.layer))
+        if not self._plane_split(base):
+            syms, ok, _ = qc.decode_codes(
+                block.container, self.registry,
+                use_kernels=self.spec.use_kernels)
+            if not bool(ok):
+                raise KVCacheOverflowError(
+                    f"block {block.layer}@{block.start}: escape pool "
+                    "overflow")
+            raw = np.asarray(syms)
+            out, pos = [], 0
+            for s, d in zip(block.shapes, block.dtypes):
+                nb = int(np.prod(s)) * np.dtype(d).itemsize
+                out.append(raw[pos:pos + nb].view(np.dtype(d)).reshape(s))
+                pos += nb
+            return out
+        # plane-split layer: one section per byte plane, in byte_planes
+        # order (itemsize ascending, then byte index) — fully determined
+        # by the block's shapes/dtypes, nothing extra on the wire. All
+        # coded sections decode in ONE batched multi-LUT dispatch
+        # (container.decode_codes_stream) — this is the decode-on-access
+        # hot path.
+        sections = qc.decode_codes_stream(
+            block.container, self.registry,
+            use_kernels=self.spec.use_kernels)
+        order = self._plane_order(block.dtypes)
+        assert len(sections) == len(order), (len(sections), len(order))
+        planes: Dict[Tuple[int, int], np.ndarray] = {}
+        for (isz, j), (syms, ok) in zip(order, sections):
+            if not bool(ok):
+                raise KVCacheOverflowError(
+                    f"block {block.layer}@{block.start} plane "
+                    f"w{isz}b{j}: escape pool overflow")
+            planes[(isz, j)] = np.asarray(syms)
+        return self._unplane(planes, block.shapes, block.dtypes)
+
+    @staticmethod
+    def _plane_order(dtypes) -> List[Tuple[int, int]]:
+        sizes = sorted({np.dtype(d).itemsize for d in dtypes})
+        return [(isz, j) for isz in sizes for j in range(isz)]
+
+    @staticmethod
+    def _unplane(planes, shapes, dtypes) -> List[np.ndarray]:
+        """Inverse of :func:`repro.comm.calibrate.byte_planes`."""
+        mats, cursor = {}, {}
+        for isz in sorted({np.dtype(d).itemsize for d in dtypes}):
+            n = sum(int(np.prod(s)) for s, d in zip(shapes, dtypes)
+                    if np.dtype(d).itemsize == isz)
+            mats[isz] = np.stack(
+                [planes[(isz, j)][:n] for j in range(isz)], axis=1)
+            cursor[isz] = 0
+        out = []
+        for s, d in zip(shapes, dtypes):
+            dt = np.dtype(d)
+            n = int(np.prod(s))
+            c = cursor[dt.itemsize]
+            rows = np.ascontiguousarray(mats[dt.itemsize][c:c + n])
+            cursor[dt.itemsize] = c + n
+            out.append(rows.reshape(-1).view(dt).reshape(s))
+        return out
+
+    # ---- accounting / migration -----------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        """Wire accounting of the cold cache: compressed vs dense bytes
+        per evicted token (attention blocks + latest SSM snapshots)."""
+        blocks = self.cold + list(self.snapshots.values())
+        wire = sum(b.wire_bytes for b in blocks)
+        dense = sum(b.dense_bytes for b in blocks)
+        toks = max(1, self.evicted_tokens)
+        return {
+            "tokens": self.tokens,
+            "evicted_tokens": self.evicted_tokens,
+            "cold_blocks": len(self.cold),
+            "overflow_sections": self.overflow_sections,
+            "raw_sections": self.raw_sections,
+            "cold_wire_bytes": wire,
+            "cold_dense_bytes": dense,
+            "compressed_bytes_per_token": wire / toks,
+            "dense_bytes_per_token": dense / toks,
+            "compressed_vs_dense_ratio": (wire / dense) if dense else 0.0,
+        }
+
+    def block_wire(self, block: KVBlock) -> jnp.ndarray:
+        """A cold block's container words as a device array — the
+        migration payload for :func:`all_gather_block_wire`."""
+        return jnp.asarray(block.container)
+
+
+# --------------------------------------------------------------------------
+# Calibration glue (decode states -> per-layer registry entries)
+# --------------------------------------------------------------------------
+
+def calibration_arrays(cfg: ModelConfig, states, tokens: int
+                       ) -> Dict[str, List[jnp.ndarray]]:
+    """Per-layer-slot state arrays of a (e.g. prefill) decode-states
+    snapshot — the histogram source for
+    :func:`~repro.comm.calibrate.calibrate_kv_entries`. Attention slots
+    contribute their filled ``[0, tokens)`` K/V slice; SSM slots their
+    whole carried state."""
+    out: Dict[str, List[jnp.ndarray]] = {}
+    for i, kind in enumerate(cfg.layer_kinds()):
+        st = states[f"l{i}"]
+        if kind == "attention":
+            k, v = attn.kv_block_slice(st, 0, tokens)
+            out[f"l{i}"] = [k, v]
+        else:
+            out[f"l{i}"] = list(ssm.state_snapshot(st))
+    return out
+
+
+def calibrate_cache(registry, cfg: ModelConfig, states, tokens: int,
+                    spec: KVCacheSpec, **kw):
+    """Calibrate ``kv/layer{i}`` codecs for a model's decode states into
+    ``registry`` (layers with bit-identical tables share a scheme-id).
+    Returns ``{name: CodecEntry}``."""
+    kw.setdefault("chunk_symbols", spec.chunk_symbols)
+    return calibrate_kv_entries(
+        registry, calibration_arrays(cfg, states, tokens),
+        mode=spec.mode, prefix=spec.codec_prefix, **kw)
+
+
+# --------------------------------------------------------------------------
+# Manifest round-trip (serving handoff, next to the weight placement)
+# --------------------------------------------------------------------------
+
+def kv_cache_manifest(spec: KVCacheSpec, registry) -> Dict:
+    """JSON-able KV recipe: the paging spec + per-layer scheme-ids (the
+    tables themselves ride the registry JSON, shared with the weight
+    wire)."""
+    names = sorted(n for n in registry.names()
+                   if n.startswith(spec.codec_prefix + "/"))
+    return {"spec": spec.to_json(),
+            "scheme_ids": {n: registry[n].scheme_id for n in names}}
+
+
+def kv_spec_from_manifest(d: Dict) -> Tuple[KVCacheSpec, Dict[str, int]]:
+    """Inverse of :func:`kv_cache_manifest`."""
+    return (KVCacheSpec.from_json(d["spec"]),
+            {str(k): int(v) for k, v in d.get("scheme_ids", {}).items()})

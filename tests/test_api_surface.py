@@ -1,10 +1,11 @@
-"""API-surface snapshot for ``repro.comm``.
+"""API-surface snapshots for ``repro.comm`` and ``repro.serving``.
 
 The PR-4 channel redesign collapsed three duplicated resolution
-codepaths into ONE seam (`Channel`); this test freezes the package's
-exported names so the surface can only grow (or shrink) through a
+codepaths into ONE seam (`Channel`); this test freezes the packages'
+exported names so a surface can only grow (or shrink) through a
 deliberate, reviewed edit of the snapshot below — accidental re-export
-sprawl fails CI.
+sprawl fails CI. PR 5 extended the frozen set to ``repro.serving``
+when the compressed KV cache landed there.
 
 Deprecated names (the legacy functional wrappers) are tracked in their
 own set: they must keep existing until a removal PR deletes them from
@@ -13,6 +14,7 @@ both the package and this snapshot together.
 import inspect
 
 import repro.comm as comm
+import repro.serving as serving
 
 #: The channel-first surface (PR 4).
 EXPECTED = {
@@ -32,7 +34,8 @@ EXPECTED = {
     "decode_values_stream", "decode_codes_stream",
     # calibration
     "calibrate_for_gradients", "calibrate_for_tensor",
-    "histogram_of_quantized", "histogram_of_tree",
+    "calibrate_kv_entries", "empirical_plan",
+    "histogram_of_quantized", "histogram_of_tree", "kv_symbol_stream",
     # weight wire
     "GroupWireCodec", "compress_groups", "wire_shape_structs",
     # references
@@ -47,19 +50,44 @@ DEPRECATED = {
 }
 
 
-def _surface():
-    return {n for n in dir(comm)
+#: The serving surface (PR 5: compressed KV-cache paging).
+SERVING_EXPECTED = {
+    # engine
+    "ServeConfig", "generate", "generate_from_wire", "generate_paged",
+    "prefill",
+    # compressed-weight serving + manifest
+    "codec_from_manifest", "compress_params_for_serving", "open_params",
+    "serving_manifest",
+    # paged KV cache
+    "KVBlock", "KVCacheOverflowError", "KVCacheSpec", "PagedKVCache",
+    "all_gather_block_wire", "calibrate_cache", "kv_cache_manifest",
+    "kv_spec_from_manifest", "open_kv_channels",
+}
+
+
+def _surface(pkg):
+    return {n for n in dir(pkg)
             if not n.startswith("_")
-            and not inspect.ismodule(getattr(comm, n))}
+            and not inspect.ismodule(getattr(pkg, n))}
 
 
 def test_comm_surface_is_frozen():
-    got = _surface()
+    got = _surface(comm)
     want = EXPECTED | DEPRECATED
     added = sorted(got - want)
     removed = sorted(want - got)
     assert not added and not removed, (
         f"repro.comm surface drifted — added {added}, removed "
+        f"{removed}. If intentional, update tests/test_api_surface.py "
+        "in the same PR.")
+
+
+def test_serving_surface_is_frozen():
+    got = _surface(serving)
+    added = sorted(got - SERVING_EXPECTED)
+    removed = sorted(SERVING_EXPECTED - got)
+    assert not added and not removed, (
+        f"repro.serving surface drifted — added {added}, removed "
         f"{removed}. If intentional, update tests/test_api_surface.py "
         "in the same PR.")
 
@@ -87,4 +115,4 @@ def test_deprecated_names_warn():
             "compress_codes", "decompress_codes"} <= hit
     # the qlc_* wrappers need a mesh; their warning behavior is covered
     # by tests/test_channel.py::TestDeprecationWarnings.
-    assert DEPRECATED <= _surface()
+    assert DEPRECATED <= _surface(comm)
