@@ -69,6 +69,13 @@ METRIC_GATES = {
         # margin (symbols are the paper's native regime there).
         "e4m3_vs_dense_ratio": ("<=", 0.75),
     },
+    "kv_concurrent_capacity": {
+        # the serving engine's reason to exist: at fixed pool bytes, a
+        # shared-prompt request mix must fit at least 1.5x the
+        # concurrent sequences of per-sequence dense caches (codec
+        # ratio x prefix-sharing dedup) — see kv_cache_bench.py.
+        "concurrent_capacity_ratio": (">=", 1.5),
+    },
 }
 
 _OPS = {"<=": lambda a, b: a <= b, ">=": lambda a, b: a >= b}

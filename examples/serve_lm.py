@@ -1,38 +1,69 @@
-"""Batched serving example: prefill a batch of prompts, decode greedily.
+"""Continuous-batching serving example over the request-based Engine.
 
-The decode step here is exactly what the decode_32k / long_500k dry-run
-cells lower at production scale. With ``--wire qlc`` the weights are
-served from QLC wire: a codec registry calibrates per-parameter codecs,
-the wire codec binds a Channel (kernel toggle + placement made once),
-and the serving manifest round-trips the whole recipe through JSON
-before the wire is opened in-graph.
+Requests are submitted to ``repro.serving.Engine`` and join/leave the
+padded decode batch mid-flight — the request-based API that replaced
+the legacy ``generate`` batch calls in PR 6. The driver below staggers
+``--concurrent`` submissions across engine steps (two tenants, a
+fairness cap) and asserts each request's tokens are IDENTICAL to
+running it alone in a fresh single-slot engine: continuous batching is
+a pure scheduling change.
 
-With ``--kv-cache qlc`` the decode states are block-paged through the
-compressed KV cache (``repro.serving.kv_cache``): per-layer codecs are
-calibrated from a prefill snapshot into the same registry, full blocks
-are encoded into QLC containers on eviction and decoded on access, and
-the output is asserted TOKEN-IDENTICAL to the dense-cache run — the
-lossless contract. (``--kv-cache e4m3`` additionally quantizes blocks
-to e4m3 on eviction: smaller, but lossy like any fp8 cache.)
+With ``--wire qlc`` the weights are served from QLC wire: a codec
+registry calibrates per-parameter codecs, the wire codec binds a
+Channel (kernel toggle + placement made once), the serving manifest
+round-trips the recipe through JSON, and the wire is opened through
+the channel before serving.
+
+With ``--kv-cache qlc`` every resident sequence block-pages its decode
+states through ONE shared compressed :class:`~repro.serving.BlockPool`
+(capacity measured in compressed bytes): per-layer codecs calibrate
+lazily from the first prefill, identical prompt prefixes dedup pooled
+blocks by container digest, and the per-request identity assert above
+doubles as the lossless contract. (``--kv-cache e4m3`` additionally
+quantizes blocks on eviction: smaller, but lossy like any fp8 cache.)
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch xlstm-125m
 """
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.models import init_decode_states, init_params
-from repro.serving import ServeConfig, generate, generate_paged, prefill
+from repro.models import init_params
+from repro.serving import (BlockPool, Engine, GenerationRequest,
+                           KVCacheSpec)
+
+
+def run_requests(params, cfg, prompts, budgets, tenants, *, max_seq_len,
+                 max_batch, kv_spec=None, registry=None, pool=None,
+                 stagger=2, fairness_cap=0.5):
+    """Drive one engine over staggered submissions; returns the tokens
+    per request plus the engine (for stats)."""
+    eng = Engine(params, cfg, max_seq_len=max_seq_len,
+                 max_batch=max_batch, kv_spec=kv_spec, registry=registry,
+                 pool=pool, fairness_cap=fairness_cap)
+    handles = []
+    pending = list(zip(prompts, budgets, tenants))
+    while pending or (handles and any(
+            eng.poll(h).state in ("waiting", "running") for h in handles)):
+        for prompt, budget, tenant in pending[:stagger]:
+            handles.append(eng.submit(GenerationRequest(
+                prompt=prompt, max_new_tokens=budget, tenant=tenant)))
+        pending = pending[stagger:]
+        eng.step()
+    return [eng.poll(h).tokens for h in handles], eng
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-coder-33b",
                     help="any assigned arch; a reduced config is served")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine slots (max concurrent sequences)")
+    ap.add_argument("--concurrent", type=int, default=None,
+                    help="requests to submit (default: batch + 2, so "
+                         "requests queue and join mid-flight)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--wire", default="none", choices=["none", "qlc"],
@@ -40,26 +71,20 @@ def main():
                          "through a channel-bound wire codec")
     ap.add_argument("--kv-cache", default="none",
                     choices=["none", "qlc", "e4m3"],
-                    help="'qlc' pages decode states through lossless "
-                         "QLC containers (token-identical); 'e4m3' "
-                         "also quantizes blocks on eviction (lossy)")
-    ap.add_argument("--kv-block", type=int, default=128,
+                    help="'qlc' pages decode states through a shared "
+                         "compressed block pool (token-identical); "
+                         "'e4m3' also quantizes blocks (lossy)")
+    ap.add_argument("--kv-block", type=int, default=4,
                     help="tokens per paged-cache block")
     args = ap.parse_args()
+    n_req = args.concurrent or args.batch + 2
 
     cfg = reduced(get_config(args.arch), frontend_prefix_len=0,
                   frontend=None)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    serve_cfg = ServeConfig(
-        max_seq_len=args.prompt_len + args.new_tokens + 8,
-        max_new_tokens=args.new_tokens)
-
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
-        cfg.vocab_size)
+    max_seq_len = args.prompt_len + args.new_tokens + 8
 
     reg = None
-    wc2 = None
     if args.wire == "qlc":
         from repro.comm.calibrate import histogram_of_tree
         from repro.core import CodecRegistry
@@ -74,65 +99,73 @@ def main():
         wc2 = codec_from_manifest(serving_manifest(wc))
         ch = wc2.channel()
         print(f"serving {len(wc2.meta)} QLC-wired leaves via {ch}")
-        gen = jax.jit(lambda w, pr: generate(
-            open_params(w, wc2, channel=ch), cfg, pr, serve_cfg))
-        serve_params = wired
-    else:
-        gen = jax.jit(lambda p, pr: generate(p, cfg, pr, serve_cfg))
-        serve_params = params
-    t0 = time.time()
-    out = jax.block_until_ready(gen(serve_params, prompts))
-    t_compile = time.time() - t0
-    t0 = time.time()
-    out = jax.block_until_ready(gen(serve_params, prompts))
-    t_run = time.time() - t0
+        params = jax.jit(lambda w: open_params(w, wc2, channel=ch))(wired)
 
-    toks = args.batch * args.new_tokens
-    print(f"arch={cfg.name} batch={args.batch} "
-          f"prompt={args.prompt_len} new={args.new_tokens}")
-    print(f"compile {t_compile:.1f}s; decode {t_run*1e3:.0f}ms "
-          f"({toks / t_run:.0f} tok/s on CPU)")
-    print("sample:", np.asarray(out[0])[:12], "...")
-    assert out.shape == (args.batch, args.new_tokens)
-    assert (np.asarray(out) >= 0).all()
+    # staggered multi-tenant request mix: half the prompts share a
+    # prefix (the prefix-sharing dedup case), budgets vary
+    rng = np.random.default_rng(1)
+    shared = rng.integers(0, cfg.vocab_size, args.prompt_len)
+    prompts, budgets, tenants = [], [], []
+    for i in range(n_req):
+        if i % 2 == 0:
+            p = shared.copy()
+        else:
+            p = np.concatenate([shared[:args.prompt_len // 2],
+                                rng.integers(0, cfg.vocab_size,
+                                             args.prompt_len -
+                                             args.prompt_len // 2)])
+        prompts.append(p.astype(np.int32))
+        budgets.append(args.new_tokens - (i % 3))
+        tenants.append("alice" if i % 2 == 0 else "bob")
 
+    kv_spec = None
+    pool = None
+    kv_reg = None
     if args.kv_cache != "none":
         from repro.core import CodecRegistry
-        from repro.serving import (KVCacheSpec, PagedKVCache,
-                                   calibrate_cache, kv_spec_from_manifest,
-                                   serving_manifest)
-        # per-layer KV codecs calibrate from a prefill-state snapshot
-        # into the (shared, when --wire qlc) registry
-        states = init_decode_states(cfg, args.batch, serve_cfg.max_seq_len)
-        _, states = prefill(params, cfg, prompts, states)
-        if reg is None:
-            reg = CodecRegistry()
-        spec = KVCacheSpec(block_tokens=args.kv_block, mode=args.kv_cache)
-        calibrate_cache(reg, cfg, states, args.prompt_len, spec)
-        if wc2 is not None:
-            # KV scheme-ids round-trip next to the weight placement
-            manifest = serving_manifest(wc2, kv_spec=spec, kv_registry=reg)
-            spec, sids = kv_spec_from_manifest(manifest["kv"])
-            print(f"kv manifest: {len(sids)} per-layer codecs "
-                  f"{sorted(set(sids.values()))}")
-        cache = PagedKVCache(spec, cfg, reg)
-        # dense-cache baseline through the SAME host-driven decode loop
-        out_dense = generate_paged(params, cfg, prompts, serve_cfg, None)
-        out_paged = generate_paged(params, cfg, prompts, serve_cfg, cache)
-        stats = cache.stats()
+        kv_spec = KVCacheSpec(block_tokens=args.kv_block,
+                              mode=args.kv_cache)
+        pool = BlockPool(1 << 30)
+        kv_reg = reg if reg is not None else CodecRegistry()
+
+    outs, eng = run_requests(
+        params, cfg, prompts, budgets, tenants, max_seq_len=max_seq_len,
+        max_batch=args.batch, kv_spec=kv_spec, registry=kv_reg, pool=pool)
+    st = eng.stats()
+    print(f"arch={cfg.name} slots={args.batch} requests={n_req} "
+          f"prompt={args.prompt_len}")
+    print(f"engine: {st['steps']} steps, "
+          f"{st['ms_per_token_prefill']:.1f} ms/tok prefill, "
+          f"{st['ms_per_token_decode']:.1f} ms/tok decode "
+          f"(batched, CPU)")
+    assert st["requests"]["finished"] == n_req, st["requests"]
+
+    # the serving contract: each request's tokens are identical to
+    # running it ALONE (single-slot dense engine) — continuous batching
+    # and, for --kv-cache qlc, pooled compressed paging change nothing
+    check = args.kv_cache != "e4m3"   # e4m3 paging is deliberately lossy
+    if check:
+        for prompt, budget, got in zip(prompts, budgets, outs):
+            solo, _ = run_requests(params, cfg, [prompt], [budget],
+                                   ["solo"], max_seq_len=max_seq_len,
+                                   max_batch=1)
+            assert np.array_equal(got, solo[0]), \
+                "engine output diverged from isolated run"
+        print(f"{n_req} requests token-identical to isolated runs OK")
+
+    if pool is not None:
+        ps = st["pool"]
+        dense = st["peak_dense_logical_bytes"]
         print(f"kv-cache={args.kv_cache} block={args.kv_block}: "
-              f"{stats['cold_blocks']} cold blocks, "
-              f"{stats['compressed_bytes_per_token']:.0f} vs "
-              f"{stats['dense_bytes_per_token']:.0f} dense B/token "
-              f"(ratio {stats['compressed_vs_dense_ratio']:.3f}, "
-              f"{stats['raw_sections']} raw sections)")
-        if args.kv_cache == "qlc":
-            # the lossless contract: byte-exact round trip => tokens
-            # identical to the dense cache
-            assert np.array_equal(np.asarray(out_paged),
-                                  np.asarray(out_dense)), \
-                "qlc KV cache changed tokens (lossless contract broken)"
-            print("paged == dense: token-identical OK")
+              f"peak {ps['peak_referenced_bytes']} compressed B pinned "
+              f"vs {dense} dense B "
+              f"({ps['dedup_hits']} prefix dedup hits, "
+              f"{ps['unique_blocks']} unique blocks, "
+              f"{st['kv']['raw_sections']} raw sections)")
+        if ps["peak_referenced_bytes"]:
+            print(f"concurrent-capacity ratio "
+                  f"{dense / ps['peak_referenced_bytes']:.2f}x")
+    print("sample:", np.asarray(outs[0])[:12], "...")
     print("OK")
 
 

@@ -68,3 +68,8 @@ from repro.comm.weights import (  # noqa: F401
     compress_groups,
     wire_shape_structs,
 )
+from repro.comm.blockpool import (  # noqa: F401
+    BlockPool,
+    PoolExhausted,
+    container_digest,
+)

@@ -205,6 +205,7 @@ def calibrate_kv_entries(registry, layer_arrays, *, mode: str = "qlc",
                          target_escape_prob: float = 1e-4,
                          prefix: str = "kv",
                          plane_split_min_symbols: Optional[int] = None,
+                         merge_tol: float = 0.05,
                          allow_search: bool = False) -> Dict[str, "object"]:
     """Calibrate per-layer KV/SSM-state codecs into ``registry``.
 
@@ -223,45 +224,80 @@ def calibrate_kv_entries(registry, layer_arrays, *, mode: str = "qlc",
     chosen layout is recorded by which names exist, so the paged cache
     derives it from the registry, never re-guessing from block sizes.
 
-    Slot capacity is empirically sized from the snapshot's measured
-    chunk sums (:func:`empirical_plan`); entries whose derived tables
-    come out bit-identical dedupe onto one scheme-id via the registry's
-    table digest. Returns ``{name: CodecEntry}``.
+    **Cross-layer LUT sharing** (``merge_tol``): the same byte plane of
+    different layers (e.g. every K exponent byte) has nearly the same
+    histogram, and registering per-layer tables for each would blow up
+    the scheme-id space linearly in depth for no coding gain. New
+    streams whose normalized histograms are within total-variation
+    distance ``merge_tol`` of a group's first member share ONE set of
+    tables built from the group's summed counts — the registry's table
+    digest then collapses the whole group onto one scheme-id (one LUT
+    on device). Slot capacity stays **per name**: each stream's plan is
+    empirically sized from its own measured chunk sums
+    (:func:`empirical_plan`), so sharing tables never inflates another
+    layer's containers. ``merge_tol=0`` disables merging (only
+    bit-identical tables dedupe, the pre-sharing behavior).
+
+    Returns ``{name: CodecEntry}``.
     """
     if plane_split_min_symbols is None:
         plane_split_min_symbols = 2 * chunk_symbols
 
-    def _register(name, syms):
-        if name in registry:
-            return registry[name]
-        counts = np.maximum(
-            np.bincount(syms, minlength=256).astype(np.float64), 1e-6)
-        tables = adapt.calibrate_tables(counts, allow_search=allow_search)
-        plan = plan_for_tables(tables, counts, chunk_symbols=chunk_symbols,
-                               target_escape_prob=target_escape_prob)
-        # Capped pool: the paged cache wires incompressible streams raw
-        # (codec_wins), so the pool never needs to cover a pathological
-        # escape rate here.
-        plan = empirical_plan(tables, syms, plan,
-                              chunk_symbols=chunk_symbols,
-                              target_escape_prob=target_escape_prob,
-                              max_pool_slots_per_1k=64)
-        return registry.register_tables(name, tables, plan, counts=counts)
-
-    entries = {}
+    # Pass 1: collect every (name, symbol stream) needing registration,
+    # in deterministic layer order.
+    pending = []                      # [(name, syms)]
+    layout: list = []                 # names in output order
     for key in sorted(layer_arrays, key=_layer_index):
         base = f"{prefix}/layer{_layer_index(key)}"
         if mode == "e4m3":
-            entries[base] = _register(
-                base, kv_symbol_stream(layer_arrays[key], mode))
-            continue
-        planes = byte_planes(layer_arrays[key])
-        if min((p.size for p in planes.values()), default=0) \
-                >= plane_split_min_symbols:
-            for (isz, j), plane in planes.items():
-                name = f"{base}/w{isz}b{j}"
-                entries[name] = _register(name, plane)
+            streams = [(base, kv_symbol_stream(layer_arrays[key], mode))]
         else:
-            entries[base] = _register(
-                base, kv_symbol_stream(layer_arrays[key], "qlc"))
-    return entries
+            planes = byte_planes(layer_arrays[key])
+            if min((p.size for p in planes.values()), default=0) \
+                    >= plane_split_min_symbols:
+                streams = [(f"{base}/w{isz}b{j}", plane)
+                           for (isz, j), plane in planes.items()]
+            else:
+                streams = [(base,
+                            kv_symbol_stream(layer_arrays[key], "qlc"))]
+        for name, syms in streams:
+            layout.append(name)
+            if name not in registry:
+                pending.append((name, np.asarray(syms)))
+
+    # Pass 2: group pending streams by histogram similarity; one set of
+    # tables per group (summed counts), one empirically-sized plan per
+    # stream.
+    groups = []   # [{pmf, counts, members: [(name, syms, counts)]}]
+    for name, syms in pending:
+        counts = np.maximum(
+            np.bincount(syms, minlength=256).astype(np.float64), 1e-6)
+        pmf = counts / counts.sum()
+        for g in groups:
+            if merge_tol > 0 and \
+                    0.5 * float(np.abs(pmf - g["pmf"]).sum()) <= merge_tol:
+                g["counts"] += counts
+                g["members"].append((name, syms, counts))
+                break
+        else:
+            groups.append({"pmf": pmf, "counts": counts.copy(),
+                           "members": [(name, syms, counts)]})
+
+    entries = {}
+    for g in groups:
+        tables = adapt.calibrate_tables(g["counts"],
+                                        allow_search=allow_search)
+        for name, syms, counts in g["members"]:
+            plan = plan_for_tables(tables, counts,
+                                   chunk_symbols=chunk_symbols,
+                                   target_escape_prob=target_escape_prob)
+            # Capped pool: the paged cache wires incompressible streams
+            # raw (codec_wins), so the pool never needs to cover a
+            # pathological escape rate here.
+            plan = empirical_plan(tables, syms, plan,
+                                  chunk_symbols=chunk_symbols,
+                                  target_escape_prob=target_escape_prob,
+                                  max_pool_slots_per_1k=64)
+            entries[name] = registry.register_tables(name, tables, plan,
+                                                     counts=counts)
+    return {name: entries.get(name, registry[name]) for name in layout}

@@ -314,12 +314,16 @@ class Channel:
         """Static wire footprint of a payload (+ scales) in bytes."""
         return comp.wire_bytes(payload, scales)
 
-    def modeled_wire_bytes(self, n_values: int) -> int:
+    def modeled_wire_bytes(self, n_values: int,
+                           hop_chunks: int = 1) -> int:
         """Static wire bytes of an ``n_values``-value payload — the
-        planner-side mirror of :meth:`wire_bytes`, no arrays needed."""
+        planner-side mirror of :meth:`wire_bytes`, no arrays needed.
+        ``hop_chunks > 1`` charges the ring piece split's per-piece
+        row-sized escape pools (the ok-parity wire shape)."""
         return payload_wire_bytes(int(n_values), self.cfg.chunk_symbols,
                                   self.cfg.capacity_words,
-                                  self.cfg.pool_slots_per_1k)
+                                  self.cfg.pool_slots_per_1k,
+                                  hop_chunks=hop_chunks)
 
     # ---- collectives (call inside shard_map over spec.axis) -------------
 

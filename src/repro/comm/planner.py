@@ -200,16 +200,23 @@ class AlphaBetaModel:
 
 def payload_wire_bytes(n_symbols: int, chunk_symbols: int,
                        capacity_words: int, pool_slots_per_1k: int = 8,
-                       scale_bytes: int = 2) -> int:
+                       scale_bytes: int = 2, hop_chunks: int = 1) -> int:
     """Static wire bytes of one shard's compressed payload (slots +
     flags + pool + pool count + block-32 scales) — mirrors
-    ``compressed.wire_bytes`` without building arrays."""
+    ``compressed.wire_bytes`` without building arrays.
+
+    ``hop_chunks > 1`` (ring piece split) charges one row-sized escape
+    pool and pool count PER PIECE — the ok-parity wire shape
+    (``transport._compress_pieces``): every piece's pool is sized for
+    the whole row so the row-level ok predicate matches one-shot's.
+    """
     n_chunks = max(1, math.ceil(n_symbols / chunk_symbols))
     pool_slots = max(1, math.ceil(n_chunks * pool_slots_per_1k / 1024))
+    pieces = max(1, int(hop_chunks))
     return (n_chunks * capacity_words * 4          # slots
             + n_chunks                              # escape flags
-            + pool_slots * chunk_symbols            # pool (K/4 u32 rows)
-            + 4                                     # pool count
+            + pieces * pool_slots * chunk_symbols   # pool(s) (K/4 u32 rows)
+            + pieces * 4                            # pool count(s)
             + scale_bytes * math.ceil(n_symbols / 32))
 
 

@@ -38,15 +38,20 @@ the identical per-row-piece accumulate op sequence in fixed ring
 arrival order (own segment, then peers ``i-1, i-2, ...`` —
 ``_accumulate_row_pieces``). One-shot and ring therefore produce bit-identical
 outputs and identical ``ok`` flags — transports are interchangeable
-per collective, selected by the planner's cost model. (With
-``hop_chunks > 1`` each piece carries its own escape pool, so the
-``ok`` flag is evaluated per piece — values stay bit-identical, but a
-pathological payload can overflow a piece pool while the one-shot pool
-absorbs it; the planner only picks ``hop_chunks > 1`` where the escape
-bound already makes that negligible.)
+per collective, selected by the planner's cost model. This holds for
+``hop_chunks > 1`` too: each independently-compressed piece carries an
+escape pool sized for the WHOLE row (``_compress_pieces``), and the
+``ok`` flag is evaluated per ROW as the summed piece escape count
+against that row-sized pool (``_row_pool_ok``) — exactly the predicate
+the one-shot transport evaluates on its single row payload, so an
+escape burst concentrated in one piece flips ``ok`` on both transports
+or neither. The pools cost ``hop_chunks - 1`` extra row-pool copies of
+wire per row (``planner.payload_wire_bytes(hop_chunks=...)``), a
+second-order overhead the planner's hop-count search absorbs.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -95,10 +100,33 @@ def _compress_pieces(flat: jnp.ndarray, hop_chunks: int, tables, cfg):
     interleave the planner's cost model prices actually exists in the
     graph (stacking the pieces into one array would fuse them back into
     a single transfer + a single decode).
+
+    Escape-pool parity: with ``hop_chunks > 1`` every piece's pool is
+    sized for the WHOLE row (``pool_slots_per_1k`` scaled by the piece
+    count — ``ceil((n/h) * p*h / 1024) == ceil(n * p / 1024)``), so the
+    row-level ok predicate (:func:`_row_pool_ok`) is exactly the
+    one-shot transport's ``total_escapes <= row_pool_slots``.
     """
     pieces = flat.reshape(flat.shape[:-1] + (hop_chunks, -1))
+    if hop_chunks > 1 and cfg.enabled:
+        cfg = dataclasses.replace(
+            cfg, pool_slots_per_1k=cfg.pool_slots_per_1k * hop_chunks)
     return [comp._compress_values(pieces[..., p, :], tables, cfg)
             for p in range(hop_chunks)]
+
+
+def _row_pool_ok(pieces) -> jnp.ndarray:
+    """Row-level escape-pool ok of one row's piece list.
+
+    Every piece carries a row-sized pool (:func:`_compress_pieces`), so
+    the row is lossless exactly when the escape count summed across its
+    pieces fits that pool — the one-shot predicate. A piece-local
+    overflow implies the sum overflows too, so ``ok=True`` still
+    guarantees every individual piece decoded losslessly.
+    """
+    pool_slots = pieces[0][0].pool.shape[-2]
+    total = sum(jnp.sum(pp.pool_count) for pp, _ in pieces)
+    return total <= pool_slots
 
 
 def _accumulate_row_pieces(accs, pieces, tables, cfg, ok):
@@ -116,11 +144,11 @@ def _accumulate_row_pieces(accs, pieces, tables, cfg, ok):
     """
     for p, (pp, ps) in enumerate(pieces):
         if accs[p] is None:
-            accs[p], ok_s = comp._decompress_values(pp, ps, tables, cfg)
+            accs[p], _ = comp._decompress_values(pp, ps, tables, cfg)
         else:
-            accs[p], ok_s = comp._accumulate_values(
+            accs[p], _ = comp._accumulate_values(
                 accs[p], comp.WirePayload(*pp), ps, tables, cfg)
-        ok &= jnp.all(ok_s)
+    ok &= _row_pool_ok(pieces)
     return accs, ok
 
 
@@ -174,10 +202,10 @@ def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
     def consume(carry, buf, src, _hop):
         out, ok = carry
         for p, (pp, ps) in enumerate(buf):
-            vals, ok_s = comp._decompress_values(pp, ps, tables, cfg)
+            vals, _ = comp._decompress_values(pp, ps, tables, cfg)
             out = jax.lax.dynamic_update_slice(
                 out, vals.reshape(1, 1, -1), (src, jnp.int32(p), 0))
-            ok &= jnp.all(ok_s)
+        ok &= _row_pool_ok(buf)
         return out, ok
 
     out0 = jnp.zeros((d, h, flat.shape[0] // h), jnp.float32)
@@ -284,8 +312,8 @@ def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
         if s > 0:
             unit = _tree_permute(unit, axis_name, _shift_perm(d, s))
         for p, (pp, ps) in enumerate(unit):
-            vals, ok_s = comp._decompress_values(pp, ps, tables, cfg)
+            vals, _ = comp._decompress_values(pp, ps, tables, cfg)
             out = jax.lax.dynamic_update_slice(
                 out, vals.reshape(1, 1, -1), (src, jnp.int32(p), 0))
-            ok &= jnp.all(ok_s)
+        ok &= _row_pool_ok(unit)
     return out.reshape(d, -1), ok

@@ -1,15 +1,24 @@
-"""Production serving launcher: batched greedy generation.
+"""Production serving launcher: continuous-batching request engine.
+
+Requests go through ``repro.serving.Engine`` (PR 6): submit
+``GenerationRequest``s, drive ``step()``, ``poll()`` the tokens. The
+engine owns one padded decode batch that requests join and leave
+mid-flight — the legacy one-``generate``-call-per-batch path is gone
+from the launcher (the deprecated wrappers remain in ``repro.serving``
+for callers mid-migration).
 
 ``--wire qlc`` serves from QLC-compressed weights: the parameter stack
-is stored as block-32 e4m3 + QLC words and opened in-graph through a
+is stored as block-32 e4m3 + QLC words and opened through a
 channel-bound fused decode (``repro.comm.channel`` + the serving wire
-codec) — the production path where weight bytes move compressed.
+codec) before the engine starts — the production path where weight
+bytes move compressed.
 
-``--kv-cache qlc`` block-pages the decode states through the
-compressed KV cache (``repro.serving.kv_cache``): per-layer codecs
-calibrated from a prefill snapshot, blocks encoded to QLC containers
-on eviction, decoded on access — losslessly, so tokens match the
-dense cache. ``--kv-block`` sets the block size.
+``--kv-cache qlc`` block-pages every resident sequence's decode states
+through ONE shared compressed block pool
+(``repro.serving.BlockPool``): per-layer codecs calibrated lazily from
+the first prefill, blocks encoded to QLC containers on eviction,
+decoded from the (prefix-deduped) pooled bytes on access — losslessly,
+so tokens match the dense run. ``--kv-block`` sets the block size.
 
 Example:
   python -m repro.launch.serve --arch musicgen-medium --reduced \\
@@ -27,7 +36,7 @@ from repro.configs import get_config, reduced as make_reduced
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import init_params
 from repro.parallel import sharding as shd
-from repro.serving import ServeConfig, generate
+from repro.serving import BlockPool, Engine, GenerationRequest, KVCacheSpec
 
 
 def main():
@@ -35,19 +44,23 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine slots (max concurrent sequences)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests to submit (default: batch + 2)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--wire", default="none", choices=["none", "qlc"],
                     help="'qlc' stores weights as QLC wire and decodes "
-                         "them in-graph via a bound channel")
+                         "them through a bound channel")
     ap.add_argument("--kv-cache", default="none",
                     choices=["none", "qlc", "e4m3"],
-                    help="page decode states through QLC containers "
-                         "('qlc' lossless, 'e4m3' quantized)")
+                    help="page decode states through a shared compressed "
+                         "block pool ('qlc' lossless, 'e4m3' quantized)")
     ap.add_argument("--kv-block", type=int, default=128,
                     help="tokens per paged-cache block")
     args = ap.parse_args()
+    n_req = args.requests or args.batch + 2
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -61,12 +74,7 @@ def main():
 
     with shd.use_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
-        serve_cfg = ServeConfig(
-            max_seq_len=args.prompt_len + args.new_tokens + 8,
-            max_new_tokens=args.new_tokens)
-        prompts = jax.random.randint(
-            jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
-            cfg.vocab_size)
+        max_seq_len = args.prompt_len + args.new_tokens + 8
         if args.wire == "qlc":
             from repro.comm.calibrate import histogram_of_tree
             from repro.core import CodecRegistry
@@ -78,50 +86,52 @@ def main():
             ch = wc.channel()          # local open, fused kernel decode
             print(f"weight wire: {len(wc.meta)} compressed leaves, "
                   f"channel {ch}")
-            gen = jax.jit(lambda w, pr: generate(
-                open_params(w, wc, channel=ch), cfg, pr, serve_cfg))
-            params = wired
-        else:
-            gen = jax.jit(lambda p, pr: generate(p, cfg, pr, serve_cfg))
-        out = jax.block_until_ready(gen(params, prompts))
-        t0 = time.time()
-        out = jax.block_until_ready(gen(params, prompts))
-        dt = time.time() - t0
+            params = jax.jit(
+                lambda w: open_params(w, wc, channel=ch))(wired)
 
+        kv_spec = pool = None
         if args.kv_cache != "none":
-            from repro.core import CodecRegistry
-            from repro.models import init_decode_states
-            from repro.serving import (KVCacheSpec, PagedKVCache,
-                                       calibrate_cache, generate_paged,
-                                       prefill)
-            dense_params = (params if args.wire != "qlc"
-                            else jax.jit(lambda w: open_params(
-                                w, wc, channel=ch))(params))
-            states = init_decode_states(cfg, args.batch,
-                                        serve_cfg.max_seq_len)
-            _, states = prefill(dense_params, cfg, prompts, states)
-            kv_reg = reg if args.wire == "qlc" else CodecRegistry()
-            spec = KVCacheSpec(block_tokens=args.kv_block,
-                               mode=args.kv_cache)
-            calibrate_cache(kv_reg, cfg, states, args.prompt_len, spec)
-            cache = PagedKVCache(spec, cfg, kv_reg)
-            paged = generate_paged(dense_params, cfg, prompts, serve_cfg,
-                                   cache)
-            stats = cache.stats()
-            print(f"kv-cache={args.kv_cache}: "
-                  f"{stats['compressed_bytes_per_token']:.0f} vs "
-                  f"{stats['dense_bytes_per_token']:.0f} dense B/token "
-                  f"(ratio {stats['compressed_vs_dense_ratio']:.3f})")
-            if args.kv_cache == "qlc":
-                dense = generate_paged(dense_params, cfg, prompts,
-                                       serve_cfg, None)
-                assert np.array_equal(np.asarray(paged),
-                                      np.asarray(dense)), \
-                    "qlc KV cache must be token-identical"
+            kv_spec = KVCacheSpec(block_tokens=args.kv_block,
+                                  mode=args.kv_cache)
+            pool = BlockPool(1 << 30)
+        eng = Engine(params, cfg, max_seq_len=max_seq_len,
+                     max_batch=args.batch, kv_spec=kv_spec, pool=pool,
+                     mesh=mesh if not args.reduced else None)
 
-    print(f"{args.batch}x{args.new_tokens} tokens in {dt*1e3:.0f}ms "
-          f"({args.batch * args.new_tokens / dt:.0f} tok/s)")
-    print("first sequence:", np.asarray(out[0])[:16])
+        prompts = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(1), (n_req, args.prompt_len), 0,
+            cfg.vocab_size))
+        t0 = time.time()
+        handles = [eng.submit(GenerationRequest(
+            prompt=p, max_new_tokens=args.new_tokens)) for p in prompts]
+        eng.run()
+        dt = time.time() - t0
+        outs = [eng.poll(h) for h in handles]
+        assert all(s.state == "finished" for s in outs), \
+            [(s.request_id, s.state, s.error) for s in outs]
+
+        st = eng.stats()
+        if args.kv_cache == "qlc":
+            # the lossless contract: pooled compressed paging is
+            # token-identical to a dense single-request run
+            solo = Engine(params, cfg, max_seq_len=max_seq_len,
+                          max_batch=1)
+            h = solo.submit(GenerationRequest(
+                prompt=prompts[0], max_new_tokens=args.new_tokens))
+            solo.run()
+            assert np.array_equal(outs[0].tokens, solo.poll(h).tokens), \
+                "qlc KV cache must be token-identical"
+            ps = st["pool"]
+            print(f"kv-cache=qlc: peak {ps['peak_referenced_bytes']} "
+                  f"compressed B pinned vs "
+                  f"{st['peak_dense_logical_bytes']} dense B, "
+                  f"{ps['dedup_hits']} dedup hits")
+
+    toks = sum(len(s.tokens) for s in outs)
+    print(f"{n_req} requests / {toks} tokens in {dt*1e3:.0f}ms "
+          f"({st['ms_per_token_prefill']:.1f} ms/tok prefill, "
+          f"{st['ms_per_token_decode']:.1f} ms/tok decode)")
+    print("first sequence:", np.asarray(outs[0].tokens)[:16])
 
 
 if __name__ == "__main__":

@@ -6,3 +6,7 @@ from repro.serving.kv_cache import (  # noqa: F401
     KVBlock, KVCacheOverflowError, KVCacheSpec, PagedKVCache,
     all_gather_block_wire, calibrate_cache, kv_cache_manifest,
     kv_spec_from_manifest, open_kv_channels)
+from repro.serving.scheduler import (  # noqa: F401
+    Engine, GenerationRequest, RequestStatus)
+from repro.comm.blockpool import (  # noqa: F401
+    BlockPool, PoolExhausted)

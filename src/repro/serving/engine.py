@@ -15,18 +15,36 @@ right after the gather. The codec argument may be a per-tensor-type
 scheme-id, and ``serving_manifest`` / ``codec_from_manifest``
 round-trip the whole recipe (registry included) through JSON so a
 serving host reloads it without out-of-band table agreement.
+
+**Deprecation (PR 6)**: the per-call generation functions
+(``generate`` / ``generate_paged`` / ``generate_from_wire``) are
+superseded by the request-based :class:`repro.serving.scheduler.Engine`
+(``submit`` / ``step`` / ``poll``). They remain as thin wrappers
+building a one-run engine — token-identical to the scan-based oracle
+they replaced (``_generate_scanned``, kept as the reference for tests)
+— and emit a ``DeprecationWarning``, the same migration pattern the
+PR-4 channel redesign used for the ``qlc_*`` collectives.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_decode_states
+
+
+def _warn_legacy(old: str):
+    warnings.warn(
+        f"{old} is deprecated; use repro.serving.Engine — submit "
+        "GenerationRequests and drive step()/poll()",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -61,10 +79,10 @@ def _one(params, cfg, tok, pos, states):
     return decode_step(params, cfg, tok, states, pos)
 
 
-def generate(params, cfg: ModelConfig, prompts: jnp.ndarray,
-             serve_cfg: ServeConfig, rng: Optional[jax.Array] = None
-             ) -> jnp.ndarray:
-    """Greedy generation for a batch of equal-length prompts.
+def _generate_scanned(params, cfg: ModelConfig, prompts: jnp.ndarray,
+                      serve_cfg: ServeConfig) -> jnp.ndarray:
+    """Scan-based greedy generation — the reference oracle the engine
+    and the deprecated wrappers are asserted token-identical against.
 
     prompts: [B, S] int32. Returns [B, max_new_tokens].
     """
@@ -84,6 +102,38 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray,
         body, (first, states),
         jnp.arange(serve_cfg.max_new_tokens - 1, dtype=jnp.int32))
     return jnp.concatenate([first, toks.T], axis=1)
+
+
+def _engine_generate(params, cfg: ModelConfig, prompts, serve_cfg,
+                     **engine_kw) -> jnp.ndarray:
+    """One-run engine behind the deprecated batch-call wrappers: one
+    request per prompt row, driven to completion."""
+    from repro.serving.scheduler import Engine, GenerationRequest
+    prompts = np.asarray(prompts)
+    b, _ = prompts.shape
+    engine_kw.setdefault("max_batch", b)
+    eng = Engine(params, cfg, max_seq_len=serve_cfg.max_seq_len,
+                 **engine_kw)
+    handles = [eng.submit(GenerationRequest(
+        prompt=prompts[i], max_new_tokens=serve_cfg.max_new_tokens))
+        for i in range(b)]
+    eng.run()
+    return jnp.asarray(np.stack([eng.poll(h).tokens for h in handles]))
+
+
+def generate(params, cfg: ModelConfig, prompts: jnp.ndarray,
+             serve_cfg: ServeConfig, rng: Optional[jax.Array] = None
+             ) -> jnp.ndarray:
+    """Greedy generation for a batch of equal-length prompts.
+
+    prompts: [B, S] int32. Returns [B, max_new_tokens].
+
+    .. deprecated:: use :class:`repro.serving.Engine` — this wrapper
+       builds a one-run engine (host-driven; not jit-able) and is
+       token-identical to the scan oracle it replaced.
+    """
+    _warn_legacy("generate")
+    return _engine_generate(params, cfg, prompts, serve_cfg)
 
 
 # --------------------------------------------------------------------------
@@ -176,9 +226,14 @@ def open_params(wired_params, wire_codec, *, channel=None, axis_name=None,
 def generate_from_wire(wired_params, wire_codec, cfg: ModelConfig,
                        prompts: jnp.ndarray, serve_cfg: ServeConfig,
                        rng: Optional[jax.Array] = None) -> jnp.ndarray:
-    """Greedy generation directly from QLC-compressed parameters."""
+    """Greedy generation directly from QLC-compressed parameters.
+
+    .. deprecated:: open the wire once (:func:`open_params`) and serve
+       the dense tree through :class:`repro.serving.Engine`.
+    """
+    _warn_legacy("generate_from_wire")
     params = open_params(wired_params, wire_codec)
-    return generate(params, cfg, prompts, serve_cfg, rng)
+    return _engine_generate(params, cfg, prompts, serve_cfg)
 
 
 # --------------------------------------------------------------------------
@@ -187,11 +242,19 @@ def generate_from_wire(wired_params, wire_codec, cfg: ModelConfig,
 
 @functools.lru_cache(maxsize=8)
 def _paged_step(cfg: ModelConfig):
-    """Jitted one-token decode step, cached per config — repeated
-    ``generate_paged`` calls (dense baseline + paged run) reuse one
-    compiled executable instead of re-tracing a fresh lambda."""
+    """Jitted one-token decode step, cached per config — the engine and
+    repeated ``generate_paged`` calls (dense baseline + paged run)
+    reuse one compiled executable instead of re-tracing a fresh
+    lambda."""
     return jax.jit(lambda p, tok, st, pos: decode_step(p, cfg, tok, st,
                                                        pos))
+
+
+@functools.lru_cache(maxsize=8)
+def _prefill_fn(cfg: ModelConfig):
+    """Jitted prefill, cached per config (the engine's admission path;
+    jit re-specializes per prompt length)."""
+    return jax.jit(lambda p, tokens, st: prefill(p, cfg, tokens, st))
 
 
 def generate_paged(params, cfg: ModelConfig, prompts: jnp.ndarray,
@@ -200,21 +263,37 @@ def generate_paged(params, cfg: ModelConfig, prompts: jnp.ndarray,
     decode states through a
     :class:`~repro.serving.kv_cache.PagedKVCache`.
 
-    Per-step math is exactly :func:`generate`'s (same ``decode_step``,
+    Per-step math is exactly the scan oracle's (same ``decode_step``,
     same greedy argmax); between steps the paged cache evicts every
     completed block — encode to a QLC container, decode back into the
     resident window — so the attended cache content genuinely
     round-trips the compressed wire. With the lossless ``"qlc"`` mode
     the round trip is bit-exact and the output is token-identical to
-    ``kv_cache=None`` (the dense-cache run through this same loop).
+    ``kv_cache=None``.
 
     prompts: [B, S] int32. Returns [B, max_new_tokens].
+
+    .. deprecated:: use :class:`repro.serving.Engine` with
+       ``kv_spec=``/``pool=`` — per-slot paging through the shared
+       digest-addressed block pool. ``kv_cache=None`` already routes
+       through the engine; an explicit ``kv_cache`` keeps the legacy
+       batch-wide loop (the cache's ``cold``/``stats`` accounting is
+       per-batch, which per-slot engine paging deliberately replaces).
     """
+    _warn_legacy("generate_paged")
+    if kv_cache is None:
+        return _engine_generate(params, cfg, prompts, serve_cfg)
+    return _paged_loop(params, cfg, prompts, serve_cfg, kv_cache)
+
+
+def _paged_loop(params, cfg: ModelConfig, prompts: jnp.ndarray,
+                serve_cfg: ServeConfig, kv_cache) -> jnp.ndarray:
+    """Legacy batch-wide paged decode loop (kept behind the deprecated
+    ``generate_paged(kv_cache=...)`` spelling and its tests)."""
     b, s = prompts.shape
     states = init_decode_states(cfg, b, serve_cfg.max_seq_len)
     logits, states = prefill(params, cfg, prompts, states)
-    if kv_cache is not None:
-        states = kv_cache.note_tokens(states, s)
+    states = kv_cache.note_tokens(states, s)
 
     step = _paged_step(cfg)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
@@ -222,8 +301,7 @@ def generate_paged(params, cfg: ModelConfig, prompts: jnp.ndarray,
     for t in range(serve_cfg.max_new_tokens - 1):
         pos = jnp.full((b, 1), s + t, jnp.int32)
         lg, states = step(params, tok, states, pos)
-        if kv_cache is not None:
-            states = kv_cache.note_tokens(states, s + t + 1)
+        states = kv_cache.note_tokens(states, s + t + 1)
         tok = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)[:, None]
         toks.append(tok)
     return jnp.concatenate(toks, axis=1)

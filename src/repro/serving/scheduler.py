@@ -1,0 +1,449 @@
+"""Continuous-batching serving engine over a shared compressed block pool.
+
+This is the request-based serving API the ROADMAP's millions-of-users
+north star needs: ``generate``-style per-call batches cannot express
+requests that join and leave mid-flight, so the engine owns ONE padded
+active set of ``max_batch`` slots and drives it step by step:
+
+    Engine.submit(GenerationRequest) -> handle     (enqueue, no compute)
+    Engine.step()                                  (admit + one batched
+                                                    decode step + paging)
+    Engine.poll(handle) -> RequestStatus           (tokens so far)
+
+Scheduling model (all host-side, fully deterministic):
+
+* **Admission** — waiting requests claim free slots in submit order,
+  subject to a per-tenant fairness cap (``fairness_cap`` × max_batch
+  concurrent slots per tenant) and, under a bounded
+  :class:`~repro.comm.blockpool.BlockPool` with host spill disabled, a
+  projected-bytes admission check that rejects with a typed
+  ``PoolExhausted`` instead of OOMing mid-decode. Each admitted prompt
+  prefills at batch 1 on fresh states and scatters into its slot row.
+* **Decode** — ONE jitted ``decode_step`` over the whole padded slot
+  set per engine step (free slots feed token 0 at position 0; every
+  per-row op in the decode path is row-independent, so padding rows
+  cannot perturb active rows — the engine's output is token-identical
+  to running each request alone, asserted in tests).
+* **Paging** — each slot pages its completed blocks through the shared
+  :class:`~repro.serving.kv_cache.PagedKVCache` block codec into the
+  global :class:`~repro.comm.blockpool.BlockPool`. Pool capacity is
+  compressed bytes, so the codec's ratio is literally the number of
+  extra concurrent sequences per device; identical prompt prefixes
+  dedup by container digest (prefix sharing) and diverge copy-on-write
+  (immutable blocks, new digests past the split point). Every decoded
+  block is read back FROM the pooled container, so shared bytes are on
+  the token hot path, not a shadow copy.
+
+The legacy ``generate`` / ``generate_paged`` / ``generate_from_wire``
+functions are deprecated wrappers building a one-engine run
+(``repro.serving.engine``), asserted token-identical to the scan-based
+oracle they replaced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.blockpool import BlockPool, PoolExhausted
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import init_decode_states, ssm
+from repro.serving.engine import _paged_step, _prefill_fn
+from repro.serving.kv_cache import (KVCacheSpec, PagedKVCache,
+                                    calibrate_cache)
+
+_rid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class GenerationRequest:
+    """One generation request: a prompt (1-D token array), a budget,
+    and a tenant for fairness accounting."""
+    prompt: Any
+    max_new_tokens: int = 32
+    tenant: str = "default"
+    request_id: Optional[str] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{self.max_new_tokens}")
+        if self.request_id is None:
+            self.request_id = f"req{next(_rid_counter)}"
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStatus:
+    """Snapshot of a request's lifecycle (``Engine.poll``)."""
+    request_id: str
+    tenant: str
+    state: str                  # waiting | running | finished | rejected
+    tokens: np.ndarray          # generated tokens so far, int32 [<= budget]
+    error: Optional[str] = None
+
+
+@dataclasses.dataclass
+class _Seq:
+    """Engine-internal per-request state."""
+    req: GenerationRequest
+    state: str = "waiting"
+    slot: Optional[int] = None
+    toks: List[int] = dataclasses.field(default_factory=list)
+    evicted: int = 0            # tokens behind this sequence's cold blocks
+    digests: List[str] = dataclasses.field(default_factory=list)
+    snap_digests: Dict[str, str] = dataclasses.field(default_factory=dict)
+    error: Optional[str] = None
+
+    @property
+    def rid(self) -> str:
+        return self.req.request_id
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.req.prompt.size)
+
+    @property
+    def absorbed(self) -> int:
+        """Tokens written into this sequence's cache so far (the last
+        generated token has not been fed back yet)."""
+        return self.prompt_len + max(0, len(self.toks) - 1)
+
+
+def _slot_view(states, b: int):
+    """Batch-row ``b`` of a decode-states pytree (every leaf is
+    ``[n_groups, batch, ...]`` — batch is axis 1 throughout)."""
+    return jax.tree.map(lambda a: a[:, b:b + 1], states)
+
+
+def _slot_write(states, b: int, row):
+    return jax.tree.map(lambda dst, src: dst.at[:, b:b + 1].set(src),
+                        states, row)
+
+
+class Engine:
+    """Continuous-batching engine (see module docstring).
+
+    ``kv_spec`` switches on compressed block paging: blocks go through
+    the :class:`PagedKVCache` codec into ``pool`` (a
+    :class:`~repro.comm.blockpool.BlockPool`; default: an effectively
+    unbounded one). ``registry`` is calibrated lazily from the FIRST
+    admitted request's prefill states when it lacks the
+    ``kv/layer{i}`` entries. ``fairness_cap`` (0 < cap <= 1) bounds any
+    one tenant to ``ceil(cap * max_batch)`` concurrent slots.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_seq_len: int,
+                 max_batch: int = 4, kv_spec: Optional[KVCacheSpec] = None,
+                 registry=None, pool: Optional[BlockPool] = None,
+                 fairness_cap: Optional[float] = None, mesh=None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.params = params
+        self.cfg = cfg
+        self.max_seq_len = int(max_seq_len)
+        self.max_batch = int(max_batch)
+        self.kv_spec = kv_spec
+        if kv_spec is not None and registry is None:
+            from repro.core.registry import CodecRegistry
+            registry = CodecRegistry()
+        self.registry = registry
+        if kv_spec is not None and pool is None:
+            pool = BlockPool(1 << 50)       # effectively unbounded
+        self.pool = pool
+        self._mesh = mesh
+        self._codec: Optional[PagedKVCache] = None
+        self._kinds = cfg.layer_kinds()
+        self._tenant_cap = (None if fairness_cap is None
+                            else max(1, math.ceil(fairness_cap * max_batch)))
+        self._seqs: Dict[str, _Seq] = {}
+        self._waiting: List[str] = []
+        self._slots: List[Optional[str]] = [None] * self.max_batch
+        self._states = init_decode_states(cfg, self.max_batch,
+                                          self.max_seq_len)
+        self._step_fn = _paged_step(cfg)
+        self._prefill = _prefill_fn(cfg)
+        #: deterministic scheduling trace: (step, event, request_id)
+        self.events: List[tuple] = []
+        self._step_idx = 0
+        self._prefill_s = 0.0
+        self._prefill_tokens = 0
+        self._decode_s = 0.0
+        self._decode_tokens = 0
+        self._dense_of: Dict[str, int] = {}     # digest -> dense bytes
+        self._dense_logical = 0
+        self.peak_dense_logical_bytes = 0
+
+    # ---- request lifecycle ----------------------------------------------
+
+    def submit(self, req: GenerationRequest) -> str:
+        """Enqueue a request; returns its handle (no compute happens
+        until :meth:`step`)."""
+        rid = req.request_id
+        if rid in self._seqs:
+            raise ValueError(f"duplicate request_id {rid!r}")
+        if req.prompt.size + req.max_new_tokens > self.max_seq_len:
+            raise ValueError(
+                f"request {rid!r} needs {req.prompt.size} prompt + "
+                f"{req.max_new_tokens} new tokens > max_seq_len="
+                f"{self.max_seq_len}")
+        self._seqs[rid] = _Seq(req=req)
+        self._waiting.append(rid)
+        self._log("submit", rid)
+        return rid
+
+    def poll(self, handle: str) -> RequestStatus:
+        seq = self._seqs[handle]
+        return RequestStatus(request_id=seq.rid, tenant=seq.req.tenant,
+                             state=seq.state,
+                             tokens=np.asarray(seq.toks, np.int32),
+                             error=seq.error)
+
+    def step(self) -> int:
+        """Admit what fits, run ONE batched decode step over the padded
+        active set, page completed blocks. Returns the number of
+        requests still in flight (waiting + running)."""
+        self._step_idx += 1
+        self._admit()
+        active = [(b, rid) for b, rid in enumerate(self._slots)
+                  if rid is not None]
+        if active:
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            pos = np.zeros((self.max_batch, 1), np.int32)
+            for b, rid in active:
+                seq = self._seqs[rid]
+                tokens[b, 0] = seq.toks[-1]
+                pos[b, 0] = seq.prompt_len + len(seq.toks) - 1
+            t0 = time.perf_counter()
+            lg, self._states = self._step_fn(
+                self.params, jnp.asarray(tokens), self._states,
+                jnp.asarray(pos))
+            lg_np = np.asarray(lg)          # forces the dispatch
+            self._decode_s += time.perf_counter() - t0
+            self._decode_tokens += len(active)
+            for b, rid in active:
+                seq = self._seqs[rid]
+                seq.toks.append(int(np.argmax(lg_np[b, 0])))
+                try:
+                    self._page(seq)
+                except PoolExhausted as e:
+                    self._reject(seq, e)
+                    continue
+                if len(seq.toks) >= seq.req.max_new_tokens:
+                    self._finish(seq)
+        return sum(1 for s in self._seqs.values()
+                   if s.state in ("waiting", "running"))
+
+    def run(self):
+        """Drive :meth:`step` until every submitted request finished or
+        was rejected."""
+        while self.step():
+            pass
+
+    # ---- admission -------------------------------------------------------
+
+    def _admit(self):
+        for rid in list(self._waiting):
+            if None not in self._slots:
+                break
+            seq = self._seqs[rid]
+            tenant = seq.req.tenant
+            if self._tenant_cap is not None and \
+                    self._tenant_active(tenant) >= self._tenant_cap:
+                self._log("defer_fairness", rid)
+                continue
+            if self.pool is not None and self.kv_spec is not None:
+                try:
+                    self.pool.check_admission(self._projected_bytes(seq))
+                except PoolExhausted as e:
+                    self._waiting.remove(rid)
+                    self._reject(seq, e, event="reject_admission")
+                    continue
+            self._waiting.remove(rid)
+            try:
+                self._start(seq)
+            except PoolExhausted as e:
+                self._reject(seq, e)
+
+    def _tenant_active(self, tenant: str) -> int:
+        return sum(1 for rid in self._slots if rid is not None
+                   and self._seqs[rid].req.tenant == tenant)
+
+    def _projected_bytes(self, seq: _Seq) -> float:
+        """Projected compressed footprint of a request, in the pool's
+        measured mean-block-bytes unit (0 before any block pooled —
+        the first request always gets to run and establish the unit)."""
+        if self.kv_spec is None or self.pool is None:
+            return 0.0
+        mean = self.pool.mean_block_bytes()
+        if not mean:
+            return 0.0
+        bt = self.kv_spec.block_tokens
+        total = seq.prompt_len + seq.req.max_new_tokens - 1
+        n_blocks = max(0, total // bt - self.kv_spec.hot_blocks)
+        return mean * n_blocks * len(self._kinds)
+
+    def _start(self, seq: _Seq):
+        b = self._slots.index(None)
+        t0 = time.perf_counter()
+        prompts = jnp.asarray(seq.req.prompt[None, :])
+        row = init_decode_states(self.cfg, 1, self.max_seq_len)
+        logits, row = self._prefill(self.params, prompts, row)
+        first = int(np.argmax(np.asarray(logits)[0]))
+        self._prefill_s += time.perf_counter() - t0
+        self._prefill_tokens += seq.prompt_len
+        if self.kv_spec is not None and self._codec is None:
+            self._ensure_codec(row, seq.prompt_len)
+        self._states = _slot_write(self._states, b, row)
+        self._slots[b] = seq.rid
+        seq.slot = b
+        seq.state = "running"
+        seq.toks = [first]
+        self._log("admit", seq.rid)
+        self._page(seq)                     # prompt blocks page out now
+        if len(seq.toks) >= seq.req.max_new_tokens:
+            self._finish(seq)
+
+    def _ensure_codec(self, row_states, tokens: int):
+        """Build the shared block codec, calibrating the registry's
+        ``kv/layer{i}`` entries from the first prefill when absent."""
+        base = self.kv_spec.layer_codec(0)
+        have = any(n == base or n.startswith(base + "/")
+                   for n in self.registry.names())
+        if not have:
+            calibrate_cache(self.registry, self.cfg, row_states, tokens,
+                            self.kv_spec)
+        self._codec = PagedKVCache(self.kv_spec, self.cfg, self.registry,
+                                   mesh=self._mesh)
+
+    # ---- paging through the shared pool ---------------------------------
+
+    def _page(self, seq: _Seq):
+        if self._codec is None:
+            return
+        bt = self.kv_spec.block_tokens
+        hot = self.kv_spec.hot_blocks
+        while seq.evicted + (1 + hot) * bt <= seq.absorbed:
+            t0 = seq.evicted
+            self._evict_slot(seq, t0, t0 + bt)
+            seq.evicted = t0 + bt
+
+    def _evict_slot(self, seq: _Seq, t0: int, t1: int):
+        """Encode one completed block of ``seq``'s slot row into the
+        pool, then restore the row from the POOLED container — shared
+        (deduped) bytes are what the model attends over."""
+        row = _slot_view(self._states, seq.slot)
+        new_row = dict(row)
+        for i, kind in enumerate(self._kinds):
+            key = f"l{i}"
+            name = self.kv_spec.layer_codec(i)
+            st = row[key]
+            if kind == "attention":
+                k, v = attn.kv_block_slice(st, t0, t1)
+                block = self._codec.encode_block_arrays(
+                    name, key, (k, v), start=t0, tokens=t1 - t0)
+                digest = self._pool_put(seq, block)
+                k2, v2 = self._codec.decode_block_arrays(
+                    self.pool.get(digest))
+                new_row[key] = attn.kv_block_restore(
+                    st, t0, t1, jnp.asarray(k2), jnp.asarray(v2))
+            else:
+                arrays = ssm.state_snapshot(st)
+                block = self._codec.encode_block_arrays(
+                    name, key, arrays, start=t1, tokens=t1 - t0)
+                digest = self._pool_put(seq, block)
+                decoded = [jnp.asarray(a) for a in
+                           self._codec.decode_block_arrays(
+                               self.pool.get(digest))]
+                new_row[key] = ssm.state_restore(st, decoded)
+                # the newest snapshot supersedes the previous one
+                old = seq.snap_digests.get(key)
+                if old is not None:
+                    self._pool_release(seq, old)
+                seq.snap_digests[key] = digest
+        self._states = _slot_write(self._states, seq.slot, new_row)
+
+    def _pool_put(self, seq: _Seq, block) -> str:
+        digest = self.pool.put(block)
+        seq.digests.append(digest)
+        self._dense_of[digest] = block.dense_bytes
+        self._dense_logical += block.dense_bytes
+        self.peak_dense_logical_bytes = max(self.peak_dense_logical_bytes,
+                                            self._dense_logical)
+        return digest
+
+    def _pool_release(self, seq: _Seq, digest: str):
+        self.pool.release(digest)
+        seq.digests.remove(digest)
+        self._dense_logical -= self._dense_of.get(digest, 0)
+
+    def _release_all(self, seq: _Seq):
+        for digest in list(seq.digests):
+            self._pool_release(seq, digest)
+        seq.snap_digests.clear()
+
+    # ---- completion / rejection -----------------------------------------
+
+    def _finish(self, seq: _Seq):
+        seq.state = "finished"
+        if seq.slot is not None:
+            self._slots[seq.slot] = None
+            seq.slot = None
+        if self.pool is not None:
+            self._release_all(seq)      # zero-ref blocks stay cached
+        self._log("finish", seq.rid)
+
+    def _reject(self, seq: _Seq, err: Exception, event: str = "reject"):
+        seq.state = "rejected"
+        seq.error = f"{type(err).__name__}: {err}"
+        if seq.slot is not None:
+            self._slots[seq.slot] = None
+            seq.slot = None
+        if self.pool is not None:
+            self._release_all(seq)
+        self._log(event, seq.rid)
+
+    def _log(self, event: str, rid: str):
+        self.events.append((self._step_idx, event, rid))
+
+    # ---- accounting ------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Engine accounting: request states, ms/token prefill + decode
+        (the speed.md reporting format), KV codec counters, and the
+        pool's byte-level stats (with ``dense_logical`` rows so the
+        capacity win — dense bytes a dense cache would pin vs pooled
+        compressed bytes — is one division away)."""
+        by_state: Dict[str, int] = {}
+        for s in self._seqs.values():
+            by_state[s.state] = by_state.get(s.state, 0) + 1
+        out: Dict[str, Any] = {
+            "steps": self._step_idx,
+            "requests": {st: by_state.get(st, 0) for st in
+                         ("waiting", "running", "finished", "rejected")},
+            "prefill_tokens": self._prefill_tokens,
+            "decode_tokens": self._decode_tokens,
+            "ms_per_token_prefill": (1e3 * self._prefill_s
+                                     / max(1, self._prefill_tokens)),
+            "ms_per_token_decode": (1e3 * self._decode_s
+                                    / max(1, self._decode_tokens)),
+            "dense_logical_bytes": self._dense_logical,
+            "peak_dense_logical_bytes": self.peak_dense_logical_bytes,
+        }
+        if self._codec is not None:
+            out["kv"] = {
+                "overflow_sections": self._codec.overflow_sections,
+                "raw_sections": self._codec.raw_sections,
+            }
+        if self.pool is not None:
+            out["pool"] = self.pool.stats()
+        return out

@@ -38,6 +38,8 @@ EXPECTED = {
     "histogram_of_quantized", "histogram_of_tree", "kv_symbol_stream",
     # weight wire
     "GroupWireCodec", "compress_groups", "wire_shape_structs",
+    # digest-addressed block pool (PR 6: serving engine substrate)
+    "BlockPool", "PoolExhausted", "container_digest",
     # references
     "ref_all_gather", "ref_psum", "ref_reduce_scatter",
 }
@@ -50,11 +52,13 @@ DEPRECATED = {
 }
 
 
-#: The serving surface (PR 5: compressed KV-cache paging).
+#: The serving surface (PR 5: compressed KV-cache paging; PR 6: the
+#: request-based continuous-batching engine).
 SERVING_EXPECTED = {
-    # engine
-    "ServeConfig", "generate", "generate_from_wire", "generate_paged",
-    "prefill",
+    # engine (PR 6 request API)
+    "Engine", "GenerationRequest", "RequestStatus",
+    "BlockPool", "PoolExhausted",
+    "ServeConfig", "prefill",
     # compressed-weight serving + manifest
     "codec_from_manifest", "compress_params_for_serving", "open_params",
     "serving_manifest",
@@ -62,6 +66,11 @@ SERVING_EXPECTED = {
     "KVBlock", "KVCacheOverflowError", "KVCacheSpec", "PagedKVCache",
     "all_gather_block_wire", "calibrate_cache", "kv_cache_manifest",
     "kv_spec_from_manifest", "open_kv_channels",
+}
+
+#: Legacy batch-function serving API: thin Engine wrappers, warn on use.
+SERVING_DEPRECATED = {
+    "generate", "generate_from_wire", "generate_paged",
 }
 
 
@@ -84,8 +93,9 @@ def test_comm_surface_is_frozen():
 
 def test_serving_surface_is_frozen():
     got = _surface(serving)
-    added = sorted(got - SERVING_EXPECTED)
-    removed = sorted(SERVING_EXPECTED - got)
+    want = SERVING_EXPECTED | SERVING_DEPRECATED
+    added = sorted(got - want)
+    removed = sorted(want - got)
     assert not added and not removed, (
         f"repro.serving surface drifted — added {added}, removed "
         f"{removed}. If intentional, update tests/test_api_surface.py "
@@ -116,3 +126,28 @@ def test_deprecated_names_warn():
     # the qlc_* wrappers need a mesh; their warning behavior is covered
     # by tests/test_channel.py::TestDeprecationWarnings.
     assert DEPRECATED <= _surface(comm)
+
+
+def test_serving_deprecated_names_warn_once_per_call_site(monkeypatch):
+    """The legacy generate functions warn under the default filter
+    exactly ONCE per call site — loud enough to notice in a log, quiet
+    enough not to flood a serving loop. The engine body is stubbed out:
+    running real JAX between calls re-enters ``warnings.catch_warnings``
+    internally, which resets the per-call-site dedup registry and would
+    make the count nondeterministic."""
+    import warnings
+    from repro.serving import engine as engine_mod
+    monkeypatch.setattr(engine_mod, "_engine_generate",
+                        lambda *a, **k: None)
+    params, cfg, prompts = {}, None, None
+    scfg = serving.ServeConfig(max_seq_len=8, max_new_tokens=2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("default")
+        for _ in range(2):   # one call site, two calls -> one warning
+            serving.generate(params, cfg, prompts, scfg)
+        serving.generate(params, cfg, prompts, scfg)  # second call site
+    dep = [i for i in w if issubclass(i.category, DeprecationWarning)
+           and "generate" in str(i.message)]
+    assert len(dep) == 2, [str(i.message) for i in dep]
+    assert all("repro.serving.Engine" in str(i.message) for i in dep)
+    assert SERVING_DEPRECATED <= _surface(serving)

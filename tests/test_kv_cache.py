@@ -228,10 +228,14 @@ class TestGeneratePaged:
         assert s["overflow_sections"] == 0
 
     def test_matches_scanned_generate(self, setup):
-        """The host-driven loop is step-for-step the scanned generate."""
-        from repro.serving import generate
+        """The host-driven loop is step-for-step the scanned generate.
+
+        Compared against the scan oracle directly: the public
+        ``generate`` is itself an Engine wrapper since PR 6, so going
+        through it here would make this a tautology."""
+        from repro.serving.engine import _generate_scanned
         cfg, params, sc, prompts, _ = setup
-        out_scan = generate(params, cfg, prompts, sc)
+        out_scan = _generate_scanned(params, cfg, prompts, sc)
         out_loop = generate_paged(params, cfg, prompts, sc, None)
         np.testing.assert_array_equal(np.asarray(out_scan),
                                       np.asarray(out_loop))
@@ -333,3 +337,36 @@ class TestCalibration:
         ids0 = {p: s for p, s in by_layer["layer0"]}
         ids1 = {p: s for p, s in by_layer["layer1"]}
         assert ids0 == ids1
+
+    def test_similar_histograms_merge_within_tolerance(self):
+        """Cross-layer LUT sharing (PR 6): planes whose normalized
+        histograms sit within ``merge_tol`` total-variation distance
+        share ONE set of tables (= one scheme-id), while genuinely
+        different distributions keep their own; ``merge_tol=0`` falls
+        back to bit-identical-only dedup."""
+        from repro.comm.calibrate import calibrate_kv_entries
+        rng = np.random.default_rng(0)
+        base = rng.normal(0, 1, 20000).astype(np.float16)
+        near = (base + rng.normal(0, 0.01, base.shape)
+                .astype(np.float16)).astype(np.float16)
+        far = rng.integers(0, 1 << 16, 20000).astype(np.uint16) \
+            .view(np.float16)
+        reg = CodecRegistry()
+        entries = calibrate_kv_entries(
+            reg, {"l0": [base], "l1": [near], "l2": [far]},
+            chunk_symbols=256)
+        sid = {n: e.scheme_id for n, e in entries.items()}
+        # the structured (high) byte plane of l0/l1 merges; l2 never does
+        assert sid["kv/layer0/w2b1"] == sid["kv/layer1/w2b1"]
+        assert sid["kv/layer0/w2b1"] != sid["kv/layer2/w2b1"]
+        assert sid["kv/layer0/w2b0"] != sid["kv/layer2/w2b0"]
+        # merging shares TABLES, not plans: every name keeps its own
+        # empirically-sized entry in the registry
+        assert len(entries) == 6
+        # tol=0 disables similarity merging entirely
+        reg0 = CodecRegistry()
+        e0 = calibrate_kv_entries(
+            reg0, {"l0": [base], "l1": [near]}, chunk_symbols=256,
+            merge_tol=0.0)
+        assert e0["kv/layer0/w2b1"].scheme_id \
+            != e0["kv/layer1/w2b1"].scheme_id

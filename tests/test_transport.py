@@ -418,6 +418,74 @@ for name, fn in [
 print("OVERFLOW OK")
 """)
 
+    def test_hop_chunks_ok_parity_with_clustered_escapes(self):
+        """hop_chunks=2 splits each row into pieces; escapes clustered
+        in ONE piece must not flip ok vs one-shot (the ROADMAP parity
+        gap): pieces carry row-sized pools and ok is judged on the
+        summed row count, so a row whose total fits its escape budget
+        is ok=True on every transport — and decodes bit-identically."""
+        run_md(MD_PRELUDE + """
+from repro.comm import compress_values
+
+# pool slots are per 1024 CHUNKS: a 4096-symbol row is 16 chunks, so
+# 512/1k gives an 8-slot row pool (and a 4-slot half-row piece pool)
+tight = CommConfig(chunk_symbols=256, capacity_words=60,
+                   pool_slots_per_1k=512)
+rng2 = np.random.default_rng(42)
+Xc = rng2.standard_normal((8, 4096)).astype(np.float32)
+# heavy-tail chunks 8..13 (all inside piece 2 of an h=2 split): their
+# coded length blows past capacity_words, so each escapes to the pool
+Xc[:, 8 * 256:14 * 256] *= np.exp(
+    2 * rng2.standard_normal((8, 6 * 256))).astype(np.float32)
+# precondition, per row: escapes live ONLY in piece 2, and the total
+# fits the 8-slot row budget but overflows the 4-slot HALF-row budget
+# a piece-local predicate would use
+for r in range(8):
+    flags = np.asarray(compress_values(
+        jnp.asarray(Xc[r]), tables, tight)[0].flags)
+    assert flags[:8].sum() == 0 and 4 < flags.sum() <= 8, (r, flags)
+
+def run_c(fn, transport, x):
+    def f(v):
+        out, ok = fn(v[0], transport)
+        return out[None], ok[None]
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=P("d", None),
+                             out_specs=(P("d", None), P("d"))))(x)
+for name, fn in [
+    ("all_gather", lambda x, t: qlc_all_gather(
+        x, "d", tables, tight, transport=t, axis_size=8)),
+    ("reduce_scatter", lambda x, t: (lambda r: (r.segment, r.ok))(
+        qlc_reduce_scatter(x, "d", 8, tables, tight, transport=t))),
+    ("psum", lambda x, t: qlc_psum(x, "d", 8, tables, tight,
+                                   transport=t)),
+]:
+    o1, ok1 = run_c(fn, None, Xc)
+    o2, ok2 = run_c(fn, RING2, Xc)
+    np.testing.assert_array_equal(np.asarray(ok1), np.asarray(ok2))
+    if np.asarray(ok1).all():
+        # outputs are only contractual when ok says lossless
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    if name == "all_gather":
+        # the all_gather wire is the whole row, so its 8-slot budget
+        # absorbs the clustered burst — ok must be True, which the old
+        # piece-local predicate (4-slot half-row pools) flipped False.
+        # reduce_scatter/psum wire 512-symbol SEGMENTS (1 slot), where
+        # the burst genuinely overflows: ok parity, not ok=True, is
+        # their contract here.
+        assert np.asarray(ok1).all(), name
+    print(name, "clustered-escape parity OK")
+
+# and a genuinely overflowing row still flags False on BOTH
+Xo = np.array(Xc)
+Xo[:, :8 * 256] *= np.exp(
+    2 * rng2.standard_normal((8, 8 * 256))).astype(np.float32)
+for t in (None, RING2):
+    _, ok = run_c(lambda x, tr: qlc_psum(
+        x, "d", 8, tables, tight, transport=tr), t, Xo)
+    assert not np.asarray(ok).any(), t
+print("HOPPAR OK")
+""")
+
 
 class TestShardedWeightOpen:
     def test_ring_open_matches_full_open(self):
