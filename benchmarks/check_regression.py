@@ -76,6 +76,16 @@ METRIC_GATES = {
         # ratio x prefix-sharing dedup) — see kv_cache_bench.py.
         "concurrent_capacity_ratio": (">=", 1.5),
     },
+    "kv_prefetch_overlap": {
+        # async paging's reason to exist: the jitted-window +
+        # DMA-prefetched path must never be slower per decoded token
+        # than host-driven sync paging over the same request mix...
+        "prefetched_vs_sync_ratio": ("<=", 1.0),
+        # ...and the majority of block decode wait must actually be
+        # hidden behind model compute (measured from the schedule →
+        # consume trace, not assumed) — see kv_cache_bench.py.
+        "overlap_fraction": (">=", 0.5),
+    },
 }
 
 _OPS = {"<=": lambda a, b: a <= b, ">=": lambda a, b: a >= b}

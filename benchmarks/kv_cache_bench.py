@@ -14,7 +14,14 @@ Rows:
   exist. The e4m3 mode's ratio (quantized cache, the paper's native
   symbols) rides along as ``e4m3_vs_dense_ratio``.
 * ``kv_block_decode`` — block decode-on-access latency (container →
-  dense arrays), the per-token hot-path cost of a cache miss.
+  dense arrays), the per-token hot-path cost of a cache miss, split
+  into ``host_frame_ms`` (header parse + section slicing) and
+  ``device_decode_ms`` (the decode dispatch itself).
+* ``kv_prefetch_overlap`` — sync vs async (device-resident arena +
+  DMA-prefetched block decode) serving over the same request mix:
+  per-token decode time ratio and the trace-derived fraction of block
+  decode time hidden behind model compute. Both are gated
+  (``check_regression.METRIC_GATES``).
 * ``kv_concurrent_capacity`` — the serving engine's capacity win: N
   requests (with shared prompts, the realistic serving mix) run
   through ``repro.serving.Engine`` over ONE shared compressed
@@ -104,19 +111,40 @@ def run(n: int = 1 << 19):
     })
 
     # ---- decode-on-access latency ----------------------------------------
+    # Split into its two halves (they regress independently): the HOST
+    # framing walk (header parse + section slicing, pure numpy) and the
+    # device decode dispatch (total minus framing). The old single
+    # number hid host-side framing regressions behind decode noise.
+    from repro.comm import container as qc
+
+    def _host_frame_walk(b):
+        buf = np.asarray(b.container)
+        offset = 0
+        while offset < buf.size:
+            _, _, _, offset = qc.unpack_payload(buf, offset)
+
     cache = caches["qlc"]
     for b in blocks:                                   # warm
         cache.decode_block_arrays(b)
     reps = 3
     best = float("inf")
+    best_frame = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
         for b in blocks:
             cache.decode_block_arrays(b)
         best = min(best, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for b in blocks:
+            _host_frame_walk(b)
+        best_frame = min(best_frame, time.perf_counter() - t0)
+    n_blocks = max(1, len(blocks))
     rows.append({
         "name": "kv_block_decode",
-        "us_per_call": best * 1e6 / max(1, len(blocks)),
+        "us_per_call": best * 1e6 / n_blocks,
+        "host_frame_ms": round(best_frame * 1e3 / n_blocks, 4),
+        "device_decode_ms": round((best - best_frame) * 1e3 / n_blocks,
+                                  4),
         "blocks": len(blocks),
         "mb_per_s": round(dense / best / 1e6, 1),
     })
@@ -178,6 +206,62 @@ def run(n: int = 1 << 19):
         "unique_blocks": ps["unique_blocks"],
         "ms_per_token_prefill": round(st["ms_per_token_prefill"], 2),
         "ms_per_token_decode": round(st["ms_per_token_decode"], 2),
+    })
+
+    # ---- sync vs prefetched (async) paging -------------------------------
+    # The SAME request mix through two engines sharing one fixed-
+    # geometry spec: host-driven sync paging (decode on the block-
+    # boundary critical path) vs device-resident async paging (jitted
+    # window scan + DMA-prefetched block decodes consumed one window
+    # later). Gated: the prefetched path may not be slower per decoded
+    # token, and the trace-derived overlap fraction (decode time hidden
+    # behind model compute / total decode wait) must stay majority-
+    # hidden.
+    fixed_spec = KVCacheSpec(block_tokens=4, mode="qlc", hot_blocks=1,
+                             exact_capacity=False)
+
+    def _drive(kv_paging):
+        eng = Engine(params, cfg, max_seq_len=prompt_len + max_new + 4,
+                     max_batch=max_batch, kv_spec=fixed_spec,
+                     registry=CodecRegistry(), pool=BlockPool(1 << 30),
+                     kv_paging=kv_paging)
+        t0 = time.perf_counter()
+        hs = [eng.submit(GenerationRequest(prompt=p,
+                                           max_new_tokens=max_new))
+              for p in prompts]
+        eng.run()
+        wall = time.perf_counter() - t0
+        assert all(eng.poll(h).state == "finished" for h in hs)
+        return eng, wall
+
+    _drive("sync")      # warm the jit caches (the step fn and every
+    _drive("async")     # window length this mix produces)
+    eng_sync, _ = _drive("sync")
+    eng_async, wall_async = _drive("async")
+    st_s, st_a = eng_sync.stats(), eng_async.stats()
+    for h_s, h_a in zip(
+            (eng_sync.poll(h).tokens for h in
+             [s.rid for s in eng_sync._seqs.values()]),
+            (eng_async.poll(h).tokens for h in
+             [s.rid for s in eng_async._seqs.values()])):
+        np.testing.assert_array_equal(h_s, h_a)   # token identity
+    sync_ms = st_s["ms_per_token_decode"]
+    async_ms = st_a["ms_per_token_decode"]
+    pf = st_a["prefetch"]
+    rows.append({
+        "name": "kv_prefetch_overlap",
+        "us_per_call": wall_async * 1e6 / max(1, len(prompts)),
+        "sync_ms_per_token": round(sync_ms, 3),
+        "prefetched_ms_per_token": round(async_ms, 3),
+        "prefetched_vs_sync_ratio": round(async_ms / max(sync_ms, 1e-9),
+                                          4),
+        "overlap_fraction": round(pf["overlap_fraction"], 4),
+        "prefetch_scheduled": pf["scheduled"],
+        "prefetch_hits": pf["hits"],
+        "prefetch_stalled": pf["stalled"],
+        "bytes_prefetched": pf["bytes_prefetched"],
+        "windows": st_a["async"]["windows"],
+        "d2h_per_window": st_a["async"]["d2h_per_window"],
     })
     return rows
 

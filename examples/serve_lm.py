@@ -22,6 +22,14 @@ blocks by container digest, and the per-request identity assert above
 doubles as the lossless contract. (``--kv-cache e4m3`` additionally
 quantizes blocks on eviction: smaller, but lossy like any fp8 cache.)
 
+``--kv-paging async`` (with ``--kv-cache qlc``) moves paging off the
+host: evicted blocks live in a device-resident arena, block decodes
+are DMA-prefetched one admission window ahead, and the decode loop
+runs as one jitted scan per window (two host-to-device transfers and
+one device-to-host per window, regardless of window length). Tokens
+stay identical to sync paging; the prefetch hit/stall counters print
+at the end.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch xlstm-125m
 """
 import argparse
@@ -37,12 +45,12 @@ from repro.serving import (BlockPool, Engine, GenerationRequest,
 
 def run_requests(params, cfg, prompts, budgets, tenants, *, max_seq_len,
                  max_batch, kv_spec=None, registry=None, pool=None,
-                 stagger=2, fairness_cap=0.5):
+                 stagger=2, fairness_cap=0.5, kv_paging="sync"):
     """Drive one engine over staggered submissions; returns the tokens
     per request plus the engine (for stats)."""
     eng = Engine(params, cfg, max_seq_len=max_seq_len,
                  max_batch=max_batch, kv_spec=kv_spec, registry=registry,
-                 pool=pool, fairness_cap=fairness_cap)
+                 pool=pool, fairness_cap=fairness_cap, kv_paging=kv_paging)
     handles = []
     pending = list(zip(prompts, budgets, tenants))
     while pending or (handles and any(
@@ -76,7 +84,15 @@ def main():
                          "'e4m3' also quantizes blocks (lossy)")
     ap.add_argument("--kv-block", type=int, default=4,
                     help="tokens per paged-cache block")
+    ap.add_argument("--kv-paging", default="sync",
+                    choices=["sync", "async"],
+                    help="'async' pages blocks through the device-"
+                         "resident arena: jitted window decode + DMA-"
+                         "prefetched block decodes (requires "
+                         "--kv-cache qlc)")
     args = ap.parse_args()
+    if args.kv_paging == "async" and args.kv_cache != "qlc":
+        ap.error("--kv-paging async requires --kv-cache qlc")
     n_req = args.concurrent or args.batch + 2
 
     cfg = reduced(get_config(args.arch), frontend_prefix_len=0,
@@ -123,14 +139,18 @@ def main():
     kv_reg = None
     if args.kv_cache != "none":
         from repro.core import CodecRegistry
+        # async paging needs the fixed-geometry wire (compile-time
+        # container offsets), so it forces exact_capacity=False
         kv_spec = KVCacheSpec(block_tokens=args.kv_block,
-                              mode=args.kv_cache)
+                              mode=args.kv_cache,
+                              exact_capacity=args.kv_paging != "async")
         pool = BlockPool(1 << 30)
         kv_reg = reg if reg is not None else CodecRegistry()
 
     outs, eng = run_requests(
         params, cfg, prompts, budgets, tenants, max_seq_len=max_seq_len,
-        max_batch=args.batch, kv_spec=kv_spec, registry=kv_reg, pool=pool)
+        max_batch=args.batch, kv_spec=kv_spec, registry=kv_reg, pool=pool,
+        kv_paging=args.kv_paging)
     st = eng.stats()
     print(f"arch={cfg.name} slots={args.batch} requests={n_req} "
           f"prompt={args.prompt_len}")
@@ -165,6 +185,14 @@ def main():
         if ps["peak_referenced_bytes"]:
             print(f"concurrent-capacity ratio "
                   f"{dense / ps['peak_referenced_bytes']:.2f}x")
+        if args.kv_paging == "async":
+            pf = st["prefetch"]
+            print(f"async paging: {st['async']['windows']} jitted "
+                  f"windows ({st['async']['d2h_per_window']:.0f} d2h "
+                  f"per window), prefetch {pf['hits']}/{pf['scheduled']} "
+                  f"hits ({pf['stalled']} stalled, "
+                  f"{pf['bytes_prefetched']} B prefetched, "
+                  f"overlap {pf['overlap_fraction']:.3f})")
     print("sample:", np.asarray(outs[0])[:12], "...")
     print("OK")
 

@@ -69,6 +69,9 @@ from repro.comm.weights import (  # noqa: F401
     wire_shape_structs,
 )
 from repro.comm.blockpool import (  # noqa: F401
+    ArenaExhausted,
+    ArenaStale,
+    BlockArena,
     BlockPool,
     PoolExhausted,
     container_digest,

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -42,6 +42,123 @@ class PoolExhausted(RuntimeError):
     """The block pool cannot hold a block: device capacity is exhausted
     and host spill is disabled (or one block alone exceeds capacity).
     The serving engine turns this into a typed request rejection."""
+
+
+class ArenaExhausted(RuntimeError):
+    """The device block arena has no free slot. Callers fall back to
+    the host-framed sync paging path (never a crash)."""
+
+
+class ArenaStale(RuntimeError):
+    """An arena slot's generation moved between a read being scheduled
+    and its result being consumed — the slot was freed (and possibly
+    rewritten) in between. Consuming the result would hand out stale
+    container words, so the arena refuses with this typed error."""
+
+
+class BlockArena:
+    """Device-resident container arena: one fixed-geometry ``uint32``
+    buffer of ``n_slots`` x ``slot_words``, indexed by slot id.
+
+    This is the HBM home of cold KV blocks under async paging
+    (``repro.serving``): container words are written once at eviction
+    (``write`` — a device-side scatter, no host round trip) and read
+    back as device slices for the Pallas prefetch-decode kernel
+    (``repro.kernels.qlc_prefetch``). The host side keeps only a free
+    list and a per-slot **generation counter**: every ``free`` bumps the
+    slot's generation, so a decode scheduled against ``(slot, gen)``
+    and consumed after the slot was reclaimed surfaces a typed
+    :class:`ArenaStale` instead of silently decoding whatever block
+    reused the slot.
+
+    The arena does NOT know about digests or refcounts — the
+    :class:`BlockPool` owns those and holds the arena view (slot + gen
+    per entry), releasing slots when entries are reclaimed.
+    """
+
+    def __init__(self, n_slots: int, slot_words: int):
+        if n_slots < 1 or slot_words < 1:
+            raise ValueError(f"bad arena geometry ({n_slots} slots x "
+                             f"{slot_words} words)")
+        import jax.numpy as jnp
+        self.n_slots = int(n_slots)
+        self.slot_words = int(slot_words)
+        self._buf = jnp.zeros((self.n_slots, self.slot_words), jnp.uint32)
+        self._free = list(range(self.n_slots - 1, -1, -1))
+        self._gen = [0] * self.n_slots
+        self._used_words = [0] * self.n_slots
+        self.writes = 0
+        self.reads = 0
+        self.frees = 0
+        self.stale_reads = 0
+
+    @property
+    def buffer(self):
+        """The arena's device buffer ``u32 [n_slots, slot_words]`` —
+        the prefetch kernel's DMA source."""
+        return self._buf
+
+    def alloc(self) -> Tuple[int, int]:
+        """Claim a free slot; returns ``(slot, generation)``."""
+        if not self._free:
+            raise ArenaExhausted(
+                f"all {self.n_slots} arena slots are live")
+        slot = self._free.pop()
+        return slot, self._gen[slot]
+
+    def write(self, slot: int, words) -> int:
+        """Store one container's words into ``slot`` (device scatter;
+        ``words`` stays on device). Returns the slot's generation."""
+        n = int(words.shape[0])
+        if n > self.slot_words:
+            raise ValueError(f"container of {n} words exceeds the "
+                             f"{self.slot_words}-word arena slot")
+        self._buf = self._buf.at[slot, :n].set(words)
+        self._used_words[slot] = n
+        self.writes += 1
+        return self._gen[slot]
+
+    def read(self, slot: int, gen: int, n_words: Optional[int] = None):
+        """Device slice of a slot's words, validated against the
+        generation the caller allocated under."""
+        self.check(slot, gen)
+        self.reads += 1
+        n = self._used_words[slot] if n_words is None else int(n_words)
+        return self._buf[slot, :n]
+
+    def check(self, slot: int, gen: int):
+        """Raise :class:`ArenaStale` when ``slot`` was freed (and
+        possibly reused) since generation ``gen``."""
+        if self._gen[slot] != gen:
+            self.stale_reads += 1
+            raise ArenaStale(
+                f"arena slot {slot} is at generation {self._gen[slot]}, "
+                f"but the access was scheduled at generation {gen} — "
+                "the block was evicted in between")
+
+    def free(self, slot: int):
+        """Return a slot to the free list and invalidate outstanding
+        ``(slot, gen)`` references by bumping the generation."""
+        if slot in self._free:
+            raise ValueError(f"double free of arena slot {slot}")
+        self._gen[slot] += 1
+        self._used_words[slot] = 0
+        self._free.append(slot)
+        self.frees += 1
+
+    def generation(self, slot: int) -> int:
+        return self._gen[slot]
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "n_slots": self.n_slots,
+            "slot_words": self.slot_words,
+            "live_slots": self.n_slots - len(self._free),
+            "writes": self.writes,
+            "reads": self.reads,
+            "frees": self.frees,
+            "stale_reads": self.stale_reads,
+        }
 
 
 def container_digest(container, *salt) -> str:
@@ -65,6 +182,8 @@ class _Entry:
     refs: int
     tier: str                # "device" | "host"
     stamp: int               # LRU clock at last touch
+    arena_slot: Optional[int] = None   # device-arena residency (async)
+    arena_gen: int = 0
 
 
 class BlockPool:
@@ -77,12 +196,14 @@ class BlockPool:
     ``comm`` without importing serving.
     """
 
-    def __init__(self, capacity_bytes: int, *, spill_host: bool = True):
+    def __init__(self, capacity_bytes: int, *, spill_host: bool = True,
+                 arena: Optional[BlockArena] = None):
         if capacity_bytes < 1:
             raise ValueError(f"capacity_bytes must be >= 1, got "
                              f"{capacity_bytes}")
         self.capacity_bytes = int(capacity_bytes)
         self.spill_host = bool(spill_host)
+        self.arena = arena
         self._entries: Dict[str, _Entry] = {}
         self._clock = 0
         # accounting
@@ -174,6 +295,31 @@ class BlockPool:
     def refs(self, digest: str) -> int:
         return self._entries[digest].refs
 
+    # ---- device-arena view (async paging) -------------------------------
+
+    def attach_arena_slot(self, digest: str, slot: int, gen: int) -> bool:
+        """Record that ``digest``'s container words live in the bound
+        arena at ``(slot, gen)``. Returns False (caller should free its
+        slot) when the entry already has one — the dedup twin of
+        ``put``: two sequences framing the same prefix block keep ONE
+        arena copy."""
+        e = self._entries[digest]
+        if e.arena_slot is not None:
+            return False
+        e.arena_slot, e.arena_gen = int(slot), int(gen)
+        return True
+
+    def arena_slot_of(self, digest: str) -> Optional[Tuple[int, int]]:
+        e = self._entries.get(digest)
+        if e is None or e.arena_slot is None:
+            return None
+        return e.arena_slot, e.arena_gen
+
+    def _drop_arena_slot(self, e: _Entry):
+        if e.arena_slot is not None and self.arena is not None:
+            self.arena.free(e.arena_slot)
+        e.arena_slot = None
+
     def __contains__(self, digest: str) -> bool:
         return digest in self._entries
 
@@ -229,6 +375,7 @@ class BlockPool:
             e = self._entries[pick[1]]
             if e.refs == 0:
                 del self._entries[pick[1]]
+                self._drop_arena_slot(e)
                 self.resident_bytes -= e.wire_bytes
                 self.reclaims += 1
             else:

@@ -314,10 +314,14 @@ def decompress_codes(payload: WirePayload, tables,
 
 
 def _decompress_codes(payload: WirePayload, tables: Optional[CodecTables],
-                      cfg: CommConfig
+                      cfg: CommConfig, *, decode_fn=None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Resolved-argument impl of :func:`decompress_codes`. ``tables``
-    may be ``None`` only for a raw (``cfg.enabled=False``) wire."""
+    may be ``None`` only for a raw (``cfg.enabled=False``) wire.
+    ``decode_fn(words, tables, cfg)`` overrides the slot decode — the
+    async KV paging path routes it through the DMA prefetch kernel
+    (``kernels.ops.decode_block_async``) while reusing this escape
+    merge unchanged."""
     k = cfg.chunk_symbols
     *lead, n_chunks, _ = payload.words.shape
 
@@ -327,7 +331,8 @@ def _decompress_codes(payload: WirePayload, tables: Optional[CodecTables],
         ok = jnp.ones(tuple(lead), dtype=bool) if lead else jnp.bool_(True)
         return codes_out, ok
 
-    dec = _decode(payload.words, tables, cfg)          # [..., n_chunks, K]
+    dec = (_decode if decode_fn is None else decode_fn)(
+        payload.words, tables, cfg)                    # [..., n_chunks, K]
 
     escape = payload.flags.astype(bool)
     raw = _gather_pool_raw(payload, cfg)

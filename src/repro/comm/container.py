@@ -48,6 +48,7 @@ import math
 import zlib
 from typing import List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -247,6 +248,72 @@ def pack_payload(payload: WirePayload, scales, *, scheme_id: int,
     return np.concatenate(parts)
 
 
+def _u8_words_device(a: jnp.ndarray) -> jnp.ndarray:
+    """Device-side twin of :func:`_u8_words`: u8 flags -> packed u32
+    words via ``bitcast_convert_type`` (little-endian, matching the
+    host numpy view)."""
+    a = jnp.asarray(a, jnp.uint8).reshape(-1)
+    pad = (-a.shape[0]) % 4
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros(pad, jnp.uint8)])
+    return jax.lax.bitcast_convert_type(a.reshape(-1, 4), jnp.uint32)
+
+
+def _scales_words_device(scales, dtype: Optional[str]) -> jnp.ndarray:
+    """Device-side twin of :func:`_scales_words`."""
+    if dtype is None:
+        return jnp.zeros(0, jnp.uint32)
+    s = jnp.asarray(scales).reshape(-1)
+    if dtype == "bfloat16":
+        u16 = jax.lax.bitcast_convert_type(
+            s.astype(jnp.bfloat16), jnp.uint16)
+        if u16.shape[0] % 2:
+            u16 = jnp.concatenate([u16, jnp.zeros(1, jnp.uint16)])
+        return jax.lax.bitcast_convert_type(
+            u16.reshape(-1, 2), jnp.uint32)
+    return jax.lax.bitcast_convert_type(s.astype(jnp.float32), jnp.uint32)
+
+
+def frame_block_device(payload: WirePayload, scales, *, scheme_id: int,
+                       cfg: CommConfig, n_valid: int,
+                       prefix_bits: int = 3) -> jnp.ndarray:
+    """Device-resident twin of :func:`pack_payload`: frame one
+    (payload, scales) pair as container words WITHOUT a host round
+    trip. The header is a compile-time constant (all geometry is static
+    once the wire config is fixed — the async KV paging path requires
+    ``KVCacheSpec(exact_capacity=False)`` for exactly this reason), so
+    only the payload sections are device ops. Bit-identical to the host
+    framing (asserted in tests), which makes container digests — and
+    therefore pool dedup — agree between the sync and async paging
+    paths."""
+    words = jnp.asarray(payload.words, jnp.uint32)
+    n_chunks, capacity_words = words.shape[-2], words.shape[-1]
+    pool = jnp.asarray(payload.pool, jnp.uint32)
+    scale_dtype = None if scales is None else cfg.scale_dtype
+    n_scales = 0 if scales is None else int(np.prod(scales.shape))
+    h = ContainerHeader(
+        scheme_id=scheme_id,
+        coded=cfg.enabled,
+        chunk_symbols=cfg.chunk_symbols,
+        capacity_words=capacity_words,
+        n_chunks=n_chunks,
+        pool_slots=pool.shape[-2],
+        n_valid=int(n_valid),
+        scale_dtype=scale_dtype,
+        n_scales=n_scales,
+        prefix_bits=prefix_bits,
+    )
+    parts = [
+        jnp.asarray(pack_header(h)),
+        words.reshape(-1),
+        _u8_words_device(payload.flags),
+        pool.reshape(-1),
+        jnp.asarray(payload.pool_count, jnp.uint32).reshape(-1)[:1],
+        _scales_words_device(scales, scale_dtype),
+    ]
+    return jnp.concatenate(parts)
+
+
 def unpack_payload(buf: np.ndarray, offset: int = 0
                    ) -> Tuple[ContainerHeader, WirePayload,
                               Optional[jnp.ndarray], int]:
@@ -313,13 +380,28 @@ def encode_values(x, entry: CodecEntry, cfg: Optional[CommConfig] = None,
                         prefix_bits=entry.tables.prefix_bits)
 
 
+def _prefetch_decode_fn():
+    """Slot-decode override routing through the DMA double-buffered
+    prefetch kernel (``kernels.ops.decode_block_async``) — the async KV
+    paging path's word movement, bit-identical to the plain decode."""
+    from repro.kernels import ops as kops
+
+    def fn(words, tables, cfg):
+        flat = words.reshape(-1, words.shape[-1])
+        out = kops.decode_block_async(flat, tables, cfg.chunk_symbols)
+        return out.reshape(words.shape[:-1] + (cfg.chunk_symbols,))
+    return fn
+
+
 def decode_values(buf, registry: CodecRegistry, offset: int = 0, *,
-                  use_kernels: Optional[bool] = None
+                  use_kernels: Optional[bool] = None,
+                  prefetch: bool = False
                   ) -> Tuple[jnp.ndarray, bool, int]:
     """Container -> (float32 values [n_valid], ok, next_offset).
 
     Needs only the buffer and the registry: the header supplies the
-    wire geometry, the scheme-id supplies the tables.
+    wire geometry, the scheme-id supplies the tables. ``prefetch``
+    routes the slot decode through the DMA prefetch kernel.
     """
     h, payload, scales, pos = unpack_payload(buf, offset)
     tables = _tables_for(h, registry)
@@ -327,7 +409,14 @@ def decode_values(buf, registry: CodecRegistry, offset: int = 0, *,
         **({} if use_kernels is None else {"use_kernels": use_kernels}))
     if scales is None:
         raise ValueError("container carries no scales; use decode_codes")
-    vals, ok = _decompress_values(payload, scales, tables, cfg)
+    if prefetch:
+        from repro.comm.compressed import (_decompress_codes as _dc,
+                                           _dequantize)
+        codes, ok = _dc(payload, tables, cfg,
+                        decode_fn=_prefetch_decode_fn())
+        vals = _dequantize(codes, scales)
+    else:
+        vals, ok = _decompress_values(payload, scales, tables, cfg)
     return vals.reshape(-1)[:h.n_valid], ok, pos
 
 
@@ -346,14 +435,17 @@ def encode_codes(codes, entry: CodecEntry,
 
 
 def decode_codes(buf, registry: CodecRegistry, offset: int = 0, *,
-                 use_kernels: Optional[bool] = None
+                 use_kernels: Optional[bool] = None,
+                 prefetch: bool = False
                  ) -> Tuple[jnp.ndarray, bool, int]:
     """Container -> (uint8 codes [n_valid], ok, next_offset)."""
     h, payload, _, pos = unpack_payload(buf, offset)
     tables = _tables_for(h, registry)
     cfg = h.comm_config(
         **({} if use_kernels is None else {"use_kernels": use_kernels}))
-    out, ok = _decompress_codes(payload, tables, cfg)
+    out, ok = _decompress_codes(
+        payload, tables, cfg,
+        decode_fn=_prefetch_decode_fn() if prefetch else None)
     return out.reshape(-1)[:h.n_valid], ok, pos
 
 
@@ -392,7 +484,8 @@ def decode_values_stream(buf, registry: CodecRegistry, *,
 
 
 def decode_codes_stream(buf, registry: CodecRegistry, *,
-                        use_kernels: bool = False
+                        use_kernels: bool = False,
+                        prefetch: bool = False
                         ) -> List[Tuple[jnp.ndarray, bool]]:
     """Decode a mixed-scheme stream's QLC chunks in ONE batched pass.
 
@@ -435,7 +528,11 @@ def decode_codes_stream(buf, registry: CodecRegistry, *,
                                 np.int32))
         all_words = jnp.asarray(np.concatenate(blocks))
         all_sids = jnp.asarray(np.concatenate(sids))
-        if use_kernels:
+        if prefetch:
+            from repro.kernels import ops as kops
+            dec = kops.decode_block_async(all_words, tables_list, k,
+                                          scheme_ids=all_sids)
+        elif use_kernels:
             from repro.kernels import ops as kops
             dec = kops.decode(all_words, tables_list, k,
                               scheme_ids=all_sids)

@@ -40,6 +40,7 @@ import numpy as np
 from repro.core import codec as _codec
 from repro.core.lut import CodecTables
 from repro.kernels import qlc_decode, qlc_encode, qlc_fused
+from repro.kernels import qlc_prefetch
 from repro.kernels import histogram256 as _hist
 from repro.quant import e4m3
 
@@ -147,6 +148,39 @@ def decode(words: jnp.ndarray,
     padded = _pad_rows(words, tile_chunks)
     sid = _sid_rows(scheme_ids, n_chunks, n_schemes, tile_chunks)
     out = qlc_decode.decode_pallas(
+        padded, sid, dec, sb, st,
+        chunk_symbols=chunk_symbols,
+        prefix_bits=prefix_bits,
+        tile_chunks=tile_chunks,
+        interpret=interpret,
+    )
+    return out[:n_chunks]
+
+
+def decode_block_async(words: jnp.ndarray,
+                       tables: CodecTables | Sequence[CodecTables],
+                       chunk_symbols: int, *, scheme_ids=None,
+                       tile_chunks: int | None = None,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Decode [n_chunks, CW] u32 -> [n_chunks, K] u8 via the DMA
+    double-buffered prefetch kernel (``kernels/qlc_prefetch.py``).
+
+    Bit-identical to :func:`decode`; the difference is word movement:
+    the container words stay in HBM (``ANY`` memory space) and stream
+    tile-by-tile through a two-slot VMEM scratch, so tile k+1's DMA
+    runs under tile k's LUT decode. This is the device half of the
+    serving prefetcher — the entry point `PagedKVCache` dispatches
+    ahead of block use.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n_chunks = words.shape[0]
+    if tile_chunks is None:
+        tile_chunks = auto_tile_chunks(chunk_symbols, n_chunks)
+    dec, sb, st, prefix_bits, n_schemes = _stacked_luts(tables)
+    padded = _pad_rows(words, tile_chunks)
+    sid = _sid_rows(scheme_ids, n_chunks, n_schemes, tile_chunks)
+    out = qlc_prefetch.prefetch_decode_pallas(
         padded, sid, dec, sb, st,
         chunk_symbols=chunk_symbols,
         prefix_bits=prefix_bits,

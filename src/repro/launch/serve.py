@@ -59,7 +59,15 @@ def main():
                          "block pool ('qlc' lossless, 'e4m3' quantized)")
     ap.add_argument("--kv-block", type=int, default=128,
                     help="tokens per paged-cache block")
+    ap.add_argument("--kv-paging", default="sync",
+                    choices=["sync", "async"],
+                    help="'async' keeps evicted blocks in a device-"
+                         "resident arena and decodes them via DMA "
+                         "prefetch under a jitted window scan "
+                         "(requires --kv-cache qlc)")
     args = ap.parse_args()
+    if args.kv_paging == "async" and args.kv_cache != "qlc":
+        ap.error("--kv-paging async requires --kv-cache qlc")
     n_req = args.requests or args.batch + 2
 
     cfg = get_config(args.arch)
@@ -91,11 +99,14 @@ def main():
 
         kv_spec = pool = None
         if args.kv_cache != "none":
-            kv_spec = KVCacheSpec(block_tokens=args.kv_block,
-                                  mode=args.kv_cache)
+            kv_spec = KVCacheSpec(
+                block_tokens=args.kv_block, mode=args.kv_cache,
+                # async needs compile-time container offsets
+                exact_capacity=args.kv_paging != "async")
             pool = BlockPool(1 << 30)
         eng = Engine(params, cfg, max_seq_len=max_seq_len,
                      max_batch=args.batch, kv_spec=kv_spec, pool=pool,
+                     kv_paging=args.kv_paging,
                      mesh=mesh if not args.reduced else None)
 
         prompts = np.asarray(jax.random.randint(
@@ -126,6 +137,12 @@ def main():
                   f"compressed B pinned vs "
                   f"{st['peak_dense_logical_bytes']} dense B, "
                   f"{ps['dedup_hits']} dedup hits")
+            if args.kv_paging == "async":
+                pf = st["prefetch"]
+                print(f"async paging: {st['async']['windows']} windows, "
+                      f"prefetch {pf['hits']}/{pf['scheduled']} hits, "
+                      f"{pf['stalled']} stalled, "
+                      f"overlap {pf['overlap_fraction']:.3f}")
 
     toks = sum(len(s.tokens) for s in outs)
     print(f"{n_req} requests / {toks} tokens in {dt*1e3:.0f}ms "

@@ -3,10 +3,11 @@ from repro.serving.engine import (  # noqa: F401
     generate, generate_from_wire, generate_paged, open_params, prefill,
     serving_manifest)
 from repro.serving.kv_cache import (  # noqa: F401
-    KVBlock, KVCacheOverflowError, KVCacheSpec, PagedKVCache,
+    BlockPrefetcher, DeviceBlock, KVBlock, KVCacheOverflowError,
+    KVCacheSpec, LayerFramePlan, PagedKVCache, SSMBoundaryTracker,
     all_gather_block_wire, calibrate_cache, kv_cache_manifest,
     kv_spec_from_manifest, open_kv_channels)
 from repro.serving.scheduler import (  # noqa: F401
     Engine, GenerationRequest, RequestStatus)
 from repro.comm.blockpool import (  # noqa: F401
-    BlockPool, PoolExhausted)
+    ArenaExhausted, ArenaStale, BlockArena, BlockPool, PoolExhausted)

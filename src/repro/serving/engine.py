@@ -257,6 +257,48 @@ def _prefill_fn(cfg: ModelConfig):
     return jax.jit(lambda p, tokens, st: prefill(p, cfg, tokens, st))
 
 
+@functools.lru_cache(maxsize=8)
+def _prefill_from_fn(cfg: ModelConfig):
+    """Jitted prefill accepting a start position — the engine's
+    *segmented* prefill, which pauses at block boundaries so the SSM
+    boundary-state snapshots (``KVCacheSpec.ssm_rebase``) can be
+    captured between segments. Feeding a prompt in segments through
+    this is state-identical to one whole-prompt :func:`prefill` call
+    (same scan body, same positions)."""
+    return jax.jit(lambda p, tokens, st, start: prefill(
+        p, cfg, tokens, st, start_pos=start))
+
+
+@functools.lru_cache(maxsize=32)
+def _window_step(cfg: ModelConfig, window: int):
+    """Jitted greedy multi-token decode: ONE ``lax.scan`` over
+    ``window`` tokens — the async engine's admission-window step.
+
+    The greedy argmax feeds back *inside* the scan, so dispatching a
+    window costs one host->device transfer (the seed token + positions)
+    and one device->host transfer (the window's tokens), independent of
+    ``window`` — the zero-per-token-host-transfer contract the
+    transfer-count probe in the tests pins down.
+
+    Returns ``(generated tokens [B, window], states)``.
+    """
+
+    def run(params, tok0, pos0, states):
+        def body(carry, _):
+            tok, st, pos = carry
+            lg, st = decode_step(params, cfg, tok, st, pos)
+            nxt = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)[:, None]
+            return (nxt, st, pos + 1), nxt[:, 0]
+
+        (_, states, _), gen = jax.lax.scan(
+            body, (tok0, states, pos0), None, length=window)
+        # gen row t = the token generated by step t (greedy argmax);
+        # the carry already re-fed it, so the host only reads results.
+        return jnp.moveaxis(gen, 0, 1), states
+
+    return jax.jit(run)
+
+
 def generate_paged(params, cfg: ModelConfig, prompts: jnp.ndarray,
                    serve_cfg: ServeConfig, kv_cache=None) -> jnp.ndarray:
     """Greedy generation with a host-driven decode loop paging the

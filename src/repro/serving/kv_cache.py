@@ -54,6 +54,7 @@ instead of returning garbage.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -61,9 +62,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import container as qc
+from repro.comm.blockpool import ArenaStale, BlockArena
 from repro.comm.calibrate import (_layer_index, byte_planes,
                                   calibrate_kv_entries, kv_symbol_stream)
-from repro.comm.compressed import (_compress_codes, _quantize,
+from repro.comm.compressed import (WirePayload, _compress_codes,
+                                   _decompress_codes, _quantize,
                                    pad_to_multiple)
 from repro.configs.base import ModelConfig
 from repro.core import codec as _codec
@@ -104,6 +107,16 @@ class KVCacheSpec:
         max chunk size — zero escapes, unconditionally lossless.
         ``False`` uses the calibrated plan capacity + escape pool (the
         collectives' wire shape) instead.
+    ``ssm_rebase``
+        Segment-local SSM snapshot re-basing: recurrent layers snapshot
+        the state AT each block boundary (captured by the engine during
+        segmented prefill / at window boundaries) instead of the
+        cumulative live state, so a boundary-``t`` container depends
+        only on tokens ``< t`` and pooled dedup fires for shared prompt
+        *prefixes*, not only fully identical prompts. Lossless
+        (``"qlc"``) mode only — forced off under ``"e4m3"``, where the
+        live state must round-trip the quantizer to stay the serving
+        path's single source of truth.
     ``axis``
         Optional mesh axis cold blocks migrate over
         (:func:`all_gather_block_wire`).
@@ -115,6 +128,7 @@ class KVCacheSpec:
     codec_prefix: str = "kv"
     chunk_symbols: int = 256
     exact_capacity: bool = True
+    ssm_rebase: bool = True
     axis: Optional[str] = None
 
     def __post_init__(self):
@@ -123,6 +137,8 @@ class KVCacheSpec:
                              f"{self.block_tokens}")
         if self.mode not in ("qlc", "e4m3"):
             raise ValueError(f"unknown KV cache mode {self.mode!r}")
+        if self.mode != "qlc" and self.ssm_rebase:
+            object.__setattr__(self, "ssm_rebase", False)
 
     def layer_codec(self, i: int) -> str:
         return f"{self.codec_prefix}/layer{i}"
@@ -135,6 +151,7 @@ class KVCacheSpec:
                 "codec_prefix": self.codec_prefix,
                 "chunk_symbols": self.chunk_symbols,
                 "exact_capacity": self.exact_capacity,
+                "ssm_rebase": self.ssm_rebase,
                 "axis": self.axis}
 
     @classmethod
@@ -146,6 +163,7 @@ class KVCacheSpec:
                    codec_prefix=d.get("codec_prefix", "kv"),
                    chunk_symbols=int(d.get("chunk_symbols", 256)),
                    exact_capacity=bool(d.get("exact_capacity", True)),
+                   ssm_rebase=bool(d.get("ssm_rebase", True)),
                    axis=d.get("axis"))
 
 
@@ -170,6 +188,260 @@ class KVBlock:
     def dense_bytes(self) -> int:
         return int(sum(int(np.prod(s)) * np.dtype(d).itemsize
                        for s, d in zip(self.shapes, self.dtypes)))
+
+
+# --------------------------------------------------------------------------
+# Device-resident framing (async paging): static frame plans
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SectionPlan:
+    """Static geometry of ONE container section of a layer's block
+    under the calibrated plan config. Because every field is fixed at
+    plan time (``KVCacheSpec(exact_capacity=False)``), the container
+    header is a compile-time constant and the decode can slice the
+    section out of the arena words at a static offset — no host header
+    parse on the async path."""
+    name: str                         # registry/channel name
+    plane: Optional[Tuple[int, int]]  # (itemsize, byte) or None
+    offset: int                       # word offset within the block
+    header: qc.ContainerHeader
+    cfg: Any                          # CommConfig of the wire form
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerFramePlan:
+    """Fixed container geometry of one layer's block: the section table
+    the device encode/decode pair shares. ``total_words`` sizes the
+    arena slot."""
+    name: str
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    split: bool
+    sections: Tuple[SectionPlan, ...]
+    total_words: int
+
+
+@dataclasses.dataclass
+class DeviceBlock:
+    """A block framed on device: container words resident in HBM (and,
+    once written, in the :class:`~repro.comm.blockpool.BlockArena`),
+    never round-tripped through host numpy on the paging hot path."""
+    layer: str
+    start: int
+    tokens: int
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    plan: LayerFramePlan
+    words: jnp.ndarray              # u32 [plan.total_words], device
+    coded: bool
+    slot: Optional[int] = None      # arena slot once written
+    gen: int = 0
+
+    def host_block(self) -> KVBlock:
+        """Materialize the host :class:`KVBlock` (pool accounting /
+        digests). Call after ``copy_to_host_async`` had time to land —
+        ideally behind the next window's dispatch."""
+        return KVBlock(layer=self.layer, start=self.start,
+                       tokens=self.tokens,
+                       container=np.asarray(self.words),
+                       shapes=self.shapes, dtypes=self.dtypes,
+                       coded=self.coded)
+
+
+def _device_bytes(a) -> jnp.ndarray:
+    """Little-endian bytes of a device array, ``u8 [n_values,
+    itemsize]`` — the device twin of numpy's ``.view(np.uint8)``."""
+    a = jnp.asarray(a)
+    isz = np.dtype(a.dtype).itemsize
+    if isz == 1:
+        return a.astype(jnp.uint8).reshape(-1, 1)
+    return jax.lax.bitcast_convert_type(
+        a.reshape(-1), jnp.uint8).reshape(-1, isz)
+
+
+def device_byte_planes(arrays) -> Dict[Tuple[int, int], jnp.ndarray]:
+    """Device twin of :func:`repro.comm.calibrate.byte_planes` — same
+    plane order, same bytes, no host round trip."""
+    groups: Dict[int, list] = {}
+    for a in arrays:
+        b = _device_bytes(a)
+        groups.setdefault(b.shape[1], []).append(b)
+    out: Dict[Tuple[int, int], jnp.ndarray] = {}
+    for isz in sorted(groups):
+        mat = jnp.concatenate(groups[isz], axis=0)
+        for j in range(isz):
+            out[(isz, j)] = mat[:, j]
+    return out
+
+
+def device_symbol_stream(arrays) -> jnp.ndarray:
+    """Device twin of the lossless ``kv_symbol_stream``: the arrays'
+    raw bytes, concatenated in order."""
+    return jnp.concatenate([_device_bytes(a).reshape(-1) for a in arrays])
+
+
+def _device_unplane(planes, shapes, dtypes) -> List[jnp.ndarray]:
+    """Device twin of :meth:`PagedKVCache._unplane` (bitcast instead of
+    numpy view)."""
+    mats: Dict[int, jnp.ndarray] = {}
+    cursor: Dict[int, int] = {}
+    for isz in sorted({np.dtype(d).itemsize for d in dtypes}):
+        n = sum(int(np.prod(s)) for s, d in zip(shapes, dtypes)
+                if np.dtype(d).itemsize == isz)
+        mats[isz] = jnp.stack(
+            [planes[(isz, j)][:n] for j in range(isz)], axis=1)
+        cursor[isz] = 0
+    out = []
+    for s, d in zip(shapes, dtypes):
+        dt = np.dtype(d)
+        n = int(np.prod(s))
+        c = cursor[dt.itemsize]
+        rows = mats[dt.itemsize][c:c + n]
+        cursor[dt.itemsize] = c + n
+        out.append(_bytes_to_dtype(rows, dt).reshape(s))
+    return out
+
+
+def _bytes_to_dtype(rows: jnp.ndarray, dt: np.dtype) -> jnp.ndarray:
+    """u8 [n, itemsize] -> [n] values of ``dt`` (little-endian)."""
+    if dt.itemsize == 1:
+        return jax.lax.bitcast_convert_type(rows[:, 0], dt)
+    return jax.lax.bitcast_convert_type(rows, dt)
+
+
+class BlockPrefetcher:
+    """Schedule/consume tracking for async block decodes — overlap is
+    *measured* here, not assumed by construction.
+
+    ``schedule`` dispatches a block's device decode (through the DMA
+    prefetch kernel) and timestamps it; ``consume`` validates the
+    result at its use point: arena generation check first (a block
+    evicted between schedule and consume surfaces a typed
+    :class:`~repro.comm.blockpool.ArenaStale`, never stale data), then
+    the escape-pool ok flags (:class:`KVCacheOverflowError`), recording
+    whether the decode was already finished (hit) or had to be waited
+    on (stall). ``hidden_s / (hidden_s + stall_s)`` is the
+    trace-derived overlap fraction the ``kv_prefetch_overlap`` bench
+    row gates."""
+
+    def __init__(self, cache: "PagedKVCache"):
+        self.cache = cache
+        self.scheduled = 0
+        self.hits = 0
+        self.stalled = 0
+        self.misses = 0              # fell back to the host sync path
+        self.bytes_prefetched = 0
+        self.hidden_s = 0.0
+        self.stall_s = 0.0
+
+    def schedule(self, block: DeviceBlock) -> "PrefetchHandle":
+        """Dispatch the block's decode from its (arena-resident) words
+        and start the container's host copy (deferred digest/pool
+        accounting)."""
+        words = block.words
+        if self.cache.arena is not None and block.slot is not None:
+            words = self.cache.arena.read(block.slot, block.gen,
+                                          n_words=block.words.shape[0])
+        arrays, oks = self.cache.decode_block_device(block.plan, words)
+        try:                       # start the D2H early; lands behind
+            block.words.copy_to_host_async()   # the next window's work
+        except AttributeError:
+            pass
+        self.scheduled += 1
+        self.bytes_prefetched += int(block.words.shape[0]) * 4
+        return PrefetchHandle(block=block, arrays=arrays, oks=oks,
+                              t_sched=time.perf_counter())
+
+    def consume(self, handle: "PrefetchHandle") -> List[jnp.ndarray]:
+        block = handle.block
+        if self.cache.arena is not None and block.slot is not None:
+            # Typed staleness before touching data: raises ArenaStale.
+            self.cache.arena.check(block.slot, block.gen)
+        t0 = time.perf_counter()
+        ready = all(a.is_ready() for a in handle.arrays)
+        if ready:
+            self.hits += 1
+        else:
+            self.stalled += 1
+        for a in handle.arrays:
+            a.block_until_ready()
+        t1 = time.perf_counter()
+        self.stall_s += t1 - t0
+        self.hidden_s += max(0.0, t0 - handle.t_sched)
+        for ok in handle.oks:
+            if not bool(ok):
+                raise KVCacheOverflowError(
+                    f"block {block.layer}@{block.start}: escape pool "
+                    "overflow")
+        handle.consumed = True
+        return handle.arrays
+
+    def miss(self):
+        self.misses += 1
+
+    def overlap_fraction(self) -> float:
+        tot = self.hidden_s + self.stall_s
+        return (self.hidden_s / tot) if tot > 0 else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "scheduled": self.scheduled,
+            "hits": self.hits,
+            "misses": self.misses,
+            "stalled": self.stalled,
+            "bytes_prefetched": self.bytes_prefetched,
+            "hidden_ms": 1e3 * self.hidden_s,
+            "stall_ms": 1e3 * self.stall_s,
+            "overlap_fraction": self.overlap_fraction(),
+        }
+
+
+@dataclasses.dataclass
+class PrefetchHandle:
+    """One scheduled async block decode (schedule -> consume)."""
+    block: DeviceBlock
+    arrays: List[jnp.ndarray]
+    oks: List[jnp.ndarray]
+    t_sched: float
+    consumed: bool = False
+
+
+class SSMBoundaryTracker:
+    """Per-slot block-boundary snapshots for segment-local SSM state
+    re-basing (``KVCacheSpec.ssm_rebase``).
+
+    The engine records each recurrent layer's state arrays whenever a
+    slot's absorbed-token count crosses a ``block_tokens`` boundary
+    (during segmented prefill and between decode windows). Eviction of
+    block ``[t0, t1)`` then encodes the **t1 snapshot** — whose bytes
+    depend only on tokens ``< t1`` — instead of the cumulative live
+    state, so two requests sharing a prompt prefix produce bit-identical
+    snapshot containers and dedup in the pool (the ROADMAP small-gap
+    item). The live state is never rewritten from a rebased snapshot:
+    it has absorbed tokens past the boundary that the snapshot, by
+    design, excludes."""
+
+    def __init__(self):
+        #: slot -> boundary t -> {layer key: tuple of state arrays}
+        self._by_slot: Dict[int, Dict[int, Dict[str, tuple]]] = {}
+
+    def record(self, slot: int, t: int, layer_arrays: Dict[str, tuple]):
+        self._by_slot.setdefault(slot, {})[t] = layer_arrays
+
+    def take(self, slot: int, t: int) -> Optional[Dict[str, tuple]]:
+        """Pop the boundary-``t`` snapshot (and drop any older ones —
+        a block's eviction retires every earlier boundary)."""
+        snaps = self._by_slot.get(slot)
+        if snaps is None:
+            return None
+        out = snaps.pop(t, None)
+        for older in [b for b in snaps if b < t]:
+            del snaps[older]
+        return out
+
+    def drop(self, slot: int):
+        self._by_slot.pop(slot, None)
 
 
 def codec_wins(entry) -> bool:
@@ -228,8 +500,10 @@ class PagedKVCache:
     """
 
     def __init__(self, spec: KVCacheSpec, cfg: ModelConfig, registry,
-                 channels: Optional[Dict[str, Any]] = None, mesh=None):
+                 channels: Optional[Dict[str, Any]] = None, mesh=None,
+                 arena: Optional[BlockArena] = None):
         self.spec = spec
+        self.arena = arena
         self.cfg = cfg
         self.registry = registry
         self.kinds = cfg.layer_kinds()
@@ -252,6 +526,8 @@ class PagedKVCache:
         self.overflow_sections = 0             # pool overflows (-> raw)
         self.raw_sections = 0                  # calibration said raw wins
         self._split_cache: Dict[str, bool] = {}
+        self._plans: Dict[Tuple, LayerFramePlan] = {}
+        self.prefetcher = BlockPrefetcher(self)
 
     # ---- paging ----------------------------------------------------------
 
@@ -421,7 +697,8 @@ class PagedKVCache:
         self.overflow_sections += 1
         return self._raw_wire(ch, codes)
 
-    def decode_block_arrays(self, block: KVBlock) -> List[np.ndarray]:
+    def decode_block_arrays(self, block: KVBlock,
+                            _prefetch: bool = False) -> List[np.ndarray]:
         """Container stream -> the block's arrays, exactly as encoded
         (byte planes in ``"qlc"`` mode, dequantized e4m3 values in
         ``"e4m3"``). Raises :class:`KVCacheOverflowError` when a coded
@@ -430,7 +707,7 @@ class PagedKVCache:
         if self.spec.mode == "e4m3":
             vals, ok, _ = qc.decode_values(
                 block.container, self.registry,
-                use_kernels=self.spec.use_kernels)
+                use_kernels=self.spec.use_kernels, prefetch=_prefetch)
             if not bool(ok):
                 raise KVCacheOverflowError(
                     f"block {block.layer}@{block.start}: escape pool "
@@ -447,7 +724,7 @@ class PagedKVCache:
         if not self._plane_split(base):
             syms, ok, _ = qc.decode_codes(
                 block.container, self.registry,
-                use_kernels=self.spec.use_kernels)
+                use_kernels=self.spec.use_kernels, prefetch=_prefetch)
             if not bool(ok):
                 raise KVCacheOverflowError(
                     f"block {block.layer}@{block.start}: escape pool "
@@ -467,7 +744,7 @@ class PagedKVCache:
         # hot path.
         sections = qc.decode_codes_stream(
             block.container, self.registry,
-            use_kernels=self.spec.use_kernels)
+            use_kernels=self.spec.use_kernels, prefetch=_prefetch)
         order = self._plane_order(block.dtypes)
         assert len(sections) == len(order), (len(sections), len(order))
         planes: Dict[Tuple[int, int], np.ndarray] = {}
@@ -504,6 +781,188 @@ class PagedKVCache:
             out.append(rows.reshape(-1).view(dt).reshape(s))
         return out
 
+    def decode_block_arrays_async(self, block: KVBlock) -> List[np.ndarray]:
+        """:meth:`decode_block_arrays` with every coded section routed
+        through the DMA double-buffered prefetch kernel
+        (:func:`repro.kernels.ops.decode_block_async`) — bit-identical
+        output, different word movement."""
+        return self.decode_block_arrays(block, _prefetch=True)
+
+    # ---- device-resident framing (async paging) --------------------------
+
+    def frame_plan(self, name: str, shapes, dtypes) -> LayerFramePlan:
+        """The static container geometry of one layer's block — cached
+        per (layer, shapes, dtypes).
+
+        Only legal under ``KVCacheSpec(mode="qlc",
+        exact_capacity=False)``: plan capacity + escape pool is what
+        makes every section's header (and so the whole frame) a
+        compile-time constant the jitted encode/decode can share with
+        the sync host path bit-for-bit."""
+        shapes = tuple(tuple(int(d) for d in s) for s in shapes)
+        dtypes = tuple(str(np.dtype(d)) for d in dtypes)
+        key = (name, shapes, dtypes)
+        cached = self._plans.get(key)
+        if cached is not None:
+            return cached
+        if self.spec.mode != "qlc" or self.spec.exact_capacity:
+            raise ValueError(
+                "device framing needs KVCacheSpec(mode='qlc', "
+                "exact_capacity=False): fixed plan geometry is what "
+                "makes the container header a compile-time constant")
+        split = self._plane_split(name)
+        sections: List[SectionPlan] = []
+        offset = 0
+        if split:
+            per_isz: Dict[int, int] = {}
+            for s, d in zip(shapes, dtypes):
+                isz = np.dtype(d).itemsize
+                per_isz[isz] = per_isz.get(isz, 0) + int(np.prod(s))
+            for isz, j in self._plane_order(dtypes):
+                sp = self._section_plan(f"{name}/w{isz}b{j}", (isz, j),
+                                        per_isz[isz], offset)
+                sections.append(sp)
+                offset += sp.header.total_words
+        else:
+            n = sum(int(np.prod(s)) * np.dtype(d).itemsize
+                    for s, d in zip(shapes, dtypes))
+            sp = self._section_plan(name, None, n, 0)
+            sections.append(sp)
+            offset = sp.header.total_words
+        plan = LayerFramePlan(name=name, shapes=shapes, dtypes=dtypes,
+                              split=split, sections=tuple(sections),
+                              total_words=offset)
+        self._plans[key] = plan
+        return plan
+
+    def _section_plan(self, pname: str, plane, n_valid: int,
+                      offset: int) -> SectionPlan:
+        """Plan one section: same coded/raw verdict and wire config the
+        sync :meth:`_encode_section` reaches under
+        ``exact_capacity=False``, evaluated on symbol *count* alone."""
+        ch = self.channels[pname]
+        entry = self.registry[pname]
+        k = ch.cfg.chunk_symbols
+        n_chunks = max(1, -(-n_valid // k))
+        coded = codec_wins(entry)
+        if coded:
+            coded_words = (n_chunks * ch.cfg.capacity_words
+                           + ch.cfg.pool_slots(n_chunks) * (k // 4))
+            coded = coded_words < n_chunks * (k // 4)
+        cfg = ch.cfg if coded else dataclasses.replace(ch.cfg,
+                                                       enabled=False)
+        h = qc.ContainerHeader(
+            scheme_id=entry.scheme_id, coded=coded, chunk_symbols=k,
+            capacity_words=ch.cfg.capacity_words if coded else k // 4,
+            n_chunks=n_chunks,
+            pool_slots=ch.cfg.pool_slots(n_chunks) if coded else 0,
+            n_valid=n_valid, scale_dtype=None, n_scales=0,
+            prefix_bits=entry.tables.prefix_bits)
+        return SectionPlan(name=pname, plane=plane, offset=offset,
+                           header=h, cfg=cfg)
+
+    def encode_block_device(self, name: str, layer: str,
+                            arrays: Sequence[jnp.ndarray], *, start: int,
+                            tokens: int) -> Optional[DeviceBlock]:
+        """Frame one block entirely on device: byte planes by bitcast,
+        QLC encode per section, :func:`container.frame_block_device`
+        assembly — the container words never visit host numpy. Returns
+        ``None`` when a coded section's escape pool overflowed under
+        the plan capacity (the caller falls back to the host sync
+        path, which re-wires the block raw and counts the overflow)."""
+        shapes = tuple(tuple(int(d) for d in a.shape) for a in arrays)
+        dtypes = tuple(str(np.dtype(a.dtype)) for a in arrays)
+        plan = self.frame_plan(name, shapes, dtypes)
+        planes = device_byte_planes(arrays) if plan.split else None
+        bufs: List[jnp.ndarray] = []
+        pool_counts: List[jnp.ndarray] = []
+        pool_slots: List[int] = []
+        raw_in_block = 0
+        any_coded = False
+        for sp in plan.sections:
+            stream = (planes[sp.plane] if plan.split
+                      else device_symbol_stream(arrays))
+            codes, _ = pad_to_multiple(stream, sp.cfg.chunk_symbols)
+            ch = self.channels[sp.name]
+            payload = _compress_codes(codes, ch.tables, sp.cfg)
+            if sp.header.coded:
+                any_coded = True
+                pool_counts.append(
+                    jnp.asarray(payload.pool_count, jnp.int32)
+                    .reshape(-1)[:1])
+                pool_slots.append(sp.header.pool_slots)
+            else:
+                raw_in_block += 1
+                payload = payload._replace(
+                    pool=jnp.zeros(payload.pool.shape[:-2]
+                                   + (0, payload.pool.shape[-1]),
+                                   jnp.uint32))
+            bufs.append(qc.frame_block_device(
+                payload, None, scheme_id=sp.header.scheme_id, cfg=sp.cfg,
+                n_valid=sp.header.n_valid,
+                prefix_bits=sp.header.prefix_bits))
+        words = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs)
+        if pool_counts:
+            # The one host sync of the encode: a handful of int32
+            # escape counts (not the container body).
+            counts = np.asarray(jnp.concatenate(pool_counts))
+            if any(int(c) > s for c, s in zip(counts, pool_slots)):
+                return None
+        self.raw_sections += raw_in_block
+        return DeviceBlock(layer=layer, start=start, tokens=tokens,
+                           shapes=shapes, dtypes=dtypes, plan=plan,
+                           words=words, coded=any_coded)
+
+    def decode_block_device(self, plan: LayerFramePlan,
+                            words: jnp.ndarray
+                            ) -> Tuple[List[jnp.ndarray],
+                                       List[jnp.ndarray]]:
+        """Decode a device-framed block straight from its (arena) words
+        at the plan's static offsets — no host header parse. Coded
+        sections decode through the DMA prefetch kernel. Returns the
+        block's arrays plus per-coded-section device ok flags (checked
+        at :meth:`BlockPrefetcher.consume`)."""
+        streams: Dict[Any, jnp.ndarray] = {}
+        oks: List[jnp.ndarray] = []
+        for sp in plan.sections:
+            h = sp.header
+            body = words[sp.offset + qc.HEADER_WORDS:
+                         sp.offset + h.total_words]
+            pos = 0
+            w = body[:h.words_len].reshape(h.n_chunks, h.capacity_words)
+            pos += h.words_len
+            fl = jax.lax.bitcast_convert_type(
+                body[pos:pos + h.flags_len], jnp.uint8
+            ).reshape(-1)[:h.n_chunks]
+            pos += h.flags_len
+            pool = body[pos:pos + h.pool_len].reshape(
+                h.pool_slots, h.chunk_symbols // 4)
+            pos += h.pool_len
+            pc = body[pos:pos + 1].astype(jnp.int32)
+            payload = WirePayload(words=w, flags=fl, pool=pool,
+                                  pool_count=pc)
+            ch = self.channels[sp.name]
+            if h.coded:
+                codes, ok = _decompress_codes(
+                    payload, ch.tables, sp.cfg,
+                    decode_fn=qc._prefetch_decode_fn())
+                oks.append(ok)
+            else:
+                codes, _ = _decompress_codes(payload, ch.tables, sp.cfg)
+            streams[sp.plane] = codes.reshape(-1)[:h.n_valid]
+        if plan.split:
+            return _device_unplane(streams, plan.shapes,
+                                   plan.dtypes), oks
+        raw = streams[None]
+        out, pos = [], 0
+        for s, d in zip(plan.shapes, plan.dtypes):
+            dt = np.dtype(d)
+            nb = int(np.prod(s)) * dt.itemsize
+            rows = raw[pos:pos + nb].reshape(-1, dt.itemsize)
+            pos += nb
+            out.append(_bytes_to_dtype(rows, dt).reshape(s))
+        return out, oks
+
     # ---- accounting / migration -----------------------------------------
 
     def stats(self) -> Dict[str, float]:
@@ -524,6 +983,7 @@ class PagedKVCache:
             "compressed_bytes_per_token": wire / toks,
             "dense_bytes_per_token": dense / toks,
             "compressed_vs_dense_ratio": (wire / dense) if dense else 0.0,
+            "prefetch": self.prefetcher.stats(),
         }
 
     def block_wire(self, block: KVBlock) -> jnp.ndarray:

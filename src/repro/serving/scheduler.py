@@ -51,13 +51,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.blockpool import BlockPool, PoolExhausted
+from repro.comm.blockpool import (ArenaExhausted, BlockArena, BlockPool,
+                                  PoolExhausted)
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn
 from repro.models import init_decode_states, ssm
-from repro.serving.engine import _paged_step, _prefill_fn
+from repro.serving.engine import (_paged_step, _prefill_fn,
+                                  _prefill_from_fn, _window_step)
 from repro.serving.kv_cache import (KVCacheSpec, PagedKVCache,
-                                    calibrate_cache)
+                                    SSMBoundaryTracker, calibrate_cache)
 
 _rid_counter = itertools.count()
 
@@ -140,14 +142,35 @@ class Engine:
     admitted request's prefill states when it lacks the
     ``kv/layer{i}`` entries. ``fairness_cap`` (0 < cap <= 1) bounds any
     one tenant to ``ceil(cap * max_batch)`` concurrent slots.
+
+    ``kv_paging="async"`` (requires ``KVCacheSpec(mode="qlc",
+    exact_capacity=False)``) moves paging device-resident: evicted
+    block containers live in a :class:`~repro.comm.blockpool.BlockArena`
+    of ``arena_slots`` slots, block decodes are DMA-prefetched at
+    window boundaries, and decode runs as one jitted scan per
+    admission window (constant host transfers per window). Token
+    output is identical to ``"sync"``; both paging modes share one
+    pool (device-framed containers are byte-identical to host ones).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_seq_len: int,
                  max_batch: int = 4, kv_spec: Optional[KVCacheSpec] = None,
                  registry=None, pool: Optional[BlockPool] = None,
-                 fairness_cap: Optional[float] = None, mesh=None):
+                 fairness_cap: Optional[float] = None, mesh=None,
+                 kv_paging: str = "sync", arena_slots: int = 256):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if kv_paging not in ("sync", "async"):
+            raise ValueError(f"kv_paging must be 'sync' or 'async', got "
+                             f"{kv_paging!r}")
+        if kv_paging == "async":
+            if kv_spec is None or kv_spec.mode != "qlc" \
+                    or kv_spec.exact_capacity:
+                raise ValueError(
+                    "kv_paging='async' needs KVCacheSpec(mode='qlc', "
+                    "exact_capacity=False): the fixed plan geometry is "
+                    "what makes block containers compile-time-constant "
+                    "frames the device encode/decode can share")
         self.params = params
         self.cfg = cfg
         self.max_seq_len = int(max_seq_len)
@@ -172,6 +195,19 @@ class Engine:
                                           self.max_seq_len)
         self._step_fn = _paged_step(cfg)
         self._prefill = _prefill_fn(cfg)
+        self._prefill_from = _prefill_from_fn(cfg)
+        self.kv_paging = kv_paging
+        self._arena_slots = int(arena_slots)
+        #: boundary-state snapshots for SSM re-basing (qlc only)
+        self._snaps = SSMBoundaryTracker()
+        self._rebase = (kv_spec is not None and kv_spec.ssm_rebase
+                        and any(k != "attention" for k in self._kinds))
+        #: prefetch handles scheduled at the last block boundary,
+        #: consumed after the NEXT window's dispatch: (rid, handle)
+        self._pending: List[tuple] = []
+        self._windows = 0
+        self._window_h2d = 0        # host->device uploads per async run
+        self._window_d2h = 0        # device->host reads per async run
         #: deterministic scheduling trace: (step, event, request_id)
         self.events: List[tuple] = []
         self._step_idx = 0
@@ -210,8 +246,11 @@ class Engine:
 
     def step(self) -> int:
         """Admit what fits, run ONE batched decode step over the padded
-        active set, page completed blocks. Returns the number of
-        requests still in flight (waiting + running)."""
+        active set (one admission *window* of steps under
+        ``kv_paging="async"``), page completed blocks. Returns the
+        number of requests still in flight (waiting + running)."""
+        if self.kv_paging == "async":
+            return self._step_async()
         self._step_idx += 1
         self._admit()
         active = [(b, rid) for b, rid in enumerate(self._slots)
@@ -233,6 +272,81 @@ class Engine:
             for b, rid in active:
                 seq = self._seqs[rid]
                 seq.toks.append(int(np.argmax(lg_np[b, 0])))
+                self._note_boundary(seq)
+                try:
+                    self._page(seq)
+                except PoolExhausted as e:
+                    self._reject(seq, e)
+                    continue
+                if len(seq.toks) >= seq.req.max_new_tokens:
+                    self._finish(seq)
+        return sum(1 for s in self._seqs.values()
+                   if s.state in ("waiting", "running"))
+
+    def _step_async(self) -> int:
+        """One *admission window* of decode steps as a single jitted
+        scan (``engine._window_step``): the host uploads one seed token
+        + position per slot, the greedy feedback stays on device, and
+        one array of generated tokens comes back — host transfers per
+        window are constant (2 up, 1 down), independent of the window
+        length. The window ends exactly at the nearest block boundary
+        or budget across active slots, so evictions (and SSM boundary
+        snapshots) only ever happen between windows; the prefetch
+        decodes scheduled there are consumed after the NEXT window's
+        result lands, which is what hides them behind model compute."""
+        self._step_idx += 1
+        self._admit()
+        active = [(b, rid) for b, rid in enumerate(self._slots)
+                  if rid is not None]
+        if active:
+            bt = self.kv_spec.block_tokens
+            hot = self.kv_spec.hot_blocks
+            window = None
+            for _, rid in active:
+                seq = self._seqs[rid]
+                to_finish = seq.req.max_new_tokens - len(seq.toks)
+                to_boundary = (seq.evicted + (1 + hot) * bt
+                               - seq.absorbed)
+                w = min(to_finish, to_boundary)
+                if self._rebase:
+                    # also stop at recording boundaries (multiples of
+                    # bt) so SSM boundary snapshots are never skipped
+                    w = min(w, bt - seq.absorbed % bt)
+                window = w if window is None else min(window, w)
+            window = max(1, window)
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            pos = np.zeros((self.max_batch, 1), np.int32)
+            for b, rid in active:
+                seq = self._seqs[rid]
+                tokens[b, 0] = seq.toks[-1]
+                pos[b, 0] = seq.prompt_len + len(seq.toks) - 1
+            t0 = time.perf_counter()
+            tok_dev = jnp.asarray(tokens)
+            pos_dev = jnp.asarray(pos)
+            self._window_h2d += 2
+            wf = _window_step(self.cfg, window)
+            with jax.transfer_guard("disallow"):
+                # The probe: any per-token host callback inside the
+                # scan would raise here.
+                gen_dev, self._states = wf(self.params, tok_dev,
+                                           pos_dev, self._states)
+            gen = np.asarray(gen_dev)       # ONE d2h for the window
+            self._window_d2h += 1
+            self._windows += 1
+            # Last boundary's prefetch decodes ran behind this window
+            # on the in-order device stream — wait on them now (timed:
+            # a stall here is the cost prefetch failed to hide) ...
+            ready = self._consume_pending()
+            self._decode_s += time.perf_counter() - t0
+            self._decode_tokens += len(active) * window
+            # ... and apply them untimed, like the sync path's _page.
+            self._apply_pending(ready)
+            for b, rid in active:
+                seq = self._seqs[rid]
+                if seq.state != "running":      # rejected at consume
+                    continue
+                seq.toks.extend(int(t) for t in gen[b, :window])
+                self._note_boundary(seq)
                 try:
                     self._page(seq)
                 except PoolExhausted as e:
@@ -295,9 +409,26 @@ class Engine:
     def _start(self, seq: _Seq):
         b = self._slots.index(None)
         t0 = time.perf_counter()
-        prompts = jnp.asarray(seq.req.prompt[None, :])
         row = init_decode_states(self.cfg, 1, self.max_seq_len)
-        logits, row = self._prefill(self.params, prompts, row)
+        if self._rebase:
+            # Segmented prefill: pause at every block boundary to
+            # capture the recurrent layers' boundary states (the
+            # re-basing snapshots). State-identical to one whole-prompt
+            # prefill — same scan body, same positions.
+            bt = self.kv_spec.block_tokens
+            prompt = seq.req.prompt
+            logits, pos = None, 0
+            while pos < seq.prompt_len:
+                end = min(seq.prompt_len, (pos // bt + 1) * bt)
+                seg = jnp.asarray(prompt[None, pos:end])
+                logits, row = self._prefill_from(
+                    self.params, seg, row, jnp.int32(pos))
+                pos = end
+                if pos % bt == 0:
+                    self._record_boundary_states(seq, row, pos)
+        else:
+            prompts = jnp.asarray(seq.req.prompt[None, :])
+            logits, row = self._prefill(self.params, prompts, row)
         first = int(np.argmax(np.asarray(logits)[0]))
         self._prefill_s += time.perf_counter() - t0
         self._prefill_tokens += seq.prompt_len
@@ -332,10 +463,31 @@ class Engine:
             return
         bt = self.kv_spec.block_tokens
         hot = self.kv_spec.hot_blocks
+        evict = (self._evict_slot_async if self.kv_paging == "async"
+                 else self._evict_slot)
         while seq.evicted + (1 + hot) * bt <= seq.absorbed:
             t0 = seq.evicted
-            self._evict_slot(seq, t0, t0 + bt)
+            evict(seq, t0, t0 + bt)
             seq.evicted = t0 + bt
+
+    def _record_boundary_states(self, seq: _Seq, row, t: int):
+        """Snapshot every recurrent layer's state at boundary ``t``
+        (the state after absorbing exactly ``t`` tokens) for later
+        re-based eviction."""
+        snap = {f"l{i}": tuple(ssm.state_snapshot(row[f"l{i}"]))
+                for i, kind in enumerate(self._kinds)
+                if kind != "attention"}
+        if snap:
+            self._snaps.record(seq.rid, t, snap)
+
+    def _note_boundary(self, seq: _Seq):
+        """Capture boundary states the moment a running slot's absorbed
+        count lands on a block boundary (no-op unless re-basing)."""
+        if not self._rebase or seq.slot is None:
+            return
+        if seq.absorbed > 0 and seq.absorbed % self.kv_spec.block_tokens == 0:
+            self._record_boundary_states(
+                seq, _slot_view(self._states, seq.slot), seq.absorbed)
 
     def _evict_slot(self, seq: _Seq, t0: int, t1: int):
         """Encode one completed block of ``seq``'s slot row into the
@@ -343,6 +495,7 @@ class Engine:
         (deduped) bytes are what the model attends over."""
         row = _slot_view(self._states, seq.slot)
         new_row = dict(row)
+        bsnap = (self._snaps.take(seq.rid, t1) if self._rebase else None)
         for i, kind in enumerate(self._kinds):
             key = f"l{i}"
             name = self.kv_spec.layer_codec(i)
@@ -356,6 +509,21 @@ class Engine:
                     self.pool.get(digest))
                 new_row[key] = attn.kv_block_restore(
                     st, t0, t1, jnp.asarray(k2), jnp.asarray(v2))
+            elif bsnap is not None and key in bsnap:
+                # Re-based snapshot: the state AT boundary t1 — depends
+                # only on tokens < t1, so shared prompt prefixes pool
+                # to identical digests. The live state (which has
+                # absorbed tokens past t1) is left untouched; the
+                # decode still runs so an overflowing container
+                # surfaces here, not on a later reader.
+                block = self._codec.encode_block_arrays(
+                    name, key, bsnap[key], start=t1, tokens=t1 - t0)
+                digest = self._pool_put(seq, block)
+                self._codec.decode_block_arrays(self.pool.get(digest))
+                old = seq.snap_digests.get(key)
+                if old is not None:
+                    self._pool_release(seq, old)
+                seq.snap_digests[key] = digest
             else:
                 arrays = ssm.state_snapshot(st)
                 block = self._codec.encode_block_arrays(
@@ -371,6 +539,133 @@ class Engine:
                     self._pool_release(seq, old)
                 seq.snap_digests[key] = digest
         self._states = _slot_write(self._states, seq.slot, new_row)
+
+    # ---- async paging (device-resident arena + prefetch) -----------------
+
+    def _ensure_arena(self, slot_words: int) -> BlockArena:
+        if self._codec.arena is None:
+            arena = BlockArena(self._arena_slots, slot_words)
+            self._codec.arena = arena
+            if self.pool is not None and self.pool.arena is None:
+                self.pool.arena = arena
+        return self._codec.arena
+
+    def _evict_slot_async(self, seq: _Seq, t0: int, t1: int):
+        """Async twin of :meth:`_evict_slot`: frame every layer's block
+        on device, park the words in the arena, and SCHEDULE the
+        prefetch decode — consumed after the next window lands
+        (:meth:`_consume_pending`), so the decode runs behind model
+        compute instead of on the block-boundary critical path. Escape
+        overflow under the plan capacity falls back to the sync host
+        path for the whole boundary (counted as a prefetch miss)."""
+        row = _slot_view(self._states, seq.slot)
+        bsnap = (self._snaps.take(seq.rid, t1) if self._rebase else None)
+        devs = []
+        for i, kind in enumerate(self._kinds):
+            key = f"l{i}"
+            name = self.kv_spec.layer_codec(i)
+            st = row[key]
+            if kind == "attention":
+                arrays = attn.kv_block_slice(st, t0, t1)
+                start = t0
+            elif bsnap is not None and key in bsnap:
+                arrays = bsnap[key]
+                start = t1
+            else:
+                arrays = ssm.state_snapshot(st)
+                start = t1
+            dev = self._codec.encode_block_device(
+                name, key, arrays, start=start, tokens=t1 - t0)
+            if dev is None:
+                # plan-capacity escape overflow: redo this boundary on
+                # the host sync path (re-wires the section raw there)
+                self._codec.prefetcher.miss()
+                if bsnap is not None:
+                    self._snaps.record(seq.rid, t1, bsnap)  # un-take
+                self._evict_slot(seq, t0, t1)
+                return
+            devs.append(dev)
+        arena = self._ensure_arena(max(d.plan.total_words for d in devs))
+        for dev in devs:
+            try:
+                slot, gen = arena.alloc()
+                arena.write(slot, dev.words)
+                dev.slot, dev.gen = slot, gen
+            except ArenaExhausted:
+                dev.slot = None     # decode straight from the HBM words
+            self._pending.append(
+                (seq.rid, self._codec.prefetcher.schedule(dev)))
+
+    def _consume_pending(self):
+        """Wait on the prefetch decodes scheduled at the last boundary:
+        arena staleness check, then block until the decoded arrays are
+        ready (a no-op when the prefetch overlapped — the stall time is
+        what ``BlockPrefetcher`` meters). This is the only paging cost
+        on the decode critical path, so it runs INSIDE the timed decode
+        region; the restore + pool accounting (:meth:`_apply_pending`)
+        is bookkeeping the sync path also does untimed in ``_page``."""
+        pending, self._pending = self._pending, []
+        ready = []
+        for rid, handle in pending:
+            seq = self._seqs[rid]
+            if seq.state != "running":
+                continue            # rejected/finished since scheduled
+            ready.append((seq, handle,
+                          self._codec.prefetcher.consume(handle)))
+        return ready
+
+    def _apply_pending(self, ready):
+        """Apply consumed prefetches: attention-window restore from the
+        decoded (pooled) bytes plus deferred pool/digest accounting.
+        Deferring the attention restore by one window is exact: the
+        ``"qlc"`` round trip is bit-identical, and the window never
+        touches cache rows behind the eviction horizon."""
+        for seq, handle, arrays in ready:
+            if seq.state != "running":
+                continue
+            try:
+                self._apply_consumed(seq, handle, arrays)
+            except PoolExhausted as e:
+                self._reject(seq, e)
+
+    def _apply_consumed(self, seq: _Seq, handle, arrays):
+        dev = handle.block
+        block = dev.host_block()    # D2H started at schedule time
+        digest = self._pool_put(seq, block)
+        if dev.slot is not None:
+            if not self.pool.attach_arena_slot(digest, dev.slot, dev.gen):
+                # dedup hit: the pooled entry already owns an arena
+                # copy of these bytes — recycle ours
+                self._codec.arena.free(dev.slot)
+        i = int(dev.layer[1:])
+        if self._kinds[i] == "attention":
+            full = dict(_slot_view(self._states, seq.slot))
+            k2, v2 = arrays
+            full[dev.layer] = attn.kv_block_restore(
+                full[dev.layer], dev.start, dev.start + dev.tokens,
+                k2, v2)
+            self._states = _slot_write(self._states, seq.slot, full)
+        else:
+            # SSM: never restore — the live state has advanced past the
+            # snapshot boundary. Supersede the previous snapshot.
+            old = seq.snap_digests.get(dev.layer)
+            if old is not None:
+                self._pool_release(seq, old)
+            seq.snap_digests[dev.layer] = digest
+
+    def _flush_pending(self, seq: _Seq):
+        """Consume (or drop, if no longer running) every pending
+        prefetch of ``seq`` right now — called before finish/reject so
+        deferred pool accounting can't outlive the request."""
+        keep = []
+        for rid, handle in self._pending:
+            if rid != seq.rid:
+                keep.append((rid, handle))
+                continue
+            if seq.state == "running":
+                arrays = self._codec.prefetcher.consume(handle)
+                self._apply_consumed(seq, handle, arrays)
+        self._pending = keep
 
     def _pool_put(self, seq: _Seq, block) -> str:
         digest = self.pool.put(block)
@@ -394,22 +689,32 @@ class Engine:
     # ---- completion / rejection -----------------------------------------
 
     def _finish(self, seq: _Seq):
+        if self._pending:
+            try:
+                self._flush_pending(seq)
+            except PoolExhausted as e:
+                self._reject(seq, e)
+                return
         seq.state = "finished"
         if seq.slot is not None:
             self._slots[seq.slot] = None
             seq.slot = None
         if self.pool is not None:
             self._release_all(seq)      # zero-ref blocks stay cached
+        self._snaps.drop(seq.rid)
         self._log("finish", seq.rid)
 
     def _reject(self, seq: _Seq, err: Exception, event: str = "reject"):
         seq.state = "rejected"
         seq.error = f"{type(err).__name__}: {err}"
+        if self._pending:
+            self._flush_pending(seq)    # drops (state != running)
         if seq.slot is not None:
             self._slots[seq.slot] = None
             seq.slot = None
         if self.pool is not None:
             self._release_all(seq)
+        self._snaps.drop(seq.rid)
         self._log(event, seq.rid)
 
     def _log(self, event: str, rid: str):
@@ -444,6 +749,20 @@ class Engine:
                 "overflow_sections": self._codec.overflow_sections,
                 "raw_sections": self._codec.raw_sections,
             }
+        if self.kv_paging == "async":
+            out["async"] = {
+                "windows": self._windows,
+                "window_h2d": self._window_h2d,
+                "window_d2h": self._window_d2h,
+                "h2d_per_window": (self._window_h2d
+                                   / max(1, self._windows)),
+                "d2h_per_window": (self._window_d2h
+                                   / max(1, self._windows)),
+            }
+            if self._codec is not None:
+                out["prefetch"] = self._codec.prefetcher.stats()
+                if self._codec.arena is not None:
+                    out["arena"] = self._codec.arena.stats()
         if self.pool is not None:
             out["pool"] = self.pool.stats()
         return out

@@ -38,8 +38,10 @@ EXPECTED = {
     "histogram_of_quantized", "histogram_of_tree", "kv_symbol_stream",
     # weight wire
     "GroupWireCodec", "compress_groups", "wire_shape_structs",
-    # digest-addressed block pool (PR 6: serving engine substrate)
+    # digest-addressed block pool (PR 6: serving engine substrate;
+    # PR 7: the device-resident arena under async paging)
     "BlockPool", "PoolExhausted", "container_digest",
+    "ArenaExhausted", "ArenaStale", "BlockArena",
     # references
     "ref_all_gather", "ref_psum", "ref_reduce_scatter",
 }
@@ -66,6 +68,9 @@ SERVING_EXPECTED = {
     "KVBlock", "KVCacheOverflowError", "KVCacheSpec", "PagedKVCache",
     "all_gather_block_wire", "calibrate_cache", "kv_cache_manifest",
     "kv_spec_from_manifest", "open_kv_channels",
+    # device-resident async paging (PR 7)
+    "ArenaExhausted", "ArenaStale", "BlockArena", "BlockPrefetcher",
+    "DeviceBlock", "LayerFramePlan", "SSMBoundaryTracker",
 }
 
 #: Legacy batch-function serving API: thin Engine wrappers, warn on use.
