@@ -69,6 +69,19 @@ METRIC_GATES = {
         # margin (symbols are the paper's native regime there).
         "e4m3_vs_dense_ratio": ("<=", 0.75),
     },
+    "moe_dispatch": {
+        # the compressed expert-dispatch wire's reason to exist: QLC
+        # coding on the routed-token a2a buffers must beat the dense
+        # e4m3 wire (1 B/value + block-32 scales) on BOTH directions
+        # (the row reports the worse of dispatch/combine) ...
+        "compressed_vs_dense_e4m3_ratio": ("<=", 0.95),
+        # ... and at the measured decode throughput the distance-
+        # charged a2a ring (decode overlapping the ppermute hops,
+        # planner.modeled_a2a_ring_time) must never be slower than
+        # one-shot — straight from the cost model, not from
+        # choose_a2a_transport (tautology) — see moe_dispatch.py.
+        "ring_vs_oneshot_modeled_ratio": ("<=", 1.0),
+    },
     "kv_concurrent_capacity": {
         # the serving engine's reason to exist: at fixed pool bytes, a
         # shared-prompt request mix must fit at least 1.5x the

@@ -1,0 +1,156 @@
+"""Benchmark: compressed MoE expert dispatch (the ``shardmap_a2a`` wire).
+
+Builds a tiny deepseek-moe-style layer, routes a real token batch
+through the gspmd dispatch math (``moe.dispatch_traffic``) to get the
+actual expert-wire buffers, calibrates the ``moe/dispatch`` /
+``moe/combine`` codecs from them — the same pipeline
+``comm.calibrate.calibrate_moe_entries`` runs on a training batch —
+and reports:
+
+* ``compressed_vs_dense_e4m3_ratio`` — compressed expert wire bytes per
+  a2a row vs the dense-e4m3 wire (1 B/value + its block-32 bf16
+  scales, which a dense fp8 wire must also carry). Gated <= 0.95: the
+  QLC coding must beat a plain fp8 wire.
+* ``ring_vs_oneshot_modeled_ratio`` — the distance-charged a2a ring
+  model (``modeled_a2a_ring_time``, decode overlapping the ppermute
+  hops) vs one-shot, at the MEASURED decode throughput. Gated <= 1.0:
+  in the decode-bound regime the probe measures, the overlap must win
+  — straight from the cost model, NOT ``choose_a2a_transport`` (which
+  only reports ring when ring wins and would make the gate
+  tautological).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.comm import measure_decode_Bps
+from repro.comm.calibrate import empirical_plan, kv_symbol_stream
+from repro.comm.compressed import CommConfig
+from repro.comm.planner import (HOP_CHUNK_CANDIDATES, AlphaBetaModel,
+                                choose_a2a_transport,
+                                modeled_a2a_ring_time,
+                                modeled_oneshot_time, payload_wire_bytes,
+                                plan_for_tables)
+from repro.configs import get_config, reduced
+from repro.core import adapt
+from repro.models import moe
+
+CHUNK_SYMBOLS = 1024
+
+#: The modeled mesh: 2 dp groups x 4-way expert parallelism (the
+#: fake-device topology the parity test runs on).
+_MESH_SHAPE = {"data": 2, "model": 4}
+
+
+class _Mesh:
+    axis_names = tuple(_MESH_SHAPE)
+    shape = _MESH_SHAPE
+
+
+def _calibrate(stream: np.ndarray):
+    """e4m3 symbol stream -> (tables, empirically-sized plan) — the
+    same sizing ``calibrate_moe_entries`` applies (quarter-bit drift
+    margin: routed-token chunk sums plateau at the all-token mode)."""
+    counts = np.maximum(
+        np.bincount(stream, minlength=256).astype(np.float64), 1e-6)
+    tables = adapt.calibrate_tables(counts)
+    plan = plan_for_tables(tables, counts, chunk_symbols=CHUNK_SYMBOLS,
+                           target_escape_prob=1e-4)
+    plan = empirical_plan(tables, stream, plan,
+                          chunk_symbols=CHUNK_SYMBOLS,
+                          target_escape_prob=1e-4,
+                          max_pool_slots_per_1k=64,
+                          drift_margin_bits=0.25)
+    return tables, plan, counts
+
+
+def run(n: int = 1 << 19):
+    import dataclasses
+
+    from repro.models import init_params, next_token_loss
+
+    cfg = reduced(get_config("deepseek-moe-16b"))
+    # Token count scaled from the element budget, dp*model- and
+    # seq-divisible. Rows must be production-shaped (tens of KB+): the
+    # escape pool is a fixed row-level cost, so a toy row would measure
+    # pool overhead instead of coding efficiency.
+    seq = 512
+    n_tokens = max(8192, min(16384, n // 8)) // seq * seq
+    # a REAL routed batch: forward the reduced model with traffic
+    # capture on (the calibrate_moe_entries flow) and take the first
+    # MoE layer's dispatch/combine buffers — iid noise would overstate
+    # the symbol entropy vs actual activations.
+    eager_cfg = dataclasses.replace(cfg, use_scan=False, remat="none")
+    params = init_params(eager_cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1),
+                             (n_tokens // seq, seq), 0, cfg.vocab_size)
+    captured: list = []
+    with moe.capture_moe_traffic(captured):
+        next_token_loss(params, eager_cfg, tok, tok)
+    layer_params, x = captured[0]
+
+    buf, out_e = moe.dispatch_traffic(layer_params, x, eager_cfg)
+    geo = moe.shardmap_a2a_geometry(cfg, n_tokens, _Mesh())
+    d = geo["axis_size"]
+    row_values = geo["row_values"]
+    row_value_bytes = 4.0 * row_values
+
+    rows = []
+    ratios = {}
+    for name, arr in (("dispatch", buf), ("combine", out_e)):
+        stream = kv_symbol_stream([arr], mode="e4m3")
+        tables, plan, counts = _calibrate(stream)
+        wire = payload_wire_bytes(row_values, plan.chunk_symbols,
+                                  plan.capacity_words,
+                                  plan.pool_slots_per_1k)
+        # dense e4m3 wire: 1 B/value + block-32 bf16 scales (2 B / 32)
+        dense = row_values * (1.0 + 2.0 / 32.0)
+        ratios[name] = (wire / dense, tables, plan, counts, stream)
+        rows.append((name, wire, dense, plan))
+
+    # measured decode throughput on the dispatch codec's payloads — the
+    # beta_decode the a2a transport choice actually sees
+    tables, plan, counts = (ratios["dispatch"][1], ratios["dispatch"][2],
+                            ratios["dispatch"][3])
+    cfg_wire = CommConfig.from_plan(plan)
+    probe_symbols = min(len(ratios["dispatch"][4]), 1 << 16)
+    decode_Bps, secs = measure_decode_Bps(tables, cfg_wire, probe_symbols,
+                                          counts=counts)
+    model = AlphaBetaModel(decode_Bps=decode_Bps)
+
+    disp_wire = rows[0][1]
+    one = modeled_oneshot_time(model, disp_wire, row_value_bytes, d)
+    # ring straight from the cost model (see module docstring)
+    ring = min(modeled_a2a_ring_time(model, disp_wire, row_value_bytes,
+                                     d, h) for h in HOP_CHUNK_CANDIDATES)
+    chosen = choose_a2a_transport(disp_wire, row_value_bytes, d,
+                                  model=model)
+
+    return [{
+        "name": "moe_dispatch",
+        "us_per_call": secs * 1e6,
+        "n_tokens": n_tokens,
+        "axis_size": d,
+        "tokens_per_rank": geo["ng"],
+        "row_value_bytes": int(row_value_bytes),
+        "measured_decode_GBps": round(decode_Bps / 1e9, 3),
+        # bytes/token/collective each rank puts on the expert wire
+        "dispatch_wire_bytes_per_token": round(
+            d * disp_wire / geo["ng"], 1),
+        "combine_wire_bytes_per_token": round(
+            d * rows[1][1] / geo["ng"], 1),
+        "dispatch_bits_per_symbol": round(
+            rows[0][3].expected_bits_per_symbol, 3),
+        "combine_bits_per_symbol": round(
+            rows[1][3].expected_bits_per_symbol, 3),
+        # CI gates
+        "compressed_vs_dense_e4m3_ratio": round(
+            max(ratios["dispatch"][0], ratios["combine"][0]), 4),
+        "ring_vs_oneshot_modeled_ratio": round(ring / one, 4),
+        "modeled_oneshot_us": round(one * 1e6, 1),
+        "modeled_ring_us": round(ring * 1e6, 1),
+        "chosen_transport": chosen.kind,
+        "hop_chunks": chosen.hop_chunks,
+    }]

@@ -18,9 +18,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import calibrate_for_gradients
-from repro.comm.calibrate import histogram_of_tree
+from repro.comm.calibrate import calibrate_moe_entries, histogram_of_tree
+from repro.comm.channel import Channel, ChannelSpec
 from repro.configs import get_config, reduced
 from repro.core import CodecRegistry
+from repro.models import moe as moe_mod
 from repro.data import DataConfig, SyntheticDataset
 from repro.launch.mesh import make_test_mesh
 from repro.models import init_params
@@ -41,12 +43,18 @@ def build_cfg(preset: str):
             base, name="gemma-100m", num_layers=8, d_model=768,
             num_heads=8, num_kv_heads=1, head_dim=96, d_ff=3072,
             vocab_size=32768, remat="none")
+    if preset == "moe":
+        # expert-parallel MoE over the compressed a2a expert wire
+        cfg = reduced(get_config("deepseek-moe-16b"))
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl="shardmap_a2a"))
     raise ValueError(preset)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--preset", default="tiny",
+                    choices=["tiny", "100m", "moe"])
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
@@ -71,11 +79,46 @@ def main():
 
     with shd.use_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
+        batch0 = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
 
-        baseline = jax.jit(make_baseline_step(cfg, opt_cfg, train_cfg))
+        # MoE expert wire: calibrate the dispatch/combine codecs from
+        # the actual routed-token traffic of batch0 and bind one
+        # Channel per direction on the expert ("model") axis — the
+        # step's forward routes every expert all_to_all through them.
+        moe_channels = None
+        if (cfg.moe is not None and cfg.moe.impl == "shardmap_a2a"
+                and "model" in mesh.axis_names):
+            moe_registry = CodecRegistry()
+            calibrate_moe_entries(moe_registry, cfg, params, batch0)
+            dm = int(mesh.shape["model"])
+            geo = moe_mod.shardmap_a2a_geometry(
+                cfg, args.batch * args.seq_len, mesh)
+            moe_channels = {}
+            for name in (moe_mod.MOE_DISPATCH, moe_mod.MOE_COMBINE):
+                ch = Channel(ChannelSpec(codec=name,
+                                         transport=args.transport,
+                                         axis="model", axis_size=dm),
+                             registry=moe_registry)
+                moe_channels[name] = ch
+                entry = moe_registry[name]
+                wire = ch.modeled_wire_bytes(geo["row_values"])
+                print(f"moe codec {name}: scheme-id {entry.scheme_id}, "
+                      f"{entry.plan.expected_bits_per_symbol:.2f} "
+                      f"bits/sym, "
+                      f"{dm * wire / geo['ng']:.0f} wire B/token "
+                      f"per collective")
+
+        if (args.comm == "qlc" and moe_channels
+                and not hasattr(jax, "shard_map")):
+            print("note: this jax lacks jax.shard_map — compressed "
+                  "grad collectives can't wrap the shardmap_a2a MoE "
+                  "forward; running the baseline grad wire with the "
+                  "compressed MoE expert wire")
+            args.comm = "baseline"
+
+        baseline = jax.jit(make_baseline_step(cfg, opt_cfg, train_cfg,
+                                              moe_channels=moe_channels))
         if args.comm == "qlc":
-            batch0 = {k: jnp.asarray(v)
-                      for k, v in data.batch_at(0).items()}
             # Per-tensor-type registry (paper §7): one codec for the
             # gradient reduce-scatter, one for the updated-parameter
             # all-gather — the two collectives see very different
@@ -106,7 +149,7 @@ def main():
                 print(f"grad RS channel over {ax!r}: {ch}")
             step = jax.jit(make_compressed_step(
                 cfg, opt_cfg, train_cfg, mesh, registry,
-                transport=args.transport))
+                transport=args.transport, moe_channels=moe_channels))
             opt_state = init_compressed_opt_state(
                 cfg, mesh, train_cfg, registry, opt_cfg)
             fallback = baseline_adapter(baseline, cfg, mesh, train_cfg,

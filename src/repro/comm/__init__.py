@@ -32,7 +32,9 @@ from repro.comm.planner import (  # noqa: F401
     RING,
     AlphaBetaModel,
     TransportConfig,
+    choose_a2a_transport,
     choose_transport,
+    modeled_a2a_ring_time,
     modeled_oneshot_time,
     modeled_ring_time,
     resolve_transport,
@@ -58,6 +60,7 @@ from repro.comm.calibrate import (  # noqa: F401
     calibrate_for_gradients,
     calibrate_for_tensor,
     calibrate_kv_entries,
+    calibrate_moe_entries,
     empirical_plan,
     histogram_of_quantized,
     histogram_of_tree,

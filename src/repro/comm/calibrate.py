@@ -8,6 +8,7 @@ for production; here numpy suffices.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -79,7 +80,8 @@ def calibrate_for_tensor(x: jnp.ndarray, scheme: Optional[QLCScheme] = None,
 def empirical_plan(tables: CodecTables, syms: np.ndarray, plan: CommPlan,
                    *, chunk_symbols: int = 1024,
                    target_escape_prob: float = 1e-6,
-                   max_pool_slots_per_1k: Optional[int] = None) -> CommPlan:
+                   max_pool_slots_per_1k: Optional[int] = None,
+                   drift_margin_bits: float = 0.5) -> CommPlan:
     """Re-size a plan's chunk slot from the *measured* per-chunk
     bit-count distribution of a representative symbol stream.
 
@@ -95,6 +97,15 @@ def empirical_plan(tables: CodecTables, syms: np.ndarray, plan: CommPlan,
     a pool bigger than its payload. The default (no cap) keeps the
     collectives' guarantee that the pool covers the measured escape
     rate.
+
+    ``drift_margin_bits`` is the per-symbol headroom added above the
+    measured 99.9th percentile. The 0.5-bit default suits gradient
+    streams, whose chunk sums have heavy tails that keep moving over
+    training. Streams whose chunk-sum distribution *plateaus* — e.g.
+    MoE dispatch buffers, where capacity padding makes the distribution
+    bimodal and the all-token mode sits at the e4m3 code's bounded
+    expected length, so p99.9 ~= max — can pass a smaller margin and
+    let the escape pool absorb residual drift.
     """
     syms = np.asarray(syms).reshape(-1)
     lens = tables.enc_len[syms].astype(np.int64)
@@ -103,9 +114,9 @@ def empirical_plan(tables: CodecTables, syms: np.ndarray, plan: CommPlan,
         return plan
     sums = lens[:n_chunks * chunk_symbols].reshape(
         n_chunks, chunk_symbols).sum(axis=1)
-    # 99.9th percentile + half-bit/symbol drift margin
+    # 99.9th percentile + per-symbol drift margin
     q = float(np.quantile(sums, 0.999))
-    bits = min(8.0 * chunk_symbols, q + 0.5 * chunk_symbols)
+    bits = min(8.0 * chunk_symbols, q + drift_margin_bits * chunk_symbols)
     cap_words = max(1, int(np.ceil(bits / 32)))
     emp_escape = float((sums > cap_words * 32).mean())
     pool = max(8, int(np.ceil(emp_escape * 1024 * 8)) + 8)
@@ -191,6 +202,85 @@ def byte_planes(arrays) -> Dict[Tuple[int, int], np.ndarray]:
         for j in range(isz):
             out[(isz, j)] = np.ascontiguousarray(mat[:, j])
     return out
+
+
+def calibrate_moe_entries(registry, model_cfg, params, batch, *,
+                          chunk_symbols: int = 1024,
+                          target_escape_prob: float = 1e-4,
+                          dispatch_name: str = "moe/dispatch",
+                          combine_name: str = "moe/combine",
+                          allow_search: bool = False) -> Dict[str, "object"]:
+    """Calibrate the MoE expert-dispatch wire codecs into ``registry``.
+
+    Runs ONE eager forward pass over ``batch`` with traffic capture on
+    (``moe.capture_moe_traffic``), recomputes each captured MoE layer's
+    dispatch/combine buffers via ``moe.dispatch_traffic`` — the actual
+    routed-token values entering/leaving the expert ``all_to_all``,
+    capacity drops and padding zeros included — and registers one codec
+    per direction from the pooled e4m3-symbol histograms:
+
+    * ``dispatch_name`` — pre-FFN token activations (a2a out),
+    * ``combine_name`` — post-FFN expert outputs (a2a back).
+
+    The two distributions differ (the FFN reshapes the value histogram),
+    which is why they get separate LUTs + slot plans (paper §7's
+    per-tensor-type rule applied per collective). Names already in
+    ``registry`` are kept (idempotent). Returns ``{name: CodecEntry}``.
+
+    The capture forward runs with ``use_scan=False``/``remat="none"``
+    (scan traces its body even when called eagerly) and
+    ``moe.impl="gspmd"`` (no mesh needed) — routing is impl-invariant,
+    so the histograms apply to the ``shardmap_a2a`` wire unchanged.
+    """
+    from repro.models import moe, next_token_loss  # local import (cycle)
+
+    todo = [n for n in (dispatch_name, combine_name) if n not in registry]
+    if not todo:
+        return {dispatch_name: registry[dispatch_name],
+                combine_name: registry[combine_name]}
+
+    eager_cfg = dataclasses.replace(
+        model_cfg, use_scan=False, remat="none",
+        moe=dataclasses.replace(model_cfg.moe, impl="gspmd"))
+    captured: list = []
+    with moe.capture_moe_traffic(captured):
+        next_token_loss(params, eager_cfg, batch["tokens"],
+                        batch["labels"], batch.get("prefix_emb"))
+    if not captured:
+        raise ValueError(
+            "no MoE traffic captured — is model_cfg.moe set (and the "
+            "forward eager)?")
+
+    streams = {dispatch_name: [], combine_name: []}
+    for layer_params, x in captured:
+        buf, out_e = moe.dispatch_traffic(layer_params, x, eager_cfg)
+        streams[dispatch_name].append(buf)
+        streams[combine_name].append(out_e)
+
+    entries = {}
+    for name in (dispatch_name, combine_name):
+        if name not in todo:
+            entries[name] = registry[name]
+            continue
+        syms = kv_symbol_stream(streams[name], mode="e4m3")
+        counts = np.maximum(
+            np.bincount(syms, minlength=256).astype(np.float64), 1e-6)
+        tables = adapt.calibrate_tables(counts, allow_search=allow_search)
+        plan = plan_for_tables(tables, counts, chunk_symbols=chunk_symbols,
+                               target_escape_prob=target_escape_prob)
+        # Padding zeros make routed-token buffers bimodal; size the
+        # slot from measured chunk sums. The chunk-sum distribution
+        # plateaus at the all-token mode (p99.9 ~= max), so a quarter-
+        # bit drift margin suffices — the capped escape pool and the
+        # a2a wire's ok flag cover the residual tail.
+        plan = empirical_plan(tables, syms, plan,
+                              chunk_symbols=chunk_symbols,
+                              target_escape_prob=target_escape_prob,
+                              max_pool_slots_per_1k=64,
+                              drift_margin_bits=0.25)
+        entries[name] = registry.register_tables(name, tables, plan,
+                                                 counts=counts)
+    return entries
 
 
 def _layer_index(key) -> int:

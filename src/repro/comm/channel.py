@@ -59,8 +59,8 @@ import numpy as np
 
 from repro.comm import compressed as comp
 from repro.comm.planner import (AlphaBetaModel, ONESHOT, TransportConfig,
-                                choose_transport, clamp_hop_chunks,
-                                payload_wire_bytes)
+                                choose_a2a_transport, choose_transport,
+                                clamp_hop_chunks, payload_wire_bytes)
 
 #: sentinel transport policy: resolve per call from static payload
 #: geometry (registry cache first, then the planner's alpha-beta model).
@@ -249,8 +249,8 @@ class Channel:
         return self.axis
 
     def resolved_transport(self, n_values: int, *, is_reduce: bool = False,
-                           axis_size: Optional[int] = None
-                           ) -> TransportConfig:
+                           axis_size: Optional[int] = None,
+                           is_a2a: bool = False) -> TransportConfig:
         """Concrete transport for one collective call.
 
         ``n_values`` is this shard's f32 value count entering the
@@ -262,6 +262,11 @@ class Channel:
         dispatches (ring-parity op sequence) on both paths. Ring hop
         chunking is clamped to tile the per-shard chunk count so hop
         padding can never change the payload's static segment geometry.
+
+        ``is_a2a=True`` (``n_values`` = one destination ROW) resolves
+        through the planner's distance-charged a2a model instead —
+        all-gather-tuned cache entries don't transfer to the a2a's
+        ppermute schedule, so the cache is skipped.
         """
         d = int(axis_size if axis_size is not None
                 else (self.axis_size or 1))
@@ -270,17 +275,21 @@ class Channel:
         t = self._transport
         if t == AUTO:
             t = None
-            if self.registry is not None and self.entry is not None \
-                    and self.axis is not None:
+            if not is_a2a and self.registry is not None \
+                    and self.entry is not None and self.axis is not None:
                 t = self.registry.cached_transport(
                     self.entry.scheme_id, self.axis, 4 * unit,
                     is_reduce=is_reduce)
             if t is None:
                 wire = payload_wire_bytes(unit, k, self.cfg.capacity_words,
                                           self.cfg.pool_slots_per_1k)
-                t = choose_transport(
-                    wire, 4.0 * unit, d, model=self.model,
-                    n_oneshot_decode_dispatches=d if is_reduce else 1)
+                if is_a2a:
+                    t = choose_a2a_transport(wire, 4.0 * unit, d,
+                                             model=self.model)
+                else:
+                    t = choose_transport(
+                        wire, 4.0 * unit, d, model=self.model,
+                        n_oneshot_decode_dispatches=d if is_reduce else 1)
         if t.kind == "ring":
             n_chunks = max(1, -(-unit // k))
             t = dataclasses.replace(
@@ -385,7 +394,7 @@ class Channel:
                 f"bound to axis_size={self.axis_size}")
         row = x.reshape(d, -1)
         n = row.shape[1]
-        t = self.resolved_transport(n, axis_size=d)
+        t = self.resolved_transport(n, axis_size=d, is_a2a=True)
         pad = (-n) % (t.hop_chunks * self.cfg.chunk_symbols)
         if pad:
             row = jnp.pad(row, ((0, 0), (0, pad)))

@@ -182,9 +182,11 @@ class AlphaBetaModel:
     bandwidth``, which models the all-gather's neighbor-forwarding ring
     exactly. The reduce-scatter/all-to-all schedules use distance-s
     ppermutes; on a mesh axis that maps to one physical 1-D ring those
-    cost up to ``s`` link traversals, which this first-order model does
-    not charge — per-axis measured constants (ROADMAP: autotuned hop
-    size, multi-host ring) are the planned refinement.
+    cost up to ``s`` link traversals — :func:`modeled_a2a_ring_time`
+    charges them (the a2a transport choice goes through
+    :func:`choose_a2a_transport`); the RS first-order model does not,
+    and per-axis measured constants (ROADMAP: multi-host ring) remain
+    the planned refinement there.
     """
     alpha_s: float = 1e-6
     wire_Bps: float = hw.ICI_LINK_BW
@@ -282,6 +284,66 @@ def choose_transport(shard_wire_bytes: float, shard_value_bytes: float,
     for h in hop_chunk_candidates:
         t = modeled_ring_time(model, shard_wire_bytes, shard_value_bytes,
                               axis_size, h)
+        if t < best[2]:
+            best = ("ring", h, t)
+    return TransportConfig(kind=best[0], hop_chunks=best[1])
+
+
+def modeled_a2a_ring_time(model: AlphaBetaModel, row_wire_bytes: float,
+                          row_value_bytes: float, axis_size: int,
+                          hop_chunks: int = 1) -> float:
+    """Ring all_to_all: hop *s* moves row ``(me+s) % d`` with a
+    distance-``s`` ppermute while decode of the previous unit overlaps.
+
+    Unlike the all-gather ring (neighbor forwarding, one link per hop),
+    the a2a's distance-``s`` ppermute serializes through up to ``s``
+    link traversals on a 1-D ring — charged here as ``s *
+    row_wire_bytes / wire_Bps`` per hop. That makes the a2a ring move
+    ~``d/2``x more total link traffic than one-shot, so it only wins in
+    decode-bound regimes (slow ``decode_Bps`` relative to the wire) —
+    exactly what the measured-constant auto-selection decides.
+
+    ``row_*_bytes`` describe ONE destination row of this rank's send
+    buffer (payload / ``axis_size``); the own-row decode (hop 0, no
+    wire) overlaps the first transfer.
+    """
+    d = axis_size
+    if d <= 1:
+        return model.decode_time(row_value_bytes)
+    h = hop_chunks
+    unit_dec = model.decode_time(row_value_bytes / h)
+
+    def unit_wire(s: int) -> float:
+        return model.alpha_s + s * (row_wire_bytes / h) / model.wire_Bps
+
+    units = [s for s in range(1, d) for _ in range(h)]
+    t = unit_wire(units[0])
+    for s in units[1:]:
+        t += max(unit_wire(s), unit_dec)
+    return t + unit_dec
+
+
+def choose_a2a_transport(row_wire_bytes: float, row_value_bytes: float,
+                         axis_size: int,
+                         model: Optional[AlphaBetaModel] = None,
+                         hop_chunk_candidates: Sequence[int]
+                         = HOP_CHUNK_CANDIDATES) -> TransportConfig:
+    """Transport choice for ``Channel.all_to_all`` (expert dispatch):
+    one-shot ``lax.all_to_all`` vs the distance-charged ppermute ring of
+    :func:`modeled_a2a_ring_time`. ``row_*_bytes`` describe one
+    destination row; one-shot moves ``d-1`` remote rows over the wire
+    then decodes all ``d``, which :func:`modeled_oneshot_time` already
+    prices when fed per-row sizes.
+    """
+    model = model or AlphaBetaModel()
+    if axis_size <= 1:
+        return ONESHOT
+    best = ("oneshot", 1,
+            modeled_oneshot_time(model, row_wire_bytes, row_value_bytes,
+                                 axis_size))
+    for h in hop_chunk_candidates:
+        t = modeled_a2a_ring_time(model, row_wire_bytes, row_value_bytes,
+                                  axis_size, h)
         if t < best[2]:
             best = ("ring", h, t)
     return TransportConfig(kind=best[0], hop_chunks=best[1])

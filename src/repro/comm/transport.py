@@ -285,6 +285,15 @@ def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
     """All-to-all of ``rows [d, n]`` (row j -> peer j); returns
     ``(vals f32 [d, n], ok)`` where output row j holds peer j's
     dequantized row for this device.
+
+    This is the MoE expert-dispatch wire (``moe.impl="shardmap_a2a"``
+    routes its dispatch/combine buffers through ``Channel.all_to_all``
+    → here). The ring schedule's hop *s* is a distance-``s`` ppermute
+    whose decode overlaps hop *s+1*'s transfer; it is bit-identical to
+    one-shot (the own row stays quantized either way), and its modeled
+    cost — including the ``s`` link traversals a distance-``s``
+    ppermute serializes through — is ``planner.modeled_a2a_ring_time``,
+    which drives the ``"auto"`` selection.
     """
     d = rows.shape[0]
     if t.kind == "oneshot":

@@ -13,7 +13,7 @@ class MoEConfig:
     num_shared_experts: int = 0   # deepseek-moe fine-grained shared experts
     capacity_factor: float = 1.25
     router_noise: float = 0.0
-    impl: str = "gspmd"           # "gspmd" | "grouped_local"
+    impl: str = "gspmd"           # "gspmd" | "grouped_local" | "shardmap_a2a"
     dispatch_groups: int = 32     # grouped_local: dispatch groups
     #   (= dp shard count so token->expert-buffer scatters stay
     #   shard-local instead of lowering to giant all-reduces)

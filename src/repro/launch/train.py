@@ -14,13 +14,15 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import logging
 
 import jax
 import jax.numpy as jnp
 
 from repro.comm import calibrate_for_gradients
-from repro.comm.calibrate import histogram_of_tree
+from repro.comm.calibrate import calibrate_moe_entries, histogram_of_tree
+from repro.comm.channel import Channel, ChannelSpec
 from repro.configs import get_config, reduced as make_reduced
 from repro.core import CodecRegistry
 from repro.data import DataConfig, SyntheticDataset
@@ -49,6 +51,19 @@ def main():
                     help="compressed-collective transport: 'auto' lets "
                          "the planner's alpha-beta model pick one-shot "
                          "vs ring (+ hop chunking) per collective/axis")
+    ap.add_argument("--moe-wire", default="auto",
+                    choices=["auto", "qlc", "raw"],
+                    help="expert all_to_all wire for shardmap_a2a MoE "
+                         "configs: 'qlc' calibrates moe/dispatch + "
+                         "moe/combine codecs from the first batch's "
+                         "routed traffic and sends QLC containers over "
+                         "the expert axis; 'raw' sends uncompressed "
+                         "activations; 'auto' follows --comm")
+    ap.add_argument("--moe-transport", default="auto",
+                    choices=["auto", "oneshot", "ring"],
+                    help="a2a transport for the compressed MoE wire "
+                         "('auto' = planner's distance-charged ring "
+                         "vs one-shot choice per payload)")
     ap.add_argument("--autotune", action="store_true",
                     help="measure this host's decode throughput and "
                          "autotune the per-axis transport "
@@ -72,6 +87,11 @@ def main():
         mesh = make_test_mesh()
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
+    if args.moe_wire == "qlc" and cfg.moe is not None:
+        # an explicit compressed expert wire implies real expert-
+        # parallel dispatch (the other impls never touch the wire)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl="shardmap_a2a"))
 
     seq = args.seq_len or (128 if args.reduced else 4096)
     batch = args.global_batch or (8 if args.reduced else 256)
@@ -90,9 +110,34 @@ def main():
 
     with shd.use_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
-        baseline = jax.jit(make_baseline_step(cfg, opt_cfg, train_cfg))
+        b0 = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+        # Expert-parallel MoE wire: one calibrated codec + Channel per
+        # a2a direction, bound on the expert ("model") axis.
+        moe_channels = None
+        moe_wire = args.moe_wire
+        if moe_wire == "auto":
+            moe_wire = "qlc" if args.comm == "qlc" else "raw"
+        if (moe_wire == "qlc" and cfg.moe is not None
+                and cfg.moe.impl == "shardmap_a2a"
+                and "model" in mesh.axis_names):
+            moe_registry = CodecRegistry()
+            calibrate_moe_entries(moe_registry, cfg, params, b0)
+            dm = int(mesh.shape["model"])
+            moe_channels = {}
+            for name in ("moe/dispatch", "moe/combine"):
+                moe_channels[name] = Channel(
+                    ChannelSpec(codec=name, transport=args.moe_transport,
+                                axis="model", axis_size=dm),
+                    registry=moe_registry)
+                logging.info(
+                    "moe codec %s: scheme-id %s, %.2f bits/sym", name,
+                    moe_registry[name].scheme_id,
+                    moe_registry[name].plan.expected_bits_per_symbol)
+
+        baseline = jax.jit(make_baseline_step(
+            cfg, opt_cfg, train_cfg, moe_channels=moe_channels))
         if args.comm == "qlc":
-            b0 = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
             # per-tensor-type registry: the gradient reduce-scatter and
             # the parameter all-gather get separately calibrated codecs
             tables, plan = calibrate_for_gradients(cfg, params, b0)
@@ -104,7 +149,7 @@ def main():
                 _autotune_transports(registry, cfg, mesh, train_cfg)
             step = jax.jit(make_compressed_step(
                 cfg, opt_cfg, train_cfg, mesh, registry,
-                transport=args.transport))
+                transport=args.transport, moe_channels=moe_channels))
             opt_state = init_compressed_opt_state(
                 cfg, mesh, train_cfg, registry, opt_cfg)
         else:

@@ -182,6 +182,33 @@ def _manual_axes() -> frozenset:
         return frozenset()
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes=None):
+    """shard_map across jax versions (no replication checking).
+
+    New jax exposes ``jax.shard_map(axis_names=..., check_vma=...)``;
+    older releases have ``jax.experimental.shard_map.shard_map`` with
+    the complementary ``auto=`` set and ``check_rep=``. Replication
+    checking must stay off either way: the compressed collectives can
+    run Pallas kernels, which have no replication rule.
+
+    ``manual_axes=None`` means fully manual over every mesh axis — the
+    only mode that works on BOTH jax lines (on older jax the partially
+    -auto form trips the XLA SPMD partitioner; see the train step's
+    stage-1 fallback).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": False}
+        if manual_axes is not None:
+            kw["axis_names"] = set(manual_axes)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {"check_rep": False}
+    if manual_axes is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 def logical_constraint(x: jax.Array, logical_axes: Sequence[Optional[str]]
                        ) -> jax.Array:
     """with_sharding_constraint by logical axis names (no-op off-mesh)."""

@@ -28,6 +28,7 @@ via the baseline FSDP path (see DESIGN.md §8).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Tuple
 
@@ -121,26 +122,8 @@ def step_channels(codec, comm_cfg: CommConfig = None, *,
     return rs_ch, ag_ch, rs_cfg
 
 
-def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes=None):
-    """shard_map across jax versions (no replication checking).
-
-    New jax exposes ``jax.shard_map(axis_names=..., check_vma=...)``;
-    older releases have ``jax.experimental.shard_map.shard_map`` with
-    the complementary ``auto=`` set and ``check_rep=``. Replication
-    checking must stay off either way: the compressed collectives can
-    run Pallas kernels, which have no replication rule.
-    """
-    if hasattr(jax, "shard_map"):
-        kw = {"check_vma": False}
-        if manual_axes is not None:
-            kw["axis_names"] = set(manual_axes)
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, **kw)
-    from jax.experimental.shard_map import shard_map as _sm
-    kw = {"check_rep": False}
-    if manual_axes is not None:
-        kw["auto"] = frozenset(mesh.axis_names) - frozenset(manual_axes)
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+# Version-compat shard_map now lives with the other mesh helpers.
+_shard_map = shd.shard_map_compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,11 +147,20 @@ def batch_pspec(mesh: Mesh, cfg: TrainConfig) -> P:
     return P(axes if axes else None)
 
 
-def _loss_fn(model_cfg: ModelConfig):
+def _loss_fn(model_cfg: ModelConfig, moe_channels=None):
+    """Loss closure; ``moe_channels`` (a ``{name: Channel}`` map over
+    ``moe.MOE_DISPATCH``/``moe.MOE_COMBINE``) puts the expert-parallel
+    ``shardmap_a2a`` dispatch on the compressed wire — the binding is
+    consulted when the loss is TRACED, so it wraps the call here."""
+    from repro.models import moe as moe_mod
+
     def f(params, batch):
-        return next_token_loss(
-            params, model_cfg, batch["tokens"], batch["labels"],
-            batch.get("prefix_emb"))
+        ctx = (moe_mod.bind_moe_channels(moe_channels)
+               if moe_channels else contextlib.nullcontext())
+        with ctx:
+            return next_token_loss(
+                params, model_cfg, batch["tokens"], batch["labels"],
+                batch.get("prefix_emb"))
     return f
 
 
@@ -198,8 +190,12 @@ def _microbatched_grads(loss_fn, params, batch, n_micro: int):
 # --------------------------------------------------------------------------
 
 def make_baseline_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
-                       train_cfg: TrainConfig) -> Callable:
-    loss_fn = _loss_fn(model_cfg)
+                       train_cfg: TrainConfig, *,
+                       moe_channels=None) -> Callable:
+    """``moe_channels`` compresses the MoE expert all_to_all (forward
+    activations) even in baseline comm mode — the gradient wire stays
+    dense while ``moe.impl="shardmap_a2a"`` moves QLC containers."""
+    loss_fn = _loss_fn(model_cfg, moe_channels=moe_channels)
 
     def train_step(params, opt_state, batch):
         loss, grads = _microbatched_grads(
@@ -306,7 +302,8 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
                          grad_key: str = GRAD_TYPE,
                          param_key: str = PARAM_TYPE,
                          transport=None,
-                         transport_model=None) -> Callable:
+                         transport_model=None,
+                         moe_channels=None) -> Callable:
     """train_step(params, flat_opt_state, batch) for compressed mode.
 
     ``tables`` is a legacy ``CodecTables`` (with ``comm_cfg``) or a
@@ -330,7 +327,18 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
     :class:`~repro.comm.channel.Channel` objects — one per
     (collective, dp axis) — via :func:`step_channels`.
     """
-    loss_fn = _loss_fn(model_cfg)
+    if (model_cfg.moe is not None
+            and model_cfg.moe.impl == "shardmap_a2a"
+            and not hasattr(jax, "shard_map")):
+        raise NotImplementedError(
+            "moe.impl='shardmap_a2a' cannot run inside the compressed "
+            "step on this jax: stage 1 falls back to "
+            "vmap(spmd_axis_name=...), which cannot nest the expert "
+            "shard_map. Use make_baseline_step(..., moe_channels=...) — "
+            "the expert all_to_all still moves QLC containers there — "
+            "or moe.impl='gspmd'/'grouped_local' for compressed "
+            "gradients.")
+    loss_fn = _loss_fn(model_cfg, moe_channels=moe_channels)
     dp_axes = dp_axes_in(mesh, train_cfg)
     dp_sizes = {a: mesh.shape[a] for a in dp_axes}
     dp_total = dp_size_of(mesh, train_cfg)

@@ -26,6 +26,7 @@ EXPECTED = {
     # transport planning
     "AlphaBetaModel", "TransportConfig", "ONESHOT", "RING",
     "choose_transport", "modeled_oneshot_time", "modeled_ring_time",
+    "choose_a2a_transport", "modeled_a2a_ring_time",
     "resolve_transport", "transport_crossover_bytes",
     # container wire (self-describing payloads)
     "ContainerHeader", "parse_header", "pack_stream", "stream_headers",
@@ -34,7 +35,7 @@ EXPECTED = {
     "decode_values_stream", "decode_codes_stream",
     # calibration
     "calibrate_for_gradients", "calibrate_for_tensor",
-    "calibrate_kv_entries", "empirical_plan",
+    "calibrate_kv_entries", "calibrate_moe_entries", "empirical_plan",
     "histogram_of_quantized", "histogram_of_tree", "kv_symbol_stream",
     # weight wire
     "GroupWireCodec", "compress_groups", "wire_shape_structs",
