@@ -89,6 +89,18 @@ METRIC_GATES = {
         # ratio x prefix-sharing dedup) — see kv_cache_bench.py.
         "concurrent_capacity_ratio": (">=", 1.5),
     },
+    "codec_adaptation": {
+        # the adaptive subsystem's reason to exist: after a mid-run
+        # distribution shift, the drift-triggered hot-swap must
+        # recover the coding rate to within 5% of a FRESH calibration
+        # on the shifted distribution (measured bits/sym over fresh
+        # expected bits/sym; 99.0 is the no-swap sentinel, so a loop
+        # that never triggers fails loudly) — see
+        # benchmarks/adaptation.py ...
+        "adapted_vs_fresh_bits_ratio": ("<=", 1.05),
+        # ... and the swap itself must actually have happened.
+        "swapped": (">=", 1),
+    },
     "kv_prefetch_overlap": {
         # async paging's reason to exist: the jitted-window +
         # DMA-prefetched path must never be slower per decoded token

@@ -31,16 +31,18 @@ SIZES = {
     "benchmarks.transport_overlap": (1 << 20, 1 << 15),
     "benchmarks.kv_cache_bench": (1 << 19, 1 << 15),
     "benchmarks.moe_dispatch": (1 << 19, 1 << 15),
+    "benchmarks.adaptation": (1 << 18, 1 << 15),
 }
 
 
 def collect_rows(smoke: bool = False):
-    from benchmarks import (collective_model, compressibility, decode_speed,
-                            kernels_bench, kv_cache_bench, moe_dispatch,
-                            multi_lut, scheme_search, transport_overlap)
+    from benchmarks import (adaptation, collective_model, compressibility,
+                            decode_speed, kernels_bench, kv_cache_bench,
+                            moe_dispatch, multi_lut, scheme_search,
+                            transport_overlap)
     modules = [compressibility, decode_speed, collective_model,
                scheme_search, multi_lut, kernels_bench, transport_overlap,
-               kv_cache_bench, moe_dispatch]
+               kv_cache_bench, moe_dispatch, adaptation]
     all_rows = []
     for mod in modules:
         try:

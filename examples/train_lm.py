@@ -63,6 +63,19 @@ def main():
                     choices=["auto", "oneshot", "ring"],
                     help="wire transport policy bound into the step's "
                          "channels (auto = per-payload planner choice)")
+    ap.add_argument("--adapt", action="store_true",
+                    help="online codec adaptation (with --comm qlc): "
+                         "the step emits fused encode histograms; a "
+                         "drifted codec is recalibrated off the hot "
+                         "path and hot-swapped under a new scheme-id")
+    ap.add_argument("--adapt-every", type=int, default=5,
+                    help="steps between drift checks with --adapt")
+    ap.add_argument("--pool-slots", type=int, default=None,
+                    help="escape-pool slots per 1k symbols for the "
+                         "grad/param codecs (reduced smoke models have "
+                         "few chunks per rank, so the planner's ~1-slot "
+                         "pool can overflow into per-step fallback; "
+                         "1024 makes the wire unconditionally lossless)")
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
     args = ap.parse_args()
 
@@ -118,6 +131,7 @@ def main():
 
         baseline = jax.jit(make_baseline_step(cfg, opt_cfg, train_cfg,
                                               moe_channels=moe_channels))
+        on_step = None
         if args.comm == "qlc":
             # Per-tensor-type registry (paper §7): one codec for the
             # gradient reduce-scatter, one for the updated-parameter
@@ -125,10 +139,14 @@ def main():
             # symbol statistics.
             tables, plan = calibrate_for_gradients(
                 cfg, params, batch0, chunk_symbols=512)
+            if args.pool_slots is not None:
+                plan = dataclasses.replace(
+                    plan, pool_slots_per_1k=args.pool_slots)
             registry = CodecRegistry()
             registry.register_tables("grads", tables, plan)
             registry.register("params", histogram_of_tree(params),
-                              chunk_symbols=512)
+                              chunk_symbols=512,
+                              pool_slots_per_1k=args.pool_slots or 8)
             for name in ("grads", "params"):
                 e = registry[name]
                 print(f"calibrated {name}: scheme-id {e.scheme_id}, "
@@ -147,13 +165,35 @@ def main():
                 transport=args.transport)
             for ax, ch in rs_ch.items():
                 print(f"grad RS channel over {ax!r}: {ch}")
-            step = jax.jit(make_compressed_step(
-                cfg, opt_cfg, train_cfg, mesh, registry,
-                transport=args.transport, moe_channels=moe_channels))
+            def build_step():
+                return jax.jit(make_compressed_step(
+                    cfg, opt_cfg, train_cfg, mesh, registry,
+                    transport=args.transport,
+                    moe_channels=moe_channels, telemetry=args.adapt))
+
+            step = build_step()
             opt_state = init_compressed_opt_state(
                 cfg, mesh, train_cfg, registry, opt_cfg)
             fallback = baseline_adapter(baseline, cfg, mesh, train_cfg,
                                         comm_cfg, opt_cfg)
+            if args.adapt:
+                # Telemetry -> drift policy -> hot-swap: the step's
+                # adapt/*_hist metrics feed the controller; a swap
+                # registers a NEW scheme-id (old entries stay
+                # decodable) and the adapter rebuilds the jitted step
+                # against the updated registry.
+                from repro.adaptive import (AdaptiveController,
+                                            TrainingAdapter)
+                controller = AdaptiveController(registry)
+                on_step = TrainingAdapter(
+                    controller, build_step,
+                    grad_key="grads", param_key="params",
+                    check_every=args.adapt_every,
+                    on_swap=lambda ev: print(
+                        f"hot-swap {ev.name}: scheme-id "
+                        f"{ev.old_scheme_id} -> {ev.new_scheme_id} "
+                        f"({ev.measured_bits:.2f} measured vs "
+                        f"{ev.old_expected_bits:.2f} planned bits/sym)"))
         else:
             step = baseline
             opt_state = optm.init_state(params, opt_cfg)
@@ -164,7 +204,7 @@ def main():
                           checkpoint_dir=args.checkpoint_dir,
                           checkpoint_every=max(10, args.steps // 3),
                           log_every=5),
-            step, fallback_step_fn=fallback)
+            step, fallback_step_fn=fallback, on_step=on_step)
         params, opt_state, start = trainer.restore_or(params, opt_state)
         params, opt_state = trainer.run(params, opt_state, data,
                                         start_step=start)

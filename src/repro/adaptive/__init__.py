@@ -1,0 +1,39 @@
+"""Online codec adaptation: telemetry -> drift detection -> hot-swap.
+
+Calibration elsewhere in the repo is one-shot: a codec frozen at
+startup slowly loses bits/symbol as training reshapes the e4m3
+distribution. This subsystem closes the loop:
+
+1. **Telemetry** (:class:`TrafficMonitor`): per-channel 256-bin symbol
+   histograms ride the fused encode pass for free (the kernel's
+   ``emit_hist`` side output — ``Channel.compress(with_hist=True)`` /
+   collective ``with_hist=`` taps), accumulated per
+   ``(name, scheme_id)`` together with measured bits/symbol and
+   escape-pool pressure.
+2. **Drift detection** (:class:`DriftPolicy`): an entry is flagged when
+   its EMA'd measured bits/symbol exceeds the plan's
+   ``expected_bits_per_symbol`` by more than the plan's own
+   ``drift_margin_bits`` (or escape/overflow rates spike), with
+   hysteresis + cooldown so noise can't thrash.
+3. **Recalibration + hot-swap** (:class:`Recalibrator`,
+   :class:`AdaptiveController`): off the hot path, re-run
+   ``select_scheme``/``optimal_scheme``/``empirical_plan`` on the
+   accumulated histogram, register the result under a NEW scheme-id
+   (``CodecRegistry.register_revision``), and atomically rebind the
+   affected channels. Old entries are retained, never mutated —
+   containers are self-describing, so payloads written under the old
+   scheme-id decode forever.
+"""
+from repro.adaptive.monitor import ChannelTraffic, TrafficMonitor
+from repro.adaptive.drift import DriftConfig, DriftPolicy
+from repro.adaptive.recalibrate import Recalibrator
+from repro.adaptive.controller import (AdaptiveChannel, AdaptiveController,
+                                       SwapEvent, TrainingAdapter)
+
+__all__ = [
+    "ChannelTraffic", "TrafficMonitor",
+    "DriftConfig", "DriftPolicy",
+    "Recalibrator",
+    "AdaptiveChannel", "AdaptiveController", "SwapEvent",
+    "TrainingAdapter",
+]

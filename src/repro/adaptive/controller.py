@@ -1,0 +1,211 @@
+"""The adaptation loop: wrap channels, watch traffic, hot-swap codecs.
+
+:class:`AdaptiveController` wires the three stages together:
+
+    monitor (histograms)  ->  policy (drift?)  ->  recalibrator
+                                                       |
+    AdaptiveChannel.rebind(new entry)  <--  registry.register_revision
+
+:class:`AdaptiveChannel` is the atomic-rebind seam for EAGER consumers
+(the paged KV cache encodes per call): it forwards every attribute to
+an underlying immutable ``Channel`` and swaps that reference in one
+assignment — in-flight work keeps the old channel object, new calls
+see the new codec. JITTED consumers (the compressed train step bakes
+channels at trace time) instead rebuild their step function after a
+swap — :class:`TrainingAdapter` packages that as a ``Trainer.on_step``
+hook.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.adaptive.monitor import TrafficMonitor
+from repro.adaptive.drift import DriftConfig, DriftPolicy
+from repro.adaptive.recalibrate import Recalibrator
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapEvent:
+    """One completed hot-swap (for logs / tests)."""
+    name: str
+    old_scheme_id: int
+    new_scheme_id: int
+    measured_bits: float        # EMA'd traffic cost under the OLD codec
+    old_expected_bits: float    # what the old plan promised
+    new_expected_bits: float    # what the new plan promises
+
+
+class AdaptiveChannel:
+    """Attribute-forwarding proxy over a ``Channel`` with atomic rebind.
+
+    Everything a ``Channel`` exposes works unchanged (``compress``,
+    ``all_gather``, ``entry``, ...); ``rebind(entry)`` swaps the
+    underlying channel to a new codec entry in a single reference
+    assignment. Callers that captured the previous channel (or its
+    tables) keep a consistent old view — entries are never mutated.
+    """
+
+    __slots__ = ("_chan",)
+
+    def __init__(self, channel):
+        object.__setattr__(self, "_chan", channel)
+
+    @property
+    def channel(self):
+        """The current underlying immutable ``Channel``."""
+        return self._chan
+
+    def rebind(self, entry):
+        """Atomically rebind to ``entry`` (a ``CodecEntry``)."""
+        object.__setattr__(self, "_chan", self._chan.replace(codec=entry))
+
+    def __getattr__(self, name):
+        return getattr(object.__getattribute__(self, "_chan"), name)
+
+    def __repr__(self):
+        return f"AdaptiveChannel({self._chan!r})"
+
+
+class AdaptiveController:
+    """Owns the monitor/policy/recalibrator and the rebind fan-out.
+
+    Usage::
+
+        ctl = AdaptiveController(registry)
+        ch = ctl.wrap(Channel(ChannelSpec(codec="kv/k"), registry=reg))
+        ...
+        payload, scales, hist = ch.compress(x, with_hist=True)
+        ctl.observe("kv/k", hist)
+        events = ctl.check()          # [] or the swaps just performed
+
+    ``check`` runs the drift policy per observed name; a flagged name
+    is recalibrated on its accumulated histogram, registered under a
+    new scheme-id, and every wrapped channel bound to that name is
+    atomically rebound. Old entries stay in the registry — payloads
+    encoded before the swap decode forever.
+    """
+
+    def __init__(self, registry, *,
+                 monitor: Optional[TrafficMonitor] = None,
+                 policy: Optional[DriftPolicy] = None,
+                 recalibrator: Optional[Recalibrator] = None,
+                 drift: Optional[DriftConfig] = None):
+        self.registry = registry
+        self.monitor = monitor or TrafficMonitor(registry)
+        self.policy = policy or DriftPolicy(self.monitor,
+                                            drift or DriftConfig())
+        self.recalibrator = recalibrator or Recalibrator(registry)
+        self._channels: Dict[str, List[AdaptiveChannel]] = {}
+        self.events: List[SwapEvent] = []
+
+    # ---- binding --------------------------------------------------------
+
+    def wrap(self, channel, name: Optional[str] = None) -> AdaptiveChannel:
+        """Wrap ``channel`` for rebinding, tracked under its entry name
+        (or an explicit ``name`` — the registry key swaps target)."""
+        if name is None:
+            if channel.entry is None:
+                raise ValueError("channel has no registry entry; pass "
+                                 "wrap(channel, name=...)")
+            name = channel.entry.name
+        ach = channel if isinstance(channel, AdaptiveChannel) \
+            else AdaptiveChannel(channel)
+        self._channels.setdefault(name, []).append(ach)
+        return ach
+
+    # ---- telemetry ------------------------------------------------------
+
+    def observe(self, name: str, hist, **kw):
+        """Forward one encode pass's histogram to the monitor."""
+        return self.monitor.observe(name, hist, **kw)
+
+    # ---- the loop -------------------------------------------------------
+
+    def check(self, names=None) -> List[SwapEvent]:
+        """Run drift detection (+ swap) over ``names`` (default: every
+        name with traffic). Returns the swaps performed this call."""
+        if names is None:
+            names = self.monitor.names()
+        swapped: List[SwapEvent] = []
+        for name in names:
+            if not self.policy.update(name):
+                continue
+            swapped.extend(self._swap(name))
+        return swapped
+
+    def _swap(self, name: str) -> List[SwapEvent]:
+        old = self.registry[name]
+        t = self.monitor.traffic(name)
+        counts = np.asarray(t.counts, np.float64)
+        new = self.recalibrator.recalibrate(name, counts)
+        if new.scheme_id == old.scheme_id:
+            # Recalibration converged onto the deployed codec: the
+            # drift was a plan mis-estimate, not a codec mismatch.
+            # Reset the policy so the same ledger can't re-flag
+            # immediately.
+            self.policy.notify_swapped(name)
+            return []
+        for ach in self._channels.get(name, []):
+            ach.rebind(new)
+        ev = SwapEvent(
+            name=name,
+            old_scheme_id=old.scheme_id,
+            new_scheme_id=new.scheme_id,
+            measured_bits=t.measured_bits_per_symbol(old.tables.enc_len),
+            old_expected_bits=old.plan.expected_bits_per_symbol,
+            new_expected_bits=new.plan.expected_bits_per_symbol)
+        self.events.append(ev)
+        self.monitor.reset(name, old.scheme_id)
+        self.policy.notify_swapped(name)
+        return [ev]
+
+
+class TrainingAdapter:
+    """``Trainer.on_step`` hook: feed step-metric histograms to the
+    controller and rebuild the jitted step after a swap.
+
+    The compressed train step captures its channels at trace time, so
+    a rebind cannot reach inside the jitted function — instead the
+    adapter calls ``build_step()`` (a caller closure re-running
+    ``make_compressed_step`` against the updated registry) and returns
+    the new step function for the trainer to install.
+
+    ``make_compressed_step(..., telemetry=True)`` emits the grads/params
+    encode histograms in the step metrics under ``"adapt/grads_hist"``
+    / ``"adapt/params_hist"`` — exactly the keys consumed here.
+    """
+
+    GRADS_HIST = "adapt/grads_hist"
+    PARAMS_HIST = "adapt/params_hist"
+
+    def __init__(self, controller: AdaptiveController,
+                 build_step: Callable[[], Callable], *,
+                 grad_key: str = "grads", param_key: Optional[str] = None,
+                 check_every: int = 10,
+                 on_swap: Optional[Callable[[SwapEvent], None]] = None):
+        self.controller = controller
+        self.build_step = build_step
+        self.grad_key = grad_key
+        self.param_key = param_key
+        self.check_every = max(1, int(check_every))
+        self.on_swap = on_swap
+
+    def __call__(self, step: int, metrics: dict) -> Optional[Callable]:
+        c = self.controller
+        if self.GRADS_HIST in metrics:
+            c.observe(self.grad_key, np.asarray(metrics[self.GRADS_HIST]))
+        if self.param_key is not None and self.PARAMS_HIST in metrics:
+            c.observe(self.param_key,
+                      np.asarray(metrics[self.PARAMS_HIST]))
+        if (step + 1) % self.check_every:
+            return None
+        events = c.check()
+        if not events:
+            return None
+        if self.on_swap is not None:
+            for ev in events:
+                self.on_swap(ev)
+        return self.build_step()

@@ -1,0 +1,81 @@
+"""Off-hot-path recalibration + registry hot-swap registration.
+
+Given a drifted binding's accumulated histogram, rebuild the codec the
+same way the original calibration did — ``select_scheme`` (optionally
+the exhaustive quad-constrained ``optimal_scheme`` search), LUT build,
+iid ``plan_for_tables`` sizing, then ``empirical_plan`` against a
+synthetic stream drawn from the histogram — and register the result
+under a NEW scheme-id via ``CodecRegistry.register_revision``.
+
+Geometry contract: the revision KEEPS the old plan's ``chunk_symbols``
+(jitted consumers bake the chunk grid into their geometry — ZeRO-1's
+``flat_geometry``, the KV page layout), while ``capacity_words`` and
+the escape pool may change; consumers that trace over the plan must
+re-jit after a swap (``TrainingAdapter`` rebuilds the train step).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import adapt
+from repro.comm.calibrate import empirical_plan
+from repro.comm.planner import plan_for_tables
+
+
+class Recalibrator:
+    """Rebuilds codec + plan from measured traffic and registers it.
+
+    ``allow_search=True`` runs the beyond-paper exhaustive scheme
+    search (a few ms for 3 prefix bits — fine off the hot path);
+    False restricts to the paper's Table 1/2 choice.
+    """
+
+    def __init__(self, registry, *, allow_search: bool = True,
+                 target_escape_prob: float = 1e-6,
+                 max_pool_slots_per_1k: Optional[int] = 64,
+                 sample_symbols: int = 1 << 16, seed: int = 0):
+        self.registry = registry
+        self.allow_search = bool(allow_search)
+        self.target_escape_prob = float(target_escape_prob)
+        self.max_pool_slots_per_1k = max_pool_slots_per_1k
+        self.sample_symbols = int(sample_symbols)
+        self.seed = int(seed)
+
+    def _synthetic_stream(self, counts: np.ndarray) -> np.ndarray:
+        """Deterministic symbol stream matching the histogram's PMF —
+        the empirical sizing input (the monitor keeps counts, not the
+        raw stream; iid draw is the right null model for chunk sums
+        once the mixture is already folded into the histogram)."""
+        pmf = np.asarray(counts, np.float64)
+        pmf = pmf / pmf.sum()
+        rng = np.random.default_rng(self.seed)
+        return rng.choice(256, size=self.sample_symbols,
+                          p=pmf).astype(np.uint8)
+
+    def recalibrate(self, name: str, counts: np.ndarray):
+        """Histogram -> new revision entry bound to ``name``.
+
+        Returns the (possibly unchanged — ``register_revision`` no-ops
+        when recalibration converges onto the deployed codec) entry.
+        """
+        counts = np.asarray(counts, np.float64)
+        if counts.sum() <= 0:
+            raise ValueError(f"empty histogram for {name!r}")
+        cur = self.registry[name]
+        tables = adapt.calibrate_tables(counts,
+                                        allow_search=self.allow_search)
+        plan0 = plan_for_tables(
+            tables, counts,
+            chunk_symbols=cur.plan.chunk_symbols,
+            target_escape_prob=self.target_escape_prob,
+            pool_slots_per_1k=cur.plan.pool_slots_per_1k,
+            drift_margin_bits=cur.plan.drift_margin_bits)
+        plan = empirical_plan(
+            tables, self._synthetic_stream(counts), plan0,
+            chunk_symbols=cur.plan.chunk_symbols,
+            target_escape_prob=self.target_escape_prob,
+            max_pool_slots_per_1k=self.max_pool_slots_per_1k)
+        return self.registry.register_revision(name, tables, plan,
+                                               counts=counts)

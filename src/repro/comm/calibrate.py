@@ -81,14 +81,14 @@ def empirical_plan(tables: CodecTables, syms: np.ndarray, plan: CommPlan,
                    *, chunk_symbols: int = 1024,
                    target_escape_prob: float = 1e-6,
                    max_pool_slots_per_1k: Optional[int] = None,
-                   drift_margin_bits: float = 0.5) -> CommPlan:
+                   drift_margin_bits: Optional[float] = None) -> CommPlan:
     """Re-size a plan's chunk slot from the *measured* per-chunk
     bit-count distribution of a representative symbol stream.
 
     Real payloads are mixtures of local statistics (tensor types,
     byte planes), so chunk sums are more dispersed than iid sampling
-    of the global PMF predicts; the 99.9th-percentile + half-bit/symbol
-    margin keeps the escape rate at the target without giving up the
+    of the global PMF predicts; the 99.9th-percentile + drift-margin
+    sizing keeps the escape rate at the target without giving up the
     compressible bulk. Streams shorter than 8 chunks keep the iid plan.
 
     ``max_pool_slots_per_1k`` caps the escape pool for callers that
@@ -98,15 +98,22 @@ def empirical_plan(tables: CodecTables, syms: np.ndarray, plan: CommPlan,
     collectives' guarantee that the pool covers the measured escape
     rate.
 
-    ``drift_margin_bits`` is the per-symbol headroom added above the
-    measured 99.9th percentile. The 0.5-bit default suits gradient
-    streams, whose chunk sums have heavy tails that keep moving over
-    training. Streams whose chunk-sum distribution *plateaus* — e.g.
-    MoE dispatch buffers, where capacity padding makes the distribution
-    bimodal and the all-token mode sits at the e4m3 code's bounded
-    expected length, so p99.9 ~= max — can pass a smaller margin and
-    let the escape pool absorb residual drift.
+    The per-symbol headroom added above the measured 99.9th percentile
+    is the incoming plan's ``drift_margin_bits`` (the ONE per-entry
+    field recording intended drift headroom — set it via
+    ``plan_for_tables(drift_margin_bits=...)``); the keyword here is an
+    explicit override. The 0.5-bit default suits gradient streams,
+    whose chunk sums have heavy tails that keep moving over training.
+    Streams whose chunk-sum distribution *plateaus* — e.g. MoE dispatch
+    buffers, where capacity padding makes the distribution bimodal and
+    the all-token mode sits at the e4m3 code's bounded expected length,
+    so p99.9 ~= max — carry a smaller margin and let the escape pool
+    absorb residual drift. The margin is preserved on the returned
+    plan (and registry-JSON round-tripped), so the adaptive drift
+    policy reads the same headroom the slot was sized with.
     """
+    if drift_margin_bits is None:
+        drift_margin_bits = plan.drift_margin_bits
     syms = np.asarray(syms).reshape(-1)
     lens = tables.enc_len[syms].astype(np.int64)
     n_chunks = len(lens) // chunk_symbols
@@ -128,6 +135,7 @@ def empirical_plan(tables: CodecTables, syms: np.ndarray, plan: CommPlan,
         pool_slots_per_1k=pool,
         expected_bits_per_symbol=plan.expected_bits_per_symbol,
         escape_prob_bound=max(emp_escape, target_escape_prob),
+        drift_margin_bits=drift_margin_bits,
     )
 
 
@@ -266,18 +274,20 @@ def calibrate_moe_entries(registry, model_cfg, params, batch, *,
         counts = np.maximum(
             np.bincount(syms, minlength=256).astype(np.float64), 1e-6)
         tables = adapt.calibrate_tables(counts, allow_search=allow_search)
-        plan = plan_for_tables(tables, counts, chunk_symbols=chunk_symbols,
-                               target_escape_prob=target_escape_prob)
         # Padding zeros make routed-token buffers bimodal; size the
         # slot from measured chunk sums. The chunk-sum distribution
         # plateaus at the all-token mode (p99.9 ~= max), so a quarter-
         # bit drift margin suffices — the capped escape pool and the
-        # a2a wire's ok flag cover the residual tail.
+        # a2a wire's ok flag cover the residual tail. Recording the
+        # margin on the plan (rather than passing it ad hoc) lets the
+        # drift policy read the same headroom the slot was sized with.
+        plan = plan_for_tables(tables, counts, chunk_symbols=chunk_symbols,
+                               target_escape_prob=target_escape_prob,
+                               drift_margin_bits=0.25)
         plan = empirical_plan(tables, syms, plan,
                               chunk_symbols=chunk_symbols,
                               target_escape_prob=target_escape_prob,
-                              max_pool_slots_per_1k=64,
-                              drift_margin_bits=0.25)
+                              max_pool_slots_per_1k=64)
         entries[name] = registry.register_tables(name, tables, plan,
                                                  counts=counts)
     return entries

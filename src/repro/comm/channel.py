@@ -298,10 +298,14 @@ class Channel:
 
     # ---- local wire transforms ------------------------------------------
 
-    def compress(self, x: jnp.ndarray
-                 ) -> Tuple["comp.WirePayload", jnp.ndarray]:
-        """float [..., M] (M % chunk_symbols == 0) -> (payload, scales)."""
-        return comp._compress_values(x, self.tables, self.cfg)
+    def compress(self, x: jnp.ndarray, *, with_hist: bool = False):
+        """float [..., M] (M % chunk_symbols == 0) -> (payload, scales).
+
+        ``with_hist=True`` appends the i32[256] encoded-symbol
+        histogram (fused into the encode kernel — the
+        ``repro.adaptive`` telemetry tap)."""
+        return comp._compress_values(x, self.tables, self.cfg,
+                                     emit_hist=with_hist)
 
     def decompress(self, payload: "comp.WirePayload", scales: jnp.ndarray
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -336,23 +340,28 @@ class Channel:
 
     # ---- collectives (call inside shard_map over spec.axis) -------------
 
-    def all_gather(self, x: jnp.ndarray
-                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def all_gather(self, x: jnp.ndarray, *, with_hist: bool = False):
         """All-gather this shard's float payload. Returns
-        ``(gathered f32 [axis_size * x.size], ok)``."""
+        ``(gathered f32 [axis_size * x.size], ok)``; ``with_hist``
+        appends this shard's encoded-symbol histogram i32[256]."""
         from repro.comm import transport as tr
         axis = self._require_axis()
         t = self.resolved_transport(x.size)
         flat, n = comp.pad_to_multiple(
             x, t.hop_chunks * self.cfg.chunk_symbols)
-        vals, ok = tr.exchange_all_gather(
-            flat, axis, self.tables, self.cfg, t, self.axis_size)
+        out = tr.exchange_all_gather(
+            flat, axis, self.tables, self.cfg, t, self.axis_size,
+            emit_hist=with_hist)
+        vals, ok = out[0], out[1]
+        if with_hist:
+            return vals[:, :n].reshape(-1), ok, out[2]
         return vals[:, :n].reshape(-1), ok
 
-    def reduce_scatter(self, x: jnp.ndarray) -> "comp.ReduceScatterResult":
+    def reduce_scatter(self, x: jnp.ndarray, *, with_hist: bool = False):
         """Reduce-scatter(sum). Returns ``ReduceScatterResult(segment,
         valid, ok)`` — segment padded to the static length, ``valid``
-        counting its real entries."""
+        counting its real entries. ``with_hist`` appends the i32[256]
+        histogram of every symbol this device encoded."""
         from repro.comm import transport as tr
         axis = self._require_axis()
         if self.axis_size is None:
@@ -365,12 +374,16 @@ class Channel:
             x, d * t.hop_chunks * self.cfg.chunk_symbols)
         seg = flat.shape[0] // d
         xs = flat.reshape(d, seg)
-        acc, ok = tr.exchange_reduce_scatter(
-            xs, axis, d, self.tables, self.cfg, t)
+        out = tr.exchange_reduce_scatter(
+            xs, axis, d, self.tables, self.cfg, t, emit_hist=with_hist)
+        acc, ok = out[0], out[1]
         idx = jax.lax.axis_index(axis)
         valid = jnp.clip(jnp.int32(n) - idx.astype(jnp.int32) * seg,
                          0, seg)
-        return comp.ReduceScatterResult(segment=acc, valid=valid, ok=ok)
+        res = comp.ReduceScatterResult(segment=acc, valid=valid, ok=ok)
+        if with_hist:
+            return res, out[2]
+        return res
 
     def psum(self, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """All-reduce(sum) = compressed RS + compressed AG (both phases
@@ -382,9 +395,10 @@ class Channel:
         out = full[:x.size].reshape(x.shape)
         return out, r.ok & ok_ag
 
-    def all_to_all(self, x: jnp.ndarray
-                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Compressed all-to-all of ``x [D, ...]`` (row j -> peer j)."""
+    def all_to_all(self, x: jnp.ndarray, *, with_hist: bool = False):
+        """Compressed all-to-all of ``x [D, ...]`` (row j -> peer j).
+        ``with_hist`` appends the i32[256] histogram of every symbol
+        this device encoded."""
         from repro.comm import transport as tr
         axis = self._require_axis()
         d = x.shape[0]
@@ -398,8 +412,11 @@ class Channel:
         pad = (-n) % (t.hop_chunks * self.cfg.chunk_symbols)
         if pad:
             row = jnp.pad(row, ((0, 0), (0, pad)))
-        vals, ok = tr.exchange_all_to_all(
-            row, axis, self.tables, self.cfg, t, d)
+        out = tr.exchange_all_to_all(
+            row, axis, self.tables, self.cfg, t, d, emit_hist=with_hist)
+        vals, ok = out[0], out[1]
+        if with_hist:
+            return vals[:, :n].reshape(x.shape), ok, out[2]
         return vals[:, :n].reshape(x.shape), ok
 
     # ---- autotune (ROADMAP: autotuned hop size) -------------------------

@@ -376,8 +376,8 @@ def compress_values(x: jnp.ndarray, tables, cfg: CommConfig = None
     return _legacy_channel(tables, cfg).compress(x)
 
 
-def _compress_values(x: jnp.ndarray, tables: CodecTables, cfg: CommConfig
-                     ) -> Tuple[WirePayload, jnp.ndarray]:
+def _compress_values(x: jnp.ndarray, tables: CodecTables, cfg: CommConfig,
+                     *, emit_hist: bool = False):
     """Resolved-argument impl of :func:`compress_values`.
 
     With ``cfg.use_kernels`` the e4m3 quantization and QLC encode run as
@@ -387,6 +387,13 @@ def _compress_values(x: jnp.ndarray, tables: CodecTables, cfg: CommConfig
     Both paths are bit-exact identical: the fused kernel's quantizer is
     tested bit-equal to ``e4m3.quantize_block32`` and its packer to
     ``codec.encode_chunks``.
+
+    ``emit_hist=True`` appends the 256-bin symbol histogram (i32[256],
+    summed over ALL lead dims) to the return: on the kernel path it
+    rides the fused encode pass for free (the symbols are already in
+    registers); the pure path pays one ``bincount``. This is the
+    telemetry tap for ``repro.adaptive`` — the histogram describes
+    exactly the symbols that went on the wire.
     """
     k = cfg.chunk_symbols
     *lead, m = x.shape
@@ -398,16 +405,25 @@ def _compress_values(x: jnp.ndarray, tables: CodecTables, cfg: CommConfig
         flat = x.reshape(-1, k).astype(jnp.float32)
         # emit_codes: the escape pool stores raw symbols of overflowing
         # chunks, so the wire assembly needs them once per chunk.
-        words, nbits, scales, chunk_codes = kops.quantize_encode(
-            flat, tables, cfg.capacity_words, emit_codes=True)
+        outs = kops.quantize_encode(
+            flat, tables, cfg.capacity_words, emit_codes=True,
+            emit_hist=emit_hist)
+        words, nbits, scales, chunk_codes = outs[:4]
         words = words.reshape(*lead, n_chunks, cfg.capacity_words)
         nbits = nbits.reshape(*lead, n_chunks)
         chunks = chunk_codes.reshape(*lead, n_chunks, k)
         scales = scales.reshape(*lead, m // e4m3.BLOCK).astype(cfg.scale_dtype)
-        return _assemble_payload(chunks, words, nbits, cfg), scales
+        payload = _assemble_payload(chunks, words, nbits, cfg)
+        if emit_hist:
+            return payload, scales, outs[4]
+        return payload, scales
 
     codes, scales = _quantize(x, cfg)
-    return _compress_codes(codes, tables, cfg), scales
+    payload = _compress_codes(codes, tables, cfg)
+    if emit_hist:
+        hist = jnp.bincount(codes.reshape(-1), length=256).astype(jnp.int32)
+        return payload, scales, hist
+    return payload, scales
 
 
 def _pool_values(payload: WirePayload, scales: jnp.ndarray,

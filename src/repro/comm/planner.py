@@ -39,6 +39,16 @@ class CommPlan:
     pool_slots_per_1k: int       # escape-pool slots per 1024 chunks (min 1)
     expected_bits_per_symbol: float
     escape_prob_bound: float
+    #: Per-symbol slack the calibration intended between the expected
+    #: code length and the sized slot — the ONE place a stream's drift
+    #: headroom is recorded. ``empirical_plan`` adds it above the
+    #: measured p99.9 chunk sum (0.5 suits heavy-tailed gradient
+    #: streams; plateaued streams like MoE dispatch pass 0.25), and the
+    #: adaptive drift policy (``repro.adaptive``) reads the same field
+    #: as its recalibration threshold: measured bits/symbol exceeding
+    #: ``expected_bits_per_symbol + drift_margin_bits`` means the
+    #: stream has left the envelope this plan was sized for.
+    drift_margin_bits: float = 0.5
 
     @property
     def capacity_bits(self) -> int:
@@ -65,12 +75,16 @@ def plan_for_tables(tables: CodecTables, counts: np.ndarray,
                     chunk_symbols: int = 1024,
                     target_escape_prob: float = 1e-6,
                     capacity_factor: Optional[float] = None,
-                    pool_slots_per_1k: int = 8) -> CommPlan:
+                    pool_slots_per_1k: int = 8,
+                    drift_margin_bits: float = 0.5) -> CommPlan:
     """Build a plan from calibrated tables + the calibration histogram.
 
     ``capacity_factor`` (bytes-per-symbol / 1.0) overrides the Hoeffding
     sizing when given — used by the perf loop to trade escape risk for
-    bandwidth.
+    bandwidth. ``drift_margin_bits`` records the stream's intended
+    drift headroom on the plan (see :class:`CommPlan`); the iid sizing
+    here does not consume it, but ``empirical_plan`` and the adaptive
+    drift policy both read it from the plan.
     """
     pmf = entropy.normalize_counts(counts)
     mu = float(np.dot(tables.enc_len.astype(np.float64), pmf))
@@ -86,6 +100,7 @@ def plan_for_tables(tables: CodecTables, counts: np.ndarray,
         pool_slots_per_1k=pool_slots_per_1k,
         expected_bits_per_symbol=mu,
         escape_prob_bound=target_escape_prob,
+        drift_margin_bits=drift_margin_bits,
     )
 
 

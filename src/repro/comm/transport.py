@@ -89,10 +89,12 @@ def _shift_perm(d: int, s: int):
     return [(j, (j + s) % d) for j in range(d)]
 
 
-def _compress_pieces(flat: jnp.ndarray, hop_chunks: int, tables, cfg):
-    """[..., seg] -> list of ``hop_chunks`` independently-compressed
-    piece trees ``(WirePayload, scales)`` (each with ``flat``'s lead
-    dims).
+def _compress_pieces(flat: jnp.ndarray, hop_chunks: int, tables, cfg,
+                     emit_hist: bool = False):
+    """[..., seg] -> ``(pieces, hist)``: a list of ``hop_chunks``
+    independently-compressed piece trees ``(WirePayload, scales)``
+    (each with ``flat``'s lead dims), plus the summed i32[256] symbol
+    histogram over everything compressed when ``emit_hist`` else None.
 
     Each piece is a SEPARATE pytree — the ring issues one transfer and
     one decode(+accumulate) dispatch per piece, so piece *p*'s decode
@@ -111,8 +113,14 @@ def _compress_pieces(flat: jnp.ndarray, hop_chunks: int, tables, cfg):
     if hop_chunks > 1 and cfg.enabled:
         cfg = dataclasses.replace(
             cfg, pool_slots_per_1k=cfg.pool_slots_per_1k * hop_chunks)
-    return [comp._compress_values(pieces[..., p, :], tables, cfg)
+    if not emit_hist:
+        return [comp._compress_values(pieces[..., p, :], tables, cfg)
+                for p in range(hop_chunks)], None
+    outs = [comp._compress_values(pieces[..., p, :], tables, cfg,
+                                  emit_hist=True)
             for p in range(hop_chunks)]
+    hist = sum(h for _, _, h in outs)
+    return [(pp, ps) for pp, ps, _ in outs], hist
 
 
 def _row_pool_ok(pieces) -> jnp.ndarray:
@@ -181,23 +189,28 @@ def ring_stream(local, axis_name, axis_size: int, consume, init):
 
 def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
                         t: TransportConfig,
-                        axis_size: Optional[int] = None
-                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                        axis_size: Optional[int] = None,
+                        emit_hist: bool = False):
     """Gather every peer's padded shard ``flat [seg]`` -> ``[d, seg]``.
 
-    Returns ``(vals f32 [d, seg], ok bool [])``.
+    Returns ``(vals f32 [d, seg], ok bool [])``; with ``emit_hist``
+    additionally the i32[256] histogram of the LOCAL shard's encoded
+    symbols (telemetry tap — per-device; psum it for a global view).
     """
     if t.kind == "oneshot":
-        payload, scales = comp._compress_values(flat, tables, cfg)
+        c = comp._compress_values(flat, tables, cfg, emit_hist=emit_hist)
+        payload, scales = c[0], c[1]
         g_payload = comp.WirePayload(*jax.tree.map(
             lambda a: jax.lax.all_gather(a, axis_name), payload))
         g_scales = jax.lax.all_gather(scales, axis_name)
         vals, ok = comp._decompress_values(g_payload, g_scales, tables, cfg)
+        if emit_hist:
+            return vals, jnp.all(ok), c[2]
         return vals, jnp.all(ok)
 
     d = _require_axis_size(t, axis_size)
     h = t.hop_chunks
-    pieces = _compress_pieces(flat, h, tables, cfg)
+    pieces, hist = _compress_pieces(flat, h, tables, cfg, emit_hist)
 
     def consume(carry, buf, src, _hop):
         out, ok = carry
@@ -211,6 +224,8 @@ def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
     out0 = jnp.zeros((d, h, flat.shape[0] // h), jnp.float32)
     out, ok = ring_stream(pieces, axis_name, d, consume,
                           (out0, jnp.bool_(True)))
+    if emit_hist:
+        return out.reshape(d, -1), ok, hist
     return out.reshape(d, -1), ok
 
 
@@ -219,10 +234,12 @@ def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
 # --------------------------------------------------------------------------
 
 def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
-                            tables, cfg, t: TransportConfig
-                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                            tables, cfg, t: TransportConfig,
+                            emit_hist: bool = False):
     """Reduce-scatter of ``xs [d, seg]`` (row j = this device's summand
-    of peer j's output segment). Returns ``(acc f32 [seg], ok)``.
+    of peer j's output segment). Returns ``(acc f32 [seg], ok)``; with
+    ``emit_hist`` additionally the i32[256] histogram of ALL symbols
+    this device encoded (every row it contributed).
 
     Every transport quantizes+encodes each segment exactly once and
     sums dequantized f32 at the destination in ring arrival order —
@@ -230,7 +247,8 @@ def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
     """
     d = axis_size
     h = t.hop_chunks
-    pieces = _compress_pieces(xs, h, tables, cfg)   # h trees, lead [d]
+    pieces, hist = _compress_pieces(xs, h, tables, cfg,
+                                    emit_hist)      # h trees, lead [d]
     my = jax.lax.axis_index(axis_name)
 
     def row_pieces(idx):
@@ -258,6 +276,8 @@ def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
             accs, ok = _accumulate_row_pieces(
                 accs, [_tree_row(pc, idx) for pc in r_pieces], tables,
                 cfg, ok)
+        if emit_hist:
+            return jnp.concatenate(accs), ok, hist
         return jnp.concatenate(accs), ok
 
     # Rotated pairwise exchange: hop s sends the ORIGINAL compressed
@@ -271,6 +291,8 @@ def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
         if s > 0:
             unit = _tree_permute(unit, axis_name, _shift_perm(d, s))
         accs, ok = _accumulate_row_pieces(accs, unit, tables, cfg, ok)
+    if emit_hist:
+        return jnp.concatenate(accs), ok, hist
     return jnp.concatenate(accs), ok
 
 
@@ -280,11 +302,12 @@ def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
 
 def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
                         t: TransportConfig,
-                        axis_size: Optional[int] = None
-                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                        axis_size: Optional[int] = None,
+                        emit_hist: bool = False):
     """All-to-all of ``rows [d, n]`` (row j -> peer j); returns
-    ``(vals f32 [d, n], ok)`` where output row j holds peer j's
-    dequantized row for this device.
+    ``(vals f32 [d, n], ok)`` — with ``emit_hist`` additionally the
+    i32[256] histogram of all symbols this device encoded — where
+    output row j holds peer j's dequantized row for this device.
 
     This is the MoE expert-dispatch wire (``moe.impl="shardmap_a2a"``
     routes its dispatch/combine buffers through ``Channel.all_to_all``
@@ -297,18 +320,22 @@ def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
     """
     d = rows.shape[0]
     if t.kind == "oneshot":
-        payload, scales = comp._compress_values(rows, tables, cfg)
+        c = comp._compress_values(rows, tables, cfg, emit_hist=emit_hist)
+        payload, scales = c[0], c[1]
         a2a = lambda a: jax.lax.all_to_all(                 # noqa: E731
             a, axis_name, split_axis=0, concat_axis=0, tiled=True)
         r_payload = comp.WirePayload(*jax.tree.map(a2a, payload))
         r_scales = a2a(scales)
         vals, ok = comp._decompress_values(r_payload, r_scales, tables, cfg)
+        if emit_hist:
+            return vals, jnp.all(ok), c[2]
         return vals, jnp.all(ok)
 
     # d is static from rows.shape; an explicit axis_size must agree.
     assert axis_size is None or int(axis_size) == d, (axis_size, d)
     h = t.hop_chunks
-    pieces = _compress_pieces(rows, h, tables, cfg)  # h trees, lead [d]
+    pieces, hist = _compress_pieces(rows, h, tables, cfg,
+                                    emit_hist)       # h trees, lead [d]
     my = jax.lax.axis_index(axis_name)
     out = jnp.zeros((d, h, rows.shape[-1] // h), jnp.float32)
     ok = jnp.bool_(True)

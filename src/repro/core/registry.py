@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -164,8 +164,16 @@ class CodecRegistry:
     def register_tables(self, name: str, tables: CodecTables,
                         plan: "CommPlan", *,
                         counts: Optional[np.ndarray] = None,
-                        scheme_id: Optional[int] = None) -> CodecEntry:
-        """Register pre-built tables + plan under ``name``."""
+                        scheme_id: Optional[int] = None,
+                        rebind: bool = False) -> CodecEntry:
+        """Register pre-built tables + plan under ``name``.
+
+        ``rebind=True`` allows ``name`` to move from an existing entry
+        to this one (the previous entry keeps its scheme-id and stays
+        decodable by id) — the internal path under
+        :meth:`register_revision` and the revision-aware JSON reload;
+        without it a name collision with different tables raises.
+        """
         if counts is None:
             counts = np.full(NUM_SYMBOLS, 1.0)
         digest = _tables_digest(tables)
@@ -173,13 +181,14 @@ class CodecRegistry:
         if existing_id is not None and scheme_id in (None, existing_id):
             entry = self._by_id[existing_id]
             if (name in self._by_name
-                    and self._by_name[name].scheme_id != existing_id):
+                    and self._by_name[name].scheme_id != existing_id
+                    and not rebind):
                 raise ValueError(
                     f"name {name!r} already bound to scheme-id "
                     f"{self._by_name[name].scheme_id}")
             self._by_name[name] = entry
             return entry
-        if name in self._by_name:
+        if name in self._by_name and not rebind:
             raise ValueError(f"name {name!r} already registered with "
                              "different tables")
         sid = self._next_id() if scheme_id is None else int(scheme_id)
@@ -194,6 +203,36 @@ class CodecRegistry:
         self._by_id[sid] = entry
         self._digest_to_id[digest] = sid
         return entry
+
+    def register_revision(self, name: str, tables: CodecTables,
+                          plan: "CommPlan", *,
+                          counts: Optional[np.ndarray] = None
+                          ) -> CodecEntry:
+        """Register a RECALIBRATED codec for an existing name under a
+        fresh scheme-id and atomically rebind the name to it.
+
+        This is the hot-swap primitive (``repro.adaptive``): the
+        previous entry is retained, never mutated — it stays reachable
+        via :meth:`by_id` (and in :meth:`stacked_decode_tables`), so
+        in-flight and checkpointed containers written under the old
+        scheme-id decode forever. Only the *name* binding moves; new
+        traffic encodes under the new id.
+
+        Identical tables AND plan to the current binding is a no-op
+        returning the existing entry (recalibration converged onto the
+        deployed codec). A fresh scheme-id is allocated even when the
+        tables digest matches some OTHER entry — a revision may change
+        only the plan (slot capacity / escape pool), and plans are
+        per-entry.
+        """
+        cur = self._by_name.get(name)
+        if cur is None:
+            return self.register_tables(name, tables, plan, counts=counts)
+        if (_tables_digest(tables) == _tables_digest(cur.tables)
+                and plan == cur.plan):
+            return cur
+        return self.register_tables(name, tables, plan, counts=counts,
+                                    scheme_id=self._next_id(), rebind=True)
 
     def _next_id(self) -> int:
         return max(self._by_id, default=-1) + 1
@@ -214,11 +253,21 @@ class CodecRegistry:
                 f"no codec registered for tensor type {name!r}; "
                 f"have {sorted(self._by_name)}") from None
 
-    def get(self, name: str, default: Optional[str] = None
+    def get(self, name: str,
+            default: Union[str, CodecEntry, None] = None
             ) -> Optional[CodecEntry]:
-        """Entry for ``name``, falling back to type ``default``."""
+        """Entry for ``name``, or the fallback when absent.
+
+        ``default`` is either another registry key to resolve (the
+        tensor-type fallback, e.g. the weight wire's ``DEFAULT_TYPE``)
+        or an already-resolved :class:`CodecEntry` returned as-is —
+        so ``get(key, default=entry)`` replaces the
+        ``get(key) or entry`` idiom without the falsy-entry pitfall.
+        """
         e = self._by_name.get(name)
         if e is None and default is not None:
+            if isinstance(default, CodecEntry):
+                return default
             e = self._by_name.get(default)
         return e
 
@@ -322,6 +371,7 @@ class CodecRegistry:
                     "expected_bits_per_symbol":
                         entry.plan.expected_bits_per_symbol,
                     "escape_prob_bound": entry.plan.escape_prob_bound,
+                    "drift_margin_bits": entry.plan.drift_margin_bits,
                 },
             })
         out = {"version": REGISTRY_VERSION, "entries": entries}
@@ -355,9 +405,14 @@ class CodecRegistry:
                     f"registry entry {e['name']!r}: rebuilt tables do "
                     "not match the recorded digest (corrupt registry?)")
             plan = CommPlan(**{k: v for k, v in e["plan"].items()})
+            # Entries are replayed in ascending scheme-id order, so a
+            # name that was revised (hot-swapped) lands on its newest
+            # revision — rebind permits the name to move off the old
+            # entry, which stays decodable by id.
             entry = reg.register_tables(e["name"], tables, plan,
                                         counts=counts,
-                                        scheme_id=int(e["scheme_id"]))
+                                        scheme_id=int(e["scheme_id"]),
+                                        rebind=True)
             for alias in e.get("aliases", []):
                 reg._by_name[alias] = entry
         if d.get("transport_cache"):

@@ -70,6 +70,15 @@ def main():
                          "(Channel.autotune); tunings are cached in the "
                          "codec registry and picked up by --transport "
                          "auto")
+    ap.add_argument("--adapt", action="store_true",
+                    help="online codec adaptation (--comm qlc): the "
+                         "step emits fused encode-pass histograms, a "
+                         "drift policy watches measured vs planned "
+                         "bits/symbol, and a drifted codec is "
+                         "recalibrated + hot-swapped under a new "
+                         "scheme-id (repro.adaptive)")
+    ap.add_argument("--adapt-every", type=int, default=10,
+                    help="steps between drift checks with --adapt")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-dir", default=None)
@@ -137,6 +146,7 @@ def main():
 
         baseline = jax.jit(make_baseline_step(
             cfg, opt_cfg, train_cfg, moe_channels=moe_channels))
+        on_step = None
         if args.comm == "qlc":
             # per-tensor-type registry: the gradient reduce-scatter and
             # the parameter all-gather get separately calibrated codecs
@@ -147,11 +157,30 @@ def main():
                               chunk_symbols=plan.chunk_symbols)
             if args.autotune:
                 _autotune_transports(registry, cfg, mesh, train_cfg)
-            step = jax.jit(make_compressed_step(
-                cfg, opt_cfg, train_cfg, mesh, registry,
-                transport=args.transport, moe_channels=moe_channels))
+
+            def build_step():
+                return jax.jit(make_compressed_step(
+                    cfg, opt_cfg, train_cfg, mesh, registry,
+                    transport=args.transport, moe_channels=moe_channels,
+                    telemetry=args.adapt))
+
+            step = build_step()
             opt_state = init_compressed_opt_state(
                 cfg, mesh, train_cfg, registry, opt_cfg)
+            if args.adapt:
+                from repro.adaptive import (AdaptiveController,
+                                            TrainingAdapter)
+                controller = AdaptiveController(registry)
+                on_step = TrainingAdapter(
+                    controller, build_step,
+                    grad_key="grads", param_key="params",
+                    check_every=args.adapt_every,
+                    on_swap=lambda ev: logging.info(
+                        "codec hot-swap %s: scheme-id %d -> %d "
+                        "(%.2f measured vs %.2f planned bits/sym; "
+                        "new plan %.2f)", ev.name, ev.old_scheme_id,
+                        ev.new_scheme_id, ev.measured_bits,
+                        ev.old_expected_bits, ev.new_expected_bits))
         else:
             step = baseline
             opt_state = optm.init_state(params, opt_cfg)
@@ -159,7 +188,7 @@ def main():
         trainer = Trainer(
             TrainerConfig(total_steps=args.steps,
                           checkpoint_dir=args.checkpoint_dir),
-            step, fallback_step_fn=None)
+            step, fallback_step_fn=None, on_step=on_step)
         params, opt_state, start = trainer.restore_or(params, opt_state)
         trainer.run(params, opt_state, data, start_step=start)
 

@@ -162,6 +162,13 @@ def bind_moe_channels(channels):
     (the step builders in ``repro.training.train_step`` do it for you
     via their ``moe_channels`` argument) — the binding is consulted at
     trace time, inside the expert ``shard_map``.
+
+    ``repro.adaptive.AdaptiveChannel`` wrappers (see
+    :func:`adaptive_moe_channels`) work here unchanged — attribute
+    forwarding resolves the deployed codec at trace time. Because the
+    binding is baked into the traced step, a codec hot-swap only
+    reaches the expert wire after the step is REBUILT
+    (``TrainingAdapter`` does exactly that for the training loop).
     """
     old = getattr(_MOE_CTX, "channels", None)
     _MOE_CTX.channels = channels
@@ -174,6 +181,19 @@ def bind_moe_channels(channels):
 def bound_moe_channels():
     """The currently bound ``{name: Channel}`` map, or ``None``."""
     return getattr(_MOE_CTX, "channels", None)
+
+
+def adaptive_moe_channels(controller, channels):
+    """Wrap a ``{name: Channel}`` expert-wire map for codec hot-swap.
+
+    Each channel is registered with the
+    :class:`repro.adaptive.AdaptiveController` under its registry name
+    (:data:`MOE_DISPATCH` / :data:`MOE_COMBINE`), so a drift-triggered
+    ``register_revision`` atomically rebinds the map in place; rebuild
+    the traced step afterwards to put the new codec on the wire.
+    """
+    return {name: controller.wrap(ch, name=name)
+            for name, ch in channels.items()}
 
 
 @contextlib.contextmanager

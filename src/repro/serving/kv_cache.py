@@ -501,11 +501,19 @@ class PagedKVCache:
 
     def __init__(self, spec: KVCacheSpec, cfg: ModelConfig, registry,
                  channels: Optional[Dict[str, Any]] = None, mesh=None,
-                 arena: Optional[BlockArena] = None):
+                 arena: Optional[BlockArena] = None, monitor=None):
         self.spec = spec
         self.arena = arena
         self.cfg = cfg
         self.registry = registry
+        #: optional ``repro.adaptive.TrafficMonitor``: every encoded
+        #: section files its symbol histogram + escape/overflow
+        #: pressure under the section's (name, scheme_id), feeding the
+        #: drift policy. Hot-swap reaches the cache through the
+        #: ``channels`` dict (wrap entries in ``AdaptiveChannel`` or
+        #: swap them) — old blocks stay decodable, their containers
+        #: carry the old scheme-id.
+        self.monitor = monitor
         self.kinds = cfg.layer_kinds()
         if channels is None:
             channels = open_kv_channels(
@@ -642,6 +650,7 @@ class PagedKVCache:
         entry = self.registry[name]
         k = ch.cfg.chunk_symbols
         n_chunks = int(codes.size) // k
+        overflows0 = self.overflow_sections
         coded = codec_wins(entry)
         if coded:
             cfg = self._block_cfg(ch, codes)
@@ -655,6 +664,16 @@ class PagedKVCache:
         else:
             self.raw_sections += 1
             coded, payload, cfg = self._raw_wire(ch, codes)
+        if self.monitor is not None:
+            hist = np.bincount(
+                np.asarray(codes).astype(np.uint8).reshape(-1)[:n_valid],
+                minlength=256)[:256]
+            escaped = (float(np.asarray(payload.pool_count).sum())
+                       if coded else 0.0)
+            self.monitor.observe(
+                name, hist, escaped_chunks=escaped, chunks=n_chunks,
+                overflow=self.overflow_sections > overflows0,
+                containers=1.0, scheme_id=entry.scheme_id)
         return qc.pack_payload(
             payload, scales, scheme_id=entry.scheme_id, cfg=cfg,
             n_valid=n_valid,

@@ -93,7 +93,7 @@ def step_channels(codec, comm_cfg: CommConfig = None, *,
             raise KeyError(
                 f"registry has no {grad_key!r} entry; have "
                 f"{registry.names()}")
-        p = registry.get(param_key) or g
+        p = registry.get(param_key, default=g)
         overrides = {}
         if comm_cfg is not None:
             overrides = dict(enabled=comm_cfg.enabled,
@@ -303,8 +303,17 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
                          param_key: str = PARAM_TYPE,
                          transport=None,
                          transport_model=None,
-                         moe_channels=None) -> Callable:
+                         moe_channels=None,
+                         telemetry: bool = False) -> Callable:
     """train_step(params, flat_opt_state, batch) for compressed mode.
+
+    ``telemetry=True`` additionally returns the encode-side symbol
+    histograms of the gradient and parameter wires in the metrics
+    (``"adapt/grads_hist"`` / ``"adapt/params_hist"``, i32[256],
+    psum'd over every rank — global traffic). The histogram rides the
+    fused encode kernel (``emit_hist``), so the payload math is
+    untouched: a telemetry step is bit-identical to a plain one. These
+    are the ``repro.adaptive.TrainingAdapter`` inputs.
 
     ``tables`` is a legacy ``CodecTables`` (with ``comm_cfg``) or a
     ``CodecRegistry``: the gradient reduce-scatter then uses the
@@ -405,8 +414,14 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
 
         seg = g_flat
         ok = jnp.bool_(True)
+        ghist = phist = jnp.zeros((256,), jnp.int32)
         for ax in rs_order:                     # intra-pod, then cross-pod
-            seg, _valid, ok_i = rs_ch[ax].reduce_scatter(seg)
+            if telemetry:
+                (seg, _valid, ok_i), h = rs_ch[ax].reduce_scatter(
+                    seg, with_hist=True)
+                ghist = ghist + h
+            else:
+                seg, _valid, ok_i = rs_ch[ax].reduce_scatter(seg)
             ok &= ok_i
         seg = seg / dp_total                    # mean over dp
 
@@ -428,7 +443,11 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
 
         full = new_seg
         for ax in reversed(rs_order):           # cross-pod, then intra-pod
-            full, ok_i = ag_ch[ax].all_gather(full)
+            if telemetry:
+                full, ok_i, h = ag_ch[ax].all_gather(full, with_hist=True)
+                phist = phist + h
+            else:
+                full, ok_i = ag_ch[ax].all_gather(full)
             ok &= ok_i
         # ok is per-rank (each rank decodes different payloads, and the
         # model axis shards the flat vector); the step's retry signal
@@ -443,6 +462,15 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
                                   new_params, params)
         new_opt_out = {kk: new_opt[kk].reshape(flat_opt[kk].shape)
                        for kk in flat_opt}
+        if telemetry:
+            # Global traffic view: every rank encodes a different shard
+            # (and the model axis splits the flat vector), so the
+            # channel histograms are per-rank. Sum them.
+            axes = tuple(dp_axes) + ("model",)
+            ghist = jax.lax.psum(ghist, axes)
+            phist = jax.lax.psum(phist, axes)
+            return (new_params, new_opt_out, ok, gnorm, lr,
+                    ghist, phist)
         return new_params, new_opt_out, ok, gnorm, lr
 
     opt_state_spec = {
@@ -451,17 +479,23 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
         "step": P(),
     }
 
+    out_specs = (p_specs, opt_state_spec, P(), P(), P())
+    if telemetry:
+        out_specs += (P(), P())
     stage2 = _shard_map(
         sync_body, mesh=mesh,
         in_specs=(p_specs, g_specs, opt_state_spec),
-        out_specs=(p_specs, opt_state_spec, P(), P(), P()))
+        out_specs=out_specs)
 
     def train_step(params, flat_opt_state, batch):
         loss_per_dp, grads_stacked = stage1(params, batch)
-        new_params, new_opt, ok, gnorm, lr = stage2(
-            params, grads_stacked, flat_opt_state)
+        outs = stage2(params, grads_stacked, flat_opt_state)
+        new_params, new_opt, ok, gnorm, lr = outs[:5]
         metrics = {"loss": jnp.mean(loss_per_dp), "ok": ok,
                    "grad_norm": gnorm, "lr": lr}
+        if telemetry:
+            metrics["adapt/grads_hist"] = outs[5]
+            metrics["adapt/params_hist"] = outs[6]
         return new_params, new_opt, metrics
 
     return train_step

@@ -32,13 +32,22 @@ class Trainer:
     the step is redone with ``fallback_step_fn`` — the paper's lossless
     guarantee is preserved by retrying on the uncompressed path rather
     than accepting corrupt gradients.
+
+    ``on_step(step, metrics) -> Optional[new_step_fn]`` runs after each
+    completed step (post-fallback). Returning a callable replaces
+    ``step_fn`` from the next step on — the online codec adaptation
+    seam (``repro.adaptive.TrainingAdapter`` observes the step's
+    telemetry histograms and, after a hot-swap, returns a step rebuilt
+    against the updated registry).
     """
 
     def __init__(self, cfg: TrainerConfig, step_fn: Callable,
-                 fallback_step_fn: Optional[Callable] = None):
+                 fallback_step_fn: Optional[Callable] = None,
+                 on_step: Optional[Callable] = None):
         self.cfg = cfg
         self.step_fn = step_fn
         self.fallback_step_fn = fallback_step_fn
+        self.on_step = on_step
         self.watchdog = StragglerWatchdog()
         self.ckpt = (CheckpointManager(cfg.checkpoint_dir,
                                        keep=cfg.keep_checkpoints)
@@ -71,6 +80,12 @@ class Trainer:
             params, opt_state = params2, opt2
             dt = time.time() - t0
             self.watchdog.observe(step, dt)
+            if self.on_step is not None:
+                new_step_fn = self.on_step(step, metrics)
+                if new_step_fn is not None:
+                    log.info("step fn replaced at step %d (codec "
+                             "hot-swap)", step)
+                    self.step_fn = new_step_fn
             step += 1
 
             loss = float(np.asarray(metrics["loss"]))

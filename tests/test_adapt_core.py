@@ -1,0 +1,97 @@
+"""Direct units for ``core/adapt.py`` — scheme selection on dominant-
+symbol, uniform, and drifted synthetic histograms (previously only
+exercised indirectly through calibration)."""
+import numpy as np
+
+from repro.core import adapt
+from repro.core.distributions import ffn1_counts, ffn2_counts
+from repro.core.schemes import TABLE1, TABLE2
+
+
+def _dominant_counts(frac: float = 0.4, n: int = 1 << 16) -> np.ndarray:
+    counts = np.full(256, (1 - frac) * n / 255.0)
+    counts[0] = frac * n
+    return counts
+
+
+class TestHasDominantSymbol:
+    def test_dominant_spike_detected(self):
+        assert adapt.has_dominant_symbol(_dominant_counts(0.4))
+
+    def test_uniform_has_no_dominant(self):
+        assert not adapt.has_dominant_symbol(np.full(256, 100.0))
+
+    def test_threshold_boundary(self):
+        # pmf.max() >= threshold is inclusive
+        c = _dominant_counts(0.15)
+        assert adapt.has_dominant_symbol(c, threshold=0.15)
+        assert not adapt.has_dominant_symbol(c, threshold=0.16)
+
+    def test_smooth_gaussian_not_dominant(self):
+        assert not adapt.has_dominant_symbol(ffn1_counts(1 << 15, 0))
+
+    def test_zero_spiked_ffn2_dominant(self):
+        assert adapt.has_dominant_symbol(ffn2_counts(1 << 15, 0))
+
+
+class TestDefaultSchemeFor:
+    def test_dominant_gets_table2(self):
+        assert adapt.default_scheme_for(_dominant_counts()) is TABLE2
+
+    def test_smooth_gets_table1(self):
+        assert adapt.default_scheme_for(ffn1_counts(1 << 15, 0)) is TABLE1
+
+
+class TestSelectScheme:
+    def test_dominant_symbol_prefers_table2(self):
+        r = adapt.select_scheme(ffn2_counts(1 << 16, 1))
+        assert r.scheme_name == "table2"
+        assert r.scheme == TABLE2
+
+    def test_smooth_prefers_table1(self):
+        r = adapt.select_scheme(ffn1_counts(1 << 16, 1))
+        assert r.scheme_name == "table1"
+        assert r.scheme == TABLE1
+
+    def test_uniform_no_scheme_beats_entropy(self):
+        # Uniform over 256 symbols: entropy 8 bits, nothing compresses.
+        r = adapt.select_scheme(np.full(256, 1000.0))
+        assert abs(r.entropy_bits - 8.0) < 1e-9
+        assert r.expected_bits >= 8.0
+        assert r.compressibility <= 0.0
+        assert abs(r.ideal_compressibility) < 1e-12
+
+    def test_expected_bits_bounded_by_entropy(self):
+        for seed in range(3):
+            counts = ffn1_counts(1 << 14, seed)
+            r = adapt.select_scheme(counts)
+            assert r.expected_bits >= r.entropy_bits - 1e-9
+            assert r.compressibility <= r.ideal_compressibility + 1e-9
+
+    def test_drifted_histogram_changes_choice(self):
+        # Drift a smooth stream toward a zero spike: the selected
+        # scheme flips from Table 1 to Table 2 along the way.
+        smooth = adapt.select_scheme(ffn1_counts(1 << 15, 2))
+        spiked = ffn1_counts(1 << 15, 2)
+        spiked[0] += 0.5 * spiked.sum()
+        drifted = adapt.select_scheme(spiked)
+        assert smooth.scheme_name == "table1"
+        assert drifted.scheme_name == "table2"
+
+    def test_allow_search_never_worse(self):
+        for counts in (ffn1_counts(1 << 14, 5), ffn2_counts(1 << 14, 5),
+                       _dominant_counts(0.3)):
+            base = adapt.select_scheme(counts, allow_search=False)
+            searched = adapt.select_scheme(counts, allow_search=True)
+            assert searched.expected_bits <= base.expected_bits + 1e-9
+
+
+class TestCalibrateTables:
+    def test_tables_follow_selection(self):
+        counts = ffn2_counts(1 << 15, 3)
+        t = adapt.calibrate_tables(counts)
+        assert t.scheme == adapt.select_scheme(counts).scheme
+
+    def test_explicit_scheme_respected(self):
+        t = adapt.calibrate_tables(ffn2_counts(1 << 14, 4), scheme=TABLE1)
+        assert t.scheme == TABLE1
