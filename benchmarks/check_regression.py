@@ -59,6 +59,19 @@ METRIC_GATES = {
         # that would make ring look impossibly fast).
         "ring_vs_wire_floor_ratio": (">=", 1.0),
     },
+    "hierarchical_transport": {
+        # the multi-host schedule's reason to exist: at a pod x local
+        # group, ringing within the pod and bridging pods with ONE
+        # compressed exchange per hop group must never model slower
+        # than a flat ring that gates every hop at DCN speed — both
+        # times straight from the per-link-class cost model, not from
+        # choose_transport (tautology) — see
+        # benchmarks/transport_overlap.py ...
+        "hierarchical_vs_flat_ring_modeled_ratio": ("<=", 1.0),
+        # ... and it may not undercut the DCN bridge floor (L x (P-1)
+        # shard copies still cross the slow link).
+        "hierarchical_vs_dcn_floor_ratio": (">=", 1.0),
+    },
     "kv_cache_wire": {
         # the lossless byte-plane KV cache must beat the dense cache
         # through the REAL container wire (bf16 attention KV, the

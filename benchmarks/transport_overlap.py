@@ -17,7 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import (AlphaBetaModel, CommConfig, choose_transport,
-                        measure_decode_Bps, modeled_oneshot_time,
+                        measure_decode_Bps, modeled_flat_ring_time,
+                        modeled_hierarchical_oneshot_time,
+                        modeled_hierarchical_time, modeled_oneshot_time,
                         modeled_ring_time, transport_crossover_bytes)
 from repro.comm.calibrate import calibrate_for_tensor
 from repro.comm.planner import HOP_CHUNK_CANDIDATES, payload_wire_bytes
@@ -26,6 +28,10 @@ from repro.quant import e4m3
 
 AXIS_SIZE = 8
 PROD_SHARD_VALUE_BYTES = 256e6     # 64M f32 gradients per shard
+# The multi-host row: a 2-pod x 4-local group, the CI-simulated
+# topology (tests/test_hierarchical.py runs the same 2 x 4 split).
+POD_SIZE = 2
+LOCAL_SIZE = 4
 
 
 def _measure_decode_Bps(n: int) -> tuple[float, float, CommConfig]:
@@ -84,6 +90,46 @@ def run(n: int = 1 << 20):
         "hop_chunks": t.hop_chunks,
         "crossover_value_bytes": round(cross, 0),
     }]
+
+    # Multi-host (DCN-tier) transports over a pod x local group, all
+    # straight from the per-link-class cost model (NOT choose_transport
+    # — same anti-tautology rule as above). The flat ring is the
+    # modeled baseline only: it gates every hop at DCN speed and is not
+    # even executable over a two-axis group, which is exactly why the
+    # hierarchical schedule exists — it must never model slower.
+    hier = min(modeled_hierarchical_time(
+        model, wire, value_bytes, LOCAL_SIZE, POD_SIZE, h)
+        for h in HOP_CHUNK_CANDIDATES)
+    flat_ring = min(modeled_flat_ring_time(
+        model, wire, value_bytes, LOCAL_SIZE, POD_SIZE, h)
+        for h in HOP_CHUNK_CANDIDATES)
+    one_h = modeled_hierarchical_oneshot_time(
+        model, wire, value_bytes, LOCAL_SIZE, POD_SIZE)
+    t_h = choose_transport(wire, value_bytes, LOCAL_SIZE, model=model,
+                           pod_size=POD_SIZE)
+    # Physical floor: every hop group's bridge still moves (P-1) copies
+    # of the shard over the DCN, L times — modeling below that means
+    # the bridge lost its steady-state term.
+    dcn_floor = LOCAL_SIZE * (POD_SIZE - 1) * wire / model.link_Bps("dcn")
+    rows.append({
+        "name": "hierarchical_transport",
+        "us_per_call": measured_us,
+        "pod_size": POD_SIZE,
+        "local_size": LOCAL_SIZE,
+        "shard_value_MB": round(value_bytes / 1e6, 1),
+        "modeled_hierarchical_us": round(hier * 1e6, 1),
+        "modeled_flat_ring_us": round(flat_ring * 1e6, 1),
+        "modeled_oneshot_us": round(one_h * 1e6, 1),
+        # CI gates: ringing within the pod + one compressed bridge per
+        # hop group must never model slower than DCN-gating every hop
+        # (<= 1.0), without undercutting the DCN bridge floor (>= 1.0)
+        "hierarchical_vs_flat_ring_modeled_ratio":
+            round(hier / flat_ring, 4),
+        "hierarchical_vs_dcn_floor_ratio": round(hier / dcn_floor, 4),
+        "hierarchical_vs_oneshot_modeled_ratio": round(hier / one_h, 4),
+        "chosen_transport": t_h.kind,
+        "hop_chunks": t_h.hop_chunks,
+    })
 
     # And the small-payload side of the crossover — informational: with
     # hardware-like wire/decode rates one-shot wins here (per-message

@@ -25,16 +25,23 @@ from repro.comm.channel import (  # noqa: F401
     Channel,
     ChannelSpec,
     measure_decode_Bps,
+    measure_wire_Bps,
     open_channels,
 )
 from repro.comm.planner import (  # noqa: F401
+    HIERARCHICAL,
+    LINK_CLASSES,
     ONESHOT,
     RING,
+    TRANSPORT_KINDS,
     AlphaBetaModel,
     TransportConfig,
     choose_a2a_transport,
     choose_transport,
     modeled_a2a_ring_time,
+    modeled_flat_ring_time,
+    modeled_hierarchical_oneshot_time,
+    modeled_hierarchical_time,
     modeled_oneshot_time,
     modeled_ring_time,
     resolve_transport,

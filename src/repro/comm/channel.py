@@ -28,19 +28,26 @@ geometry — this is what used to be ``train_step._auto_axis_transports``.
 ``Channel.autotune`` closes the ROADMAP "autotuned hop size" item: it
 measures this host's decode throughput on a representative payload of
 the channel's own codec (the ``benchmarks/transport_overlap`` beta_decode
-measurement, packaged as :func:`measure_decode_Bps`), feeds it to the
-planner's alpha-beta model, and caches the tuned
+measurement, packaged as :func:`measure_decode_Bps`) and — given a
+``mesh`` — the per-axis WIRE bandwidth (:func:`measure_wire_Bps`, one
+timed ppermute per axis), feeds both to the planner's per-link-class
+alpha-beta model, and caches the tuned
 :class:`~repro.comm.planner.TransportConfig` in the channel's
 :class:`~repro.core.registry.CodecRegistry` keyed by
-``(scheme_id, axis, payload bucket, is_reduce)``. The cache
-serializes with the
+``(scheme_id, axis, payload bucket, is_reduce)`` plus the measured
+link constants per axis (``cache_link_constants``). Both caches
+serialize with the
 registry JSON, so a reloaded registry reuses the tuning — and any
 channel with ``transport="auto"`` bound to that registry picks it up
 before falling back to the modeled choice.
 
 ``open_channels(registry, mesh, ...)`` builds the per-tensor-type
-``{name: Channel}`` map in one call — the single seam where multi-host
-/ DCN-tier transports plug in later.
+``{name: Channel}`` map in one call. Multi-host DCN-tier transport is
+the ``ChannelSpec(pod_axis=..., pod_axis_size=...)`` binding: the
+collectives then run over the combined pod x local group (pod-major
+rank order) and the ``hierarchical`` transport rings within the pod
+while bridging pods with one compressed exchange per hop group
+(``repro.comm.transport``).
 
 The legacy functional API (``qlc_*``, ``compress_values``, ...) remains
 as thin deprecated wrappers over one-shot channels — bit-identical
@@ -83,13 +90,23 @@ class ChannelSpec:
         bare tables.
     ``transport``
         ``None``/``"oneshot"`` (legacy single collective), ``"ring"``
-        (ppermute pipeline), ``"auto"`` (planner/registry-cache choice
-        per call), or a concrete
-        :class:`~repro.comm.planner.TransportConfig`.
+        (ppermute pipeline), ``"hierarchical"`` (intra-pod ring +
+        compressed inter-pod bridge; needs ``pod_axis`` to differ from
+        ring), ``"auto"`` (planner/registry-cache choice per call), or
+        a concrete :class:`~repro.comm.planner.TransportConfig`.
     ``axis`` / ``axis_size``
         The mesh axis the collectives run over and its static size.
-        Ring and auto transports REQUIRE ``axis_size`` (the hop loop is
-        unrolled at trace time) — validated at construction.
+        Ring, hierarchical and auto transports REQUIRE ``axis_size``
+        (the hop loop is unrolled at trace time) — validated at
+        construction.
+    ``pod_axis`` / ``pod_axis_size``
+        Optional second (slow, DCN-tier) mesh axis. When bound, the
+        collectives run over the combined ``pod_axis_size x axis_size``
+        group in pod-major rank order (``g = pod_index * axis_size +
+        local_index``) and ``axis``/``axis_size`` keep describing the
+        LOCAL (fast, ICI) axis. ``"ring"`` cannot run over a pod-bound
+        channel (validated at construction); ``"hierarchical"`` without
+        a pod axis degrades to ``"ring"``.
     ``use_kernels`` / ``enabled`` / ``scale_dtype``
         Non-plan wire knobs; ``None`` keeps the codec's defaults.
     """
@@ -98,6 +115,8 @@ class ChannelSpec:
     transport: Any = None
     axis: Optional[str] = None
     axis_size: Optional[int] = None
+    pod_axis: Optional[str] = None
+    pod_axis_size: Optional[int] = None
     use_kernels: Optional[bool] = None
     enabled: Optional[bool] = None
     scale_dtype: Optional[str] = None
@@ -187,11 +206,11 @@ class Channel:
 
         transport = _resolve_transport_policy(spec.transport)
         kind = AUTO if transport == AUTO else transport.kind
-        if kind == "ring" and spec.axis is None:
+        if kind in ("ring", "hierarchical") and spec.axis is None:
             raise ValueError(
-                "ring transport needs a mesh axis; pass "
+                f"the {kind!r} transport needs a mesh axis; pass "
                 "ChannelSpec(axis=..., axis_size=...)")
-        if kind in ("ring", AUTO) and spec.axis is not None \
+        if kind in ("ring", "hierarchical", AUTO) and spec.axis is not None \
                 and spec.axis_size is None:
             raise ValueError(
                 f"the {kind!r} transport needs the static axis_size "
@@ -201,6 +220,28 @@ class Channel:
         if spec.axis_size is not None and spec.axis_size < 1:
             raise ValueError(f"axis_size must be >= 1, got "
                              f"{spec.axis_size}")
+        if spec.pod_axis is not None:
+            if spec.pod_axis == spec.axis:
+                raise ValueError(
+                    f"pod_axis {spec.pod_axis!r} must differ from the "
+                    "local axis")
+            if spec.pod_axis_size is None:
+                raise ValueError(
+                    "a pod-bound channel needs the static "
+                    "pod_axis_size (the bridge loop is unrolled at "
+                    f"trace time); pass ChannelSpec(pod_axis="
+                    f"{spec.pod_axis!r}, "
+                    f"pod_axis_size=mesh.shape[{spec.pod_axis!r}])")
+            if spec.pod_axis_size < 1:
+                raise ValueError(f"pod_axis_size must be >= 1, got "
+                                 f"{spec.pod_axis_size}")
+            if kind == "ring" and spec.pod_axis_size > 1:
+                raise ValueError(
+                    "kind='ring' is a single-axis neighbor ring and "
+                    "cannot run over a pod-bound channel; use "
+                    "'oneshot', 'hierarchical', or 'auto'")
+        elif spec.pod_axis_size not in (None, 1):
+            raise ValueError("pod_axis_size without pod_axis")
 
         object.__setattr__(self, "spec", spec)
         object.__setattr__(self, "registry", registry)
@@ -230,6 +271,29 @@ class Channel:
     @property
     def axis_size(self) -> Optional[int]:
         return self.spec.axis_size
+
+    @property
+    def pod_axis(self) -> Optional[str]:
+        return self.spec.pod_axis
+
+    @property
+    def pod_size(self) -> int:
+        """Pod-axis size (1 on a flat, single-tier channel)."""
+        if self.spec.pod_axis is None:
+            return 1
+        return int(self.spec.pod_axis_size)
+
+    @property
+    def group_size(self) -> Optional[int]:
+        """Total collective group size: ``pod_size * axis_size``."""
+        if self.axis_size is None:
+            return None
+        return self.pod_size * int(self.axis_size)
+
+    def _pod_kw(self) -> Dict[str, Any]:
+        if self.spec.pod_axis is None or self.pod_size <= 1:
+            return {}
+        return {"pod_axis": self.spec.pod_axis, "pod_size": self.pod_size}
 
     @property
     def transport(self):
@@ -267,11 +331,19 @@ class Channel:
         through the planner's distance-charged a2a model instead —
         all-gather-tuned cache entries don't transfer to the a2a's
         ppermute schedule, so the cache is skipped.
+
+        On a pod-bound channel ``axis_size`` is the LOCAL size; the
+        reduce unit divides by the combined group size, the cost model
+        is the per-link-class one (axis constants from the registry's
+        link cache when probed — :meth:`autotune`), and the candidates
+        are one-shot vs hierarchical (a flat ring cannot run over a
+        two-axis group).
         """
         d = int(axis_size if axis_size is not None
                 else (self.axis_size or 1))
+        P = self.pod_size
         k = self.cfg.chunk_symbols
-        unit = -(-int(n_values) // d) if is_reduce else int(n_values)
+        unit = -(-int(n_values) // (d * P)) if is_reduce else int(n_values)
         t = self._transport
         if t == AUTO:
             t = None
@@ -283,18 +355,38 @@ class Channel:
             if t is None:
                 wire = payload_wire_bytes(unit, k, self.cfg.capacity_words,
                                           self.cfg.pool_slots_per_1k)
-                if is_a2a:
+                model = self._linked_model()
+                if is_a2a and P == 1:
                     t = choose_a2a_transport(wire, 4.0 * unit, d,
-                                             model=self.model)
+                                             model=model)
                 else:
                     t = choose_transport(
-                        wire, 4.0 * unit, d, model=self.model,
-                        n_oneshot_decode_dispatches=d if is_reduce else 1)
-        if t.kind == "ring":
+                        wire, 4.0 * unit, d, model=model, pod_size=P,
+                        n_oneshot_decode_dispatches=(d * P if is_reduce
+                                                     else 1))
+        if t.kind in ("ring", "hierarchical"):
             n_chunks = max(1, -(-unit // k))
             t = dataclasses.replace(
                 t, hop_chunks=clamp_hop_chunks(t.hop_chunks, n_chunks))
         return t
+
+    def _linked_model(self, base: Optional[AlphaBetaModel] = None
+                      ) -> AlphaBetaModel:
+        """The channel's cost model with any MEASURED per-axis link
+        constants from the registry's link cache folded in
+        (``CodecRegistry.cache_link_constants`` — written by
+        :meth:`autotune`'s wire probe)."""
+        m = base or self.model or AlphaBetaModel()
+        if self.registry is None:
+            return m
+        for ax in (self.axis, self.spec.pod_axis):
+            if ax is None:
+                continue
+            e = self.registry.cached_link_constants(ax)
+            if e is not None:
+                m = m.with_link(e["link"], wire_Bps=e["wire_Bps"],
+                                alpha_s=e["alpha_s"])
+        return m
 
     # ---- local wire transforms ------------------------------------------
 
@@ -342,7 +434,8 @@ class Channel:
 
     def all_gather(self, x: jnp.ndarray, *, with_hist: bool = False):
         """All-gather this shard's float payload. Returns
-        ``(gathered f32 [axis_size * x.size], ok)``; ``with_hist``
+        ``(gathered f32 [group_size * x.size], ok)`` — rows in
+        pod-major rank order on a pod-bound channel; ``with_hist``
         appends this shard's encoded-symbol histogram i32[256]."""
         from repro.comm import transport as tr
         axis = self._require_axis()
@@ -351,7 +444,7 @@ class Channel:
             x, t.hop_chunks * self.cfg.chunk_symbols)
         out = tr.exchange_all_gather(
             flat, axis, self.tables, self.cfg, t, self.axis_size,
-            emit_hist=with_hist)
+            emit_hist=with_hist, **self._pod_kw())
         vals, ok = out[0], out[1]
         if with_hist:
             return vals[:, :n].reshape(-1), ok, out[2]
@@ -369,17 +462,21 @@ class Channel:
                 "reduce_scatter needs the static axis_size; pass "
                 "ChannelSpec(axis_size=mesh.shape[axis])")
         d = int(self.axis_size)
+        D = d * self.pod_size
         t = self.resolved_transport(x.size, is_reduce=True)
         flat, n = comp.pad_to_multiple(
-            x, d * t.hop_chunks * self.cfg.chunk_symbols)
-        seg = flat.shape[0] // d
-        xs = flat.reshape(d, seg)
+            x, D * t.hop_chunks * self.cfg.chunk_symbols)
+        seg = flat.shape[0] // D
+        xs = flat.reshape(D, seg)
         out = tr.exchange_reduce_scatter(
-            xs, axis, d, self.tables, self.cfg, t, emit_hist=with_hist)
+            xs, axis, d, self.tables, self.cfg, t, emit_hist=with_hist,
+            **self._pod_kw())
         acc, ok = out[0], out[1]
-        idx = jax.lax.axis_index(axis)
-        valid = jnp.clip(jnp.int32(n) - idx.astype(jnp.int32) * seg,
-                         0, seg)
+        idx = jax.lax.axis_index(axis).astype(jnp.int32)
+        if self.spec.pod_axis is not None and self.pod_size > 1:
+            idx += jax.lax.axis_index(
+                self.spec.pod_axis).astype(jnp.int32) * d
+        valid = jnp.clip(jnp.int32(n) - idx * seg, 0, seg)
         res = comp.ReduceScatterResult(segment=acc, valid=valid, ok=ok)
         if with_hist:
             return res, out[2]
@@ -402,18 +499,23 @@ class Channel:
         from repro.comm import transport as tr
         axis = self._require_axis()
         d = x.shape[0]
-        if self.axis_size is not None and int(self.axis_size) != d:
+        P = self.pod_size
+        if self.axis_size is not None \
+                and int(self.axis_size) * P != d:
             raise ValueError(
-                f"all_to_all payload has {d} rows but the channel is "
-                f"bound to axis_size={self.axis_size}")
+                f"all_to_all payload has {d} rows but the channel's "
+                f"group size is {int(self.axis_size) * P} "
+                f"(axis_size={self.axis_size}, pod_size={P})")
+        assert d % P == 0, (d, P)
         row = x.reshape(d, -1)
         n = row.shape[1]
-        t = self.resolved_transport(n, axis_size=d, is_a2a=True)
+        t = self.resolved_transport(n, axis_size=d // P, is_a2a=True)
         pad = (-n) % (t.hop_chunks * self.cfg.chunk_symbols)
         if pad:
             row = jnp.pad(row, ((0, 0), (0, pad)))
         out = tr.exchange_all_to_all(
-            row, axis, self.tables, self.cfg, t, d, emit_hist=with_hist)
+            row, axis, self.tables, self.cfg, t, d // P,
+            emit_hist=with_hist, **self._pod_kw())
         vals, ok = out[0], out[1]
         if with_hist:
             return vals[:, :n].reshape(x.shape), ok, out[2]
@@ -423,21 +525,35 @@ class Channel:
 
     def autotune(self, payload_bytes: int, *, is_reduce: bool = False,
                  probe_symbols: int = 1 << 15, repeats: int = 3,
-                 model: Optional[AlphaBetaModel] = None) -> "Channel":
-        """Measure decode throughput, pick the transport for a
-        ``payload_bytes`` per-shard unit, cache it, and return the
-        tuned channel.
+                 model: Optional[AlphaBetaModel] = None,
+                 mesh=None, axis_link: str = "ici",
+                 wire_probe_bytes: int = 1 << 22) -> "Channel":
+        """Measure decode throughput (and, with a ``mesh``, per-axis
+        wire bandwidth), pick the transport for a ``payload_bytes``
+        per-shard unit, cache it, and return the tuned channel.
 
-        The measurement is the ``benchmarks/transport_overlap``
+        The decode measurement is the ``benchmarks/transport_overlap``
         beta_decode probe (:func:`measure_decode_Bps`) run on a
         representative payload of THIS channel's codec (symbols sampled
-        from its calibration histogram). ``is_reduce=True`` tunes the
-        reduce-scatter use of the channel — the one-shot RS is charged
-        its per-rank accumulate dispatches, exactly like
-        :meth:`resolved_transport`'s modeled fallback. The tuned
+        from its calibration histogram). With ``mesh`` given, each of
+        the channel's axes is additionally wire-probed with one timed
+        ppermute (:func:`measure_wire_Bps`) — the local axis as the
+        ``axis_link`` class (``"ici"`` by default; pass ``"dcn"`` for
+        a flat channel bound directly on the slow axis), the pod axis
+        as ``"dcn"`` — and the
+        measured constants land in the registry's link cache
+        (``cache_link_constants``), where every later
+        :meth:`resolved_transport` (this channel's or any sibling's)
+        folds them into the planner model; without a mesh, previously
+        cached link constants are still applied.
+
+        ``is_reduce=True`` tunes the reduce-scatter use of the channel
+        — the one-shot RS is charged its per-rank accumulate
+        dispatches, exactly like :meth:`resolved_transport`'s modeled
+        fallback. The tuned
         :class:`~repro.comm.planner.TransportConfig` is cached in the
         channel's registry under ``(scheme_id, axis, payload bucket,
-        is_reduce)`` — the cache rides the registry JSON, so a
+        is_reduce)`` — both caches ride the registry JSON, so a
         reloaded registry reuses the tuning and every
         ``transport="auto"`` channel bound to it resolves to the
         cached config without re-measuring.
@@ -446,17 +562,30 @@ class Channel:
         if self.axis_size is None:
             raise ValueError("autotune needs the static axis_size")
         d = int(self.axis_size)
+        P = self.pod_size
         counts = None if self.entry is None else self.entry.counts
         decode_Bps, _ = measure_decode_Bps(
             self.tables, self.cfg, probe_symbols, counts=counts,
             repeats=repeats)
+        if mesh is not None:
+            for ax, link in ((axis, axis_link),
+                             (self.spec.pod_axis, "dcn")):
+                if ax is None or ax not in mesh.shape \
+                        or int(mesh.shape[ax]) < 2:
+                    continue
+                wire_Bps, _ = measure_wire_Bps(
+                    mesh, ax, wire_probe_bytes, repeats=repeats)
+                if self.registry is not None:
+                    self.registry.cache_link_constants(
+                        ax, link, wire_Bps=wire_Bps)
         base = model or self.model or AlphaBetaModel()
-        tuned_model = dataclasses.replace(base, decode_Bps=decode_Bps)
+        tuned_model = dataclasses.replace(
+            self._linked_model(base), decode_Bps=decode_Bps)
         n_values = max(1, int(payload_bytes) // 4)
         t = choose_transport(
             self.modeled_wire_bytes(n_values), float(payload_bytes), d,
-            model=tuned_model,
-            n_oneshot_decode_dispatches=d if is_reduce else 1)
+            model=tuned_model, pod_size=P,
+            n_oneshot_decode_dispatches=d * P if is_reduce else 1)
         if self.registry is not None and self.entry is not None:
             self.registry.cache_transport(
                 self.entry.scheme_id, axis, int(payload_bytes), t,
@@ -500,8 +629,47 @@ def measure_decode_Bps(tables, cfg, n_symbols: int, *, counts=None,
     return 4.0 * m / best, best
 
 
+def measure_wire_Bps(mesh, axis: str, payload_bytes: int = 1 << 22, *,
+                     repeats: int = 3) -> Tuple[float, float]:
+    """Measure per-hop wire bandwidth over one mesh axis.
+
+    Times a jitted single-hop neighbor ``ppermute`` of a
+    ``payload_bytes`` per-device f32 buffer over ``axis`` — the
+    alpha-beta model's per-link-class beta_wire constant, in payload
+    bytes per second per device. This is how ``Channel.autotune``
+    learns that the pod (DCN) axis is slower than the local (ICI) one
+    instead of assuming the class defaults in ``roofline.hw``. Returns
+    ``(wire_Bps, seconds_per_hop)``.
+
+    On a simulated multi-host mesh (fake CPU devices) the number is a
+    memcpy rate, not a network rate — meaningful for exercising the
+    plumbing, not for real tuning.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.parallel import sharding as shd
+    d = int(mesh.shape[axis])
+    if d < 2:
+        raise ValueError(f"axis {axis!r} has size {d}; nothing to probe")
+    n = max(1, int(payload_bytes) // 4)
+    perm = [(j, (j + 1) % d) for j in range(d)]
+    spec = PartitionSpec(axis)
+    hop = jax.jit(shd.shard_map_compat(
+        lambda a: jax.lax.ppermute(a, axis, perm),
+        mesh=mesh, in_specs=spec, out_specs=spec))
+    x = jax.device_put(jnp.zeros((d, n), jnp.float32),
+                       NamedSharding(mesh, spec))
+    jax.block_until_ready(hop(x))                         # compile
+    best = math.inf
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(hop(x))
+        best = min(best, time.perf_counter() - t0)
+    return 4.0 * n / best, best
+
+
 def open_channels(registry, mesh=None, spec_overrides=None, *,
                   axis: Optional[str] = None,
+                  pod_axis: Optional[str] = None,
                   transport: Any = None,
                   use_kernels: Optional[bool] = None,
                   model: Optional[AlphaBetaModel] = None
@@ -509,11 +677,11 @@ def open_channels(registry, mesh=None, spec_overrides=None, *,
     """Open one :class:`Channel` per registry tensor type.
 
     Returns ``{name: Channel}`` for every registered name. Defaults
-    (``axis``/``transport``/``use_kernels``) apply to all channels;
-    ``spec_overrides`` maps names to a :class:`ChannelSpec` (or a dict
-    of ChannelSpec kwargs) overriding them per type. ``axis_size`` is
-    filled in from ``mesh.shape[axis]`` whenever a spec names an axis
-    without a size.
+    (``axis``/``pod_axis``/``transport``/``use_kernels``) apply to all
+    channels; ``spec_overrides`` maps names to a :class:`ChannelSpec`
+    (or a dict of ChannelSpec kwargs) overriding them per type.
+    ``axis_size`` / ``pod_axis_size`` are filled in from
+    ``mesh.shape`` whenever a spec names an axis without a size.
 
         channels = open_channels(reg, mesh, axis="data",
                                  transport="auto",
@@ -527,10 +695,10 @@ def open_channels(registry, mesh=None, spec_overrides=None, *,
         spec = overrides.get(name)
         if spec is None:
             spec = ChannelSpec(codec=name, transport=transport, axis=axis,
-                               use_kernels=use_kernels)
+                               pod_axis=pod_axis, use_kernels=use_kernels)
         elif isinstance(spec, dict):
             kw = dict(codec=name, transport=transport, axis=axis,
-                      use_kernels=use_kernels)
+                      pod_axis=pod_axis, use_kernels=use_kernels)
             kw.update(spec)
             spec = ChannelSpec(**kw)
         elif not isinstance(spec, ChannelSpec):
@@ -542,6 +710,10 @@ def open_channels(registry, mesh=None, spec_overrides=None, *,
                 and mesh is not None and spec.axis in mesh.shape:
             spec = dataclasses.replace(spec,
                                        axis_size=int(mesh.shape[spec.axis]))
+        if spec.pod_axis is not None and spec.pod_axis_size is None \
+                and mesh is not None and spec.pod_axis in mesh.shape:
+            spec = dataclasses.replace(
+                spec, pod_axis_size=int(mesh.shape[spec.pod_axis]))
         out[name] = Channel(spec, registry=registry, model=model)
     return out
 
@@ -572,7 +744,7 @@ def transport_from_json(d):
 def spec_to_json(spec: ChannelSpec) -> Dict:
     """Placement/policy fields of a spec as JSON (the codec itself
     travels separately — registry JSON / container headers)."""
-    return {
+    out = {
         "transport": transport_to_json(spec.transport),
         "axis": spec.axis,
         "axis_size": spec.axis_size,
@@ -580,6 +752,12 @@ def spec_to_json(spec: ChannelSpec) -> Dict:
         "enabled": spec.enabled,
         "scale_dtype": spec.scale_dtype,
     }
+    # Only emitted when bound, so flat-channel manifests keep their
+    # pre-pod shape byte for byte.
+    if spec.pod_axis is not None:
+        out["pod_axis"] = spec.pod_axis
+        out["pod_axis_size"] = spec.pod_axis_size
+    return out
 
 
 def spec_from_json(d: Dict, codec=None, cfg=None) -> ChannelSpec:
@@ -589,6 +767,9 @@ def spec_from_json(d: Dict, codec=None, cfg=None) -> ChannelSpec:
         axis=d.get("axis"),
         axis_size=(None if d.get("axis_size") is None
                    else int(d["axis_size"])),
+        pod_axis=d.get("pod_axis"),
+        pod_axis_size=(None if d.get("pod_axis_size") is None
+                       else int(d["pod_axis_size"])),
         use_kernels=d.get("use_kernels"),
         enabled=d.get("enabled"),
         scale_dtype=d.get("scale_dtype"),

@@ -7,13 +7,19 @@ margin so the per-chunk escape probability is below
 fallback is ~never needed.
 
 Transport: an alpha-beta cost model (:class:`AlphaBetaModel`) selects
-between the one-shot transport (single ``all_gather``/``all_to_all`` of
-the full payload, decode strictly after the wire) and the ring transport
-(``ppermute`` hops with hop *k*'s decode overlapping hop *k+1*'s
-transfer — ``repro.comm.transport``), and sizes the ring's hop chunking.
-The model is deliberately simple: per-message latency alpha, link
-bandwidth beta_wire, decode throughput beta_decode, and a per-dispatch
-kernel overhead; ``choose_transport`` minimizes the modeled time.
+between the transports in :data:`TRANSPORT_KINDS` — one-shot (single
+``all_gather``/``all_to_all`` of the full payload, decode strictly
+after the wire), ring (``ppermute`` hops with hop *k*'s decode
+overlapping hop *k+1*'s transfer — ``repro.comm.transport``), and
+hierarchical (two-tier pod x local groups: intra-pod ring over the ICI
+link class with one compressed inter-pod bridge exchange per hop
+group over the DCN link class) — and sizes the ring's hop chunking.
+The model carries per-link-class constants (:data:`LINK_CLASSES`):
+per-message latency alpha and wire bandwidth beta for the ICI tier and
+for the DCN tier separately, plus decode throughput beta_decode and a
+per-dispatch kernel overhead; ``choose_transport`` minimizes the
+modeled time, and ``Channel.autotune`` replaces the first-order
+defaults with per-axis measured constants cached in the registry.
 """
 from __future__ import annotations
 
@@ -117,11 +123,19 @@ def effective_compression_ratio(plan: CommPlan,
 # Transport selection (one-shot vs ring, hop chunking)
 # --------------------------------------------------------------------------
 
+#: The valid ``TransportConfig.kind`` values, in one place: validation
+#: error messages, ``resolve_transport``, launcher ``--transport``
+#: choices, and the docs all enumerate THIS tuple, so a new kind (like
+#: ``"hierarchical"``, added with the multi-host tier) cannot drift out
+#: of any of them.
+TRANSPORT_KINDS = ("oneshot", "ring", "hierarchical")
+
+
 @dataclasses.dataclass(frozen=True)
 class TransportConfig:
     """Static transport selection for one compressed collective.
 
-    ``kind``:
+    ``kind`` (one of :data:`TRANSPORT_KINDS`):
       * ``"oneshot"`` — legacy path: one ``lax.all_gather`` /
         ``lax.all_to_all`` of the full compressed payload, decode runs
         strictly after the wire.
@@ -129,35 +143,50 @@ class TransportConfig:
         ``axis_size - 1`` hops and hop *k* is decoded (+ dequantized,
         and for reduce-scatter + accumulated) while hop *k+1* is in
         flight.
+      * ``"hierarchical"`` — two-tier schedule for a channel bound to a
+        pod axis AND a local axis: an intra-pod ring over the local
+        (ICI) axis with ONE compressed inter-pod bridge exchange per
+        hop group over the pod (DCN) axis, bridge *t+1* overlapping
+        hop group *t*'s decode. On a channel with no pod axis it
+        degrades to ``"ring"``.
 
-    ``hop_chunks`` (ring only) splits each hop's payload into that many
-    independently-compressed pieces so decode and transfer also overlap
-    *within* a hop — the cost model trades per-message latency (more
-    messages) against pipeline fill (smaller units).
+    ``hop_chunks`` (ring/hierarchical) splits each hop's payload into
+    that many independently-compressed pieces so decode and transfer
+    also overlap *within* a hop — the cost model trades per-message
+    latency (more messages) against pipeline fill (smaller units).
     """
-    kind: str = "oneshot"            # oneshot | ring
+    kind: str = "oneshot"            # see TRANSPORT_KINDS
     hop_chunks: int = 1
 
     def __post_init__(self):
-        if self.kind not in ("oneshot", "ring"):
-            raise ValueError(f"unknown transport kind {self.kind!r}")
+        if self.kind not in TRANSPORT_KINDS:
+            raise ValueError(
+                f"unknown transport kind {self.kind!r}; valid kinds: "
+                + ", ".join(repr(k) for k in TRANSPORT_KINDS))
         if self.hop_chunks < 1:
             raise ValueError("hop_chunks must be >= 1")
 
 
 ONESHOT = TransportConfig("oneshot")
 RING = TransportConfig("ring")
+HIERARCHICAL = TransportConfig("hierarchical")
 
 
 def resolve_transport(transport) -> TransportConfig:
-    """Normalize ``None`` (legacy one-shot) / str / TransportConfig."""
+    """Normalize ``None`` (legacy one-shot) / str / TransportConfig.
+
+    Strings must name a kind in :data:`TRANSPORT_KINDS` (validated by
+    ``TransportConfig.__post_init__``, which enumerates the valid kinds
+    in its error)."""
     if transport is None:
         return ONESHOT
     if isinstance(transport, TransportConfig):
         return transport
     if isinstance(transport, str):
         return TransportConfig(kind=transport)
-    raise TypeError(f"bad transport spec: {transport!r}")
+    raise TypeError(
+        f"bad transport spec: {transport!r} (expected None, a "
+        f"TransportConfig, or one of {TRANSPORT_KINDS})")
 
 
 #: Ring hop-chunk candidates the planner compares. Shared by
@@ -179,19 +208,38 @@ def clamp_hop_chunks(hop_chunks: int, n_chunks: int) -> int:
     return h
 
 
+#: Link classes the cost model distinguishes: ``"ici"`` — the intra-pod
+#: inter-chip interconnect a local mesh axis runs over — and ``"dcn"``
+#: — the cross-pod data-center network a pod axis crosses. Per-axis
+#: autotune probes cache constants for one of these classes in the
+#: registry (``CodecRegistry.cache_link_constants``).
+LINK_CLASSES = ("ici", "dcn")
+
+
 @dataclasses.dataclass(frozen=True)
 class AlphaBetaModel:
-    """alpha-beta cost model of one compressed-collective exchange.
+    """alpha-beta cost model of one compressed-collective exchange,
+    with per-link-class wire constants (:data:`LINK_CLASSES`).
 
-    * ``alpha_s`` — per-message latency (collective launch + first-byte),
-      paid once per one-shot collective and once per ring message.
-    * ``wire_Bps`` — link bandwidth the payload serializes through
-      (defaults to one v5e ICI link, ``roofline.hw.ICI_LINK_BW``).
+    * ``alpha_s`` / ``wire_Bps`` — ICI tier: per-message latency
+      (collective launch + first-byte) and link bandwidth for a LOCAL
+      mesh axis (defaults: 1us, one v5e ICI link
+      ``roofline.hw.ICI_LINK_BW``).
+    * ``dcn_alpha_s`` / ``dcn_wire_Bps`` — DCN tier: the same two
+      constants for a cross-pod axis (defaults
+      ``roofline.hw.DCN_LATENCY_S`` / ``hw.DCN_LINK_BW`` — an order of
+      magnitude slower on both axes, which is the whole reason the
+      hierarchical transport exists).
     * ``decode_Bps`` — fused decode→dequantize throughput in *decoded
       value bytes* per second (calibrate with a measured number, e.g.
       from ``benchmarks/transport_overlap.py``).
     * ``dispatch_s`` — per-kernel-dispatch overhead (one decode dispatch
       per ring hop piece).
+
+    ``wire_time(bytes, link=...)`` charges a transfer to one link
+    class; ``with_link(link, ...)`` folds measured per-axis constants
+    in (``Channel.autotune``'s wire probe → registry link cache →
+    here), replacing the shared first-order guesses.
 
     Topology note: every hop is charged one ``alpha`` + payload/``wire
     bandwidth``, which models the all-gather's neighbor-forwarding ring
@@ -199,17 +247,46 @@ class AlphaBetaModel:
     ppermutes; on a mesh axis that maps to one physical 1-D ring those
     cost up to ``s`` link traversals — :func:`modeled_a2a_ring_time`
     charges them (the a2a transport choice goes through
-    :func:`choose_a2a_transport`); the RS first-order model does not,
-    and per-axis measured constants (ROADMAP: multi-host ring) remain
-    the planned refinement there.
+    :func:`choose_a2a_transport`). A flat ring spanning pods is gated
+    by its DCN-crossing neighbor every step
+    (:func:`modeled_flat_ring_time`); the hierarchical schedule
+    (:func:`modeled_hierarchical_time`) keeps the per-hop ring on ICI
+    and batches the DCN crossings into per-hop-group bridges.
     """
     alpha_s: float = 1e-6
     wire_Bps: float = hw.ICI_LINK_BW
     decode_Bps: float = 200e9
     dispatch_s: float = 2e-6
+    dcn_alpha_s: float = hw.DCN_LATENCY_S
+    dcn_wire_Bps: float = hw.DCN_LINK_BW
 
-    def wire_time(self, wire_bytes: float) -> float:
-        return self.alpha_s + wire_bytes / self.wire_Bps
+    def _check_link(self, link: str):
+        if link not in LINK_CLASSES:
+            raise ValueError(f"unknown link class {link!r}; valid "
+                             f"classes: {LINK_CLASSES}")
+
+    def link_alpha(self, link: str = "ici") -> float:
+        self._check_link(link)
+        return self.dcn_alpha_s if link == "dcn" else self.alpha_s
+
+    def link_Bps(self, link: str = "ici") -> float:
+        self._check_link(link)
+        return self.dcn_wire_Bps if link == "dcn" else self.wire_Bps
+
+    def with_link(self, link: str, *, alpha_s: Optional[float] = None,
+                  wire_Bps: Optional[float] = None) -> "AlphaBetaModel":
+        """Copy with ``link``'s measured constants substituted."""
+        self._check_link(link)
+        kw = {}
+        pre = "dcn_" if link == "dcn" else ""
+        if alpha_s is not None:
+            kw[pre + "alpha_s"] = float(alpha_s)
+        if wire_Bps is not None:
+            kw[pre + "wire_Bps"] = float(wire_Bps)
+        return dataclasses.replace(self, **kw) if kw else self
+
+    def wire_time(self, wire_bytes: float, link: str = "ici") -> float:
+        return self.link_alpha(link) + wire_bytes / self.link_Bps(link)
 
     def decode_time(self, value_bytes: float) -> float:
         return self.dispatch_s + value_bytes / self.decode_Bps
@@ -274,24 +351,125 @@ def modeled_ring_time(model: AlphaBetaModel, shard_wire_bytes: float,
             + unit_dec)
 
 
+def modeled_hierarchical_time(model: AlphaBetaModel,
+                              shard_wire_bytes: float,
+                              shard_value_bytes: float, local_size: int,
+                              pod_size: int,
+                              hop_chunks: int = 1) -> float:
+    """Hierarchical (ring-of-rings) over a ``pod_size x local_size``
+    group: the intra-pod neighbor ring runs over the ICI link class and
+    every hop group's unit is also bridged across pods by ONE
+    compressed DCN exchange, so per pipeline unit the cost is
+    ``max(ICI hop, DCN bridge of pod_size-1 payload copies, pod_size
+    decodes)`` — the DCN transfers land spread across the ring instead
+    of gating every neighbor step (contrast
+    :func:`modeled_flat_ring_time`). Degenerates to the flat ring model
+    for ``pod_size == 1``."""
+    L, P = local_size, pod_size
+    if P <= 1:
+        return modeled_ring_time(model, shard_wire_bytes,
+                                 shard_value_bytes, L, hop_chunks)
+    h = hop_chunks
+    ici = model.wire_time(shard_wire_bytes / h, link="ici")
+    bridge = model.wire_time((P - 1) * shard_wire_bytes / h, link="dcn")
+    # Each pipeline unit lands P pod copies of one hop-group chunk; of
+    # the resulting L*P row decodes the device's own row overlaps the
+    # pipeline fill (same convention as :func:`modeled_ring_time`), so
+    # the steady state carries L*P - 1 row decodes spread over the
+    # L * h units.
+    dec = (P - 1.0 / L) * model.decode_time(shard_value_bytes / h)
+    n_units = L * h
+    # fill (hop group 0 needs no ICI hop — its bridge starts
+    # immediately, and group 1's ICI hop overlaps it) + overlapped
+    # steady state + drain (the last unit's pod decodes).
+    return bridge + (n_units - 1) * max(ici, bridge, dec) + dec
+
+
+def modeled_flat_ring_time(model: AlphaBetaModel, shard_wire_bytes: float,
+                           shard_value_bytes: float, local_size: int,
+                           pod_size: int, hop_chunks: int = 1) -> float:
+    """A single flat neighbor ring laid across the combined
+    ``pod_size x local_size`` group (pod-major rank order): every one of
+    the ``d - 1`` hop steps includes a pod-boundary crossing, so the
+    DCN laggard gates the WHOLE step — the wire term is charged at the
+    DCN link class. This is the topology-blind baseline the
+    hierarchical schedule exists to beat
+    (``hierarchical_vs_flat_ring_modeled_ratio`` in
+    ``benchmarks/transport_overlap.py``)."""
+    d = local_size * pod_size
+    if pod_size <= 1:
+        return modeled_ring_time(model, shard_wire_bytes,
+                                 shard_value_bytes, local_size, hop_chunks)
+    if d <= 1:
+        return model.decode_time(shard_value_bytes)
+    h = hop_chunks
+    unit_wire = model.wire_time(shard_wire_bytes / h, link="dcn")
+    unit_dec = model.decode_time(shard_value_bytes / h)
+    n_units = (d - 1) * h
+    return (unit_wire + (n_units - 1) * max(unit_wire, unit_dec)
+            + unit_dec)
+
+
+def modeled_hierarchical_oneshot_time(model: AlphaBetaModel,
+                                      shard_wire_bytes: float,
+                                      shard_value_bytes: float,
+                                      local_size: int, pod_size: int,
+                                      n_decode_dispatches: int = 1
+                                      ) -> float:
+    """One-shot over the combined ``pod_size x local_size`` group: the
+    single collective's ICI and DCN transfers proceed concurrently
+    (different links), decode of all ``d`` shards runs strictly after
+    the slower of the two."""
+    L, P = local_size, pod_size
+    d = L * P
+    ici = model.wire_time((L - 1) * shard_wire_bytes, link="ici")
+    dcn = (model.wire_time((P - 1) * L * shard_wire_bytes, link="dcn")
+           if P > 1 else 0.0)
+    return (max(ici, dcn) + shard_value_bytes * d / model.decode_Bps
+            + max(1, n_decode_dispatches) * model.dispatch_s)
+
+
 def choose_transport(shard_wire_bytes: float, shard_value_bytes: float,
                      axis_size: int,
                      model: Optional[AlphaBetaModel] = None,
                      hop_chunk_candidates: Sequence[int]
                      = HOP_CHUNK_CANDIDATES,
                      n_oneshot_decode_dispatches: int = 1,
+                     pod_size: int = 1,
                      ) -> TransportConfig:
     """Pick the transport (and ring hop chunking) minimizing modeled time.
 
     ``shard_wire_bytes`` / ``shard_value_bytes`` describe ONE device's
-    compressed shard; ``axis_size`` is the collective's axis size. Small
-    payloads stay one-shot (per-message alpha dominates); above the
-    crossover the ring's decode/transfer overlap wins.
+    compressed shard; ``axis_size`` is the collective's LOCAL axis size.
+    Small payloads stay one-shot (per-message alpha dominates); above
+    the crossover the ring's decode/transfer overlap wins.
     ``n_oneshot_decode_dispatches``: see ``modeled_oneshot_time``.
+
+    ``pod_size > 1`` prices the two-tier ``pod_size x axis_size`` group
+    instead: one-shot over the combined group
+    (:func:`modeled_hierarchical_oneshot_time`) vs the hierarchical
+    ring-of-rings (:func:`modeled_hierarchical_time`). The
+    topology-blind flat ring (:func:`modeled_flat_ring_time`) is NOT a
+    candidate there — a neighbor ring over a two-axis group has no
+    single-axis ``ppermute`` schedule to execute — it exists as the
+    modeled baseline the hierarchical schedule is gated against.
     """
     model = model or AlphaBetaModel()
-    if axis_size <= 1:
+    P = max(1, int(pod_size))
+    if axis_size * P <= 1:
         return ONESHOT
+    if P > 1:
+        best = ("oneshot", 1,
+                modeled_hierarchical_oneshot_time(
+                    model, shard_wire_bytes, shard_value_bytes,
+                    axis_size, P, n_oneshot_decode_dispatches))
+        for h in hop_chunk_candidates:
+            t = modeled_hierarchical_time(model, shard_wire_bytes,
+                                          shard_value_bytes, axis_size,
+                                          P, h)
+            if t < best[2]:
+                best = ("hierarchical", h, t)
+        return TransportConfig(kind=best[0], hop_chunks=best[1])
     best = ("oneshot", 1,
             modeled_oneshot_time(model, shard_wire_bytes,
                                  shard_value_bytes, axis_size,

@@ -1,4 +1,5 @@
-"""Transport layer for the compressed collectives: one-shot vs ring.
+"""Transport layer for the compressed collectives: one-shot, ring, and
+hierarchical (the kinds in ``planner.TRANSPORT_KINDS``).
 
 The paper's value proposition is that QLC decode is cheap enough to sit
 on the critical path of bandwidth-bound collectives — but only if it
@@ -7,7 +8,9 @@ moves:
 
 * **one-shot** (legacy): a single ``lax.all_gather`` / ``lax.all_to_all``
   of the full payload; every decode runs strictly after the last byte
-  lands. Decode latency adds serially to wire latency.
+  lands. Decode latency adds serially to wire latency. On a channel
+  bound to a pod axis the collective runs over the combined
+  ``(pod_axis, axis)`` tuple group.
 
 * **ring**: the payload moves in ``axis_size - 1`` ``lax.ppermute``
   hops. The graph is structured so hop *k*'s decode (+ dequantize, and
@@ -19,24 +22,39 @@ moves:
   independently-compressed pieces for finer-grained overlap (the
   planner's alpha-beta model picks it).
 
+* **hierarchical** (multi-host): for a ``pod_size x local_size`` group
+  (``pod_axis`` crossing the slow DCN tier, the local axis on ICI),
+  an intra-pod ring over the local axis where each hop group's unit is
+  bridged across pods by ONE compressed pod-axis exchange — the
+  original compressed bytes, never partial sums, cross the DCN — and
+  decode of hop group *t* overlaps both the next local hop and bridge
+  *t+1*. See the per-collective schedules below.
+
 Schedules (d = axis size, i = this device):
 
 * all-gather — classic neighbor ring: forward what arrived last hop on
   the fixed perm ``i -> i+1``; hop *s* delivers peer ``i-s``'s original
   payload, which is decoded into its output row while hop *s+1* is in
-  flight.
+  flight. Hierarchical: the arrived payload is additionally
+  ``all_gather``'d over the pod axis (the bridge), and all ``pod_size``
+  copies decode into their pod-major output rows.
 * reduce-scatter / all-to-all — rotated pairwise exchange: hop *s* uses
   perm ``j -> j+s``, every device sends its ORIGINAL compressed segment
   destined for peer ``j+s`` and receives peer ``i-s``'s segment for
   itself. No partial sums ever cross the wire, so nothing is
   re-quantized or re-encoded mid-flight — hop count trades for exact
-  transport equivalence.
+  transport equivalence. Hierarchical: hop group *t* first bridges the
+  ``local_size`` segments destined for pod ``q+t`` with one distance-t
+  pod ppermute, then the intra-pod rotated exchange delivers them.
 
-**Bit-identity contract**: both transports move the same compressed
+**Bit-identity contract**: all transports move the same compressed
 bytes and decode them with the same code, and the reduce-scatter runs
-the identical per-row-piece accumulate op sequence in fixed ring
-arrival order (own segment, then peers ``i-1, i-2, ...`` —
-``_accumulate_row_pieces``). One-shot and ring therefore produce bit-identical
+the identical per-row-piece accumulate op sequence in a fixed arrival
+order — source ``((q-t) mod P, (l-s) mod L)`` for pod distance ``t``
+major, local ring distance ``s`` minor, which for one pod (``P == 1``)
+is exactly the classic ring order (own segment, then peers ``i-1,
+i-2, ...``) — ``_accumulate_row_pieces``. One-shot, ring, and
+hierarchical therefore produce bit-identical
 outputs and identical ``ok`` flags — transports are interchangeable
 per collective, selected by the planner's cost model. This holds for
 ``hop_chunks > 1`` too: each independently-compressed piece carries an
@@ -87,6 +105,29 @@ def _neighbor_perm(d: int):
 
 def _shift_perm(d: int, s: int):
     return [(j, (j + s) % d) for j in range(d)]
+
+
+def _resolve_pod(t: TransportConfig, pod_axis, pod_size):
+    """Normalize ``(transport, pod binding)`` for one exchange.
+
+    Without a pod axis ``hierarchical`` degrades to ``ring`` (its
+    intra-pod tier) so flat channels can carry a hierarchical config
+    unchanged. With one, ``ring`` is rejected: a flat neighbor ring
+    over a two-axis group is not expressible (``ppermute`` takes a
+    single axis name) — it exists only as the planner's modeled
+    baseline (``modeled_flat_ring_time``).
+    """
+    P = int(pod_size) if pod_axis is not None else 1
+    if pod_axis is None or P <= 1:
+        if t.kind == "hierarchical":
+            t = dataclasses.replace(t, kind="ring")
+        return t, None, 1
+    if t.kind == "ring":
+        raise ValueError(
+            "kind='ring' is a single-axis neighbor ring and cannot run "
+            "over a pod-bound channel (lax.ppermute takes one axis "
+            "name); use 'oneshot' or 'hierarchical'")
+    return t, pod_axis, P
 
 
 def _compress_pieces(flat: jnp.ndarray, hop_chunks: int, tables, cfg,
@@ -190,19 +231,27 @@ def ring_stream(local, axis_name, axis_size: int, consume, init):
 def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
                         t: TransportConfig,
                         axis_size: Optional[int] = None,
-                        emit_hist: bool = False):
+                        emit_hist: bool = False,
+                        pod_axis=None, pod_size: int = 1):
     """Gather every peer's padded shard ``flat [seg]`` -> ``[d, seg]``.
 
     Returns ``(vals f32 [d, seg], ok bool [])``; with ``emit_hist``
     additionally the i32[256] histogram of the LOCAL shard's encoded
     symbols (telemetry tap — per-device; psum it for a global view).
+
+    With ``pod_axis`` bound the group is the combined
+    ``pod_size x axis_size`` mesh slab and the output has
+    ``pod_size * axis_size`` rows in pod-major global-rank order
+    (``g = q * axis_size + l``); ``axis_size`` stays the LOCAL size.
     """
+    t, pod_axis, P = _resolve_pod(t, pod_axis, pod_size)
     if t.kind == "oneshot":
         c = comp._compress_values(flat, tables, cfg, emit_hist=emit_hist)
         payload, scales = c[0], c[1]
+        axes = (pod_axis, axis_name) if pod_axis is not None else axis_name
         g_payload = comp.WirePayload(*jax.tree.map(
-            lambda a: jax.lax.all_gather(a, axis_name), payload))
-        g_scales = jax.lax.all_gather(scales, axis_name)
+            lambda a: jax.lax.all_gather(a, axes), payload))
+        g_scales = jax.lax.all_gather(scales, axes)
         vals, ok = comp._decompress_values(g_payload, g_scales, tables, cfg)
         if emit_hist:
             return vals, jnp.all(ok), c[2]
@@ -211,6 +260,33 @@ def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
     d = _require_axis_size(t, axis_size)
     h = t.hop_chunks
     pieces, hist = _compress_pieces(flat, h, tables, cfg, emit_hist)
+
+    if t.kind == "hierarchical":
+        # Intra-pod neighbor ring; each arriving local hop buffer is
+        # bridged by ONE pod-axis all_gather of the original compressed
+        # bytes, and all P pod copies decode into their pod-major
+        # output rows while the next local hop is in flight.
+        def consume(carry, buf, src, _hop):
+            out, ok = carry
+            bridged = [jax.tree.map(
+                lambda a: jax.lax.all_gather(a, pod_axis), pc)
+                for pc in buf]
+            for qq in range(P):
+                row = [jax.tree.map(lambda a: a[qq], br) for br in bridged]
+                for p, (pp, ps) in enumerate(row):
+                    vals, _ = comp._decompress_values(pp, ps, tables, cfg)
+                    out = jax.lax.dynamic_update_slice(
+                        out, vals.reshape(1, 1, -1),
+                        (jnp.int32(qq) * d + src, jnp.int32(p), 0))
+                ok &= _row_pool_ok(row)
+            return out, ok
+
+        out0 = jnp.zeros((P * d, h, flat.shape[0] // h), jnp.float32)
+        out, ok = ring_stream(pieces, axis_name, d, consume,
+                              (out0, jnp.bool_(True)))
+        if emit_hist:
+            return out.reshape(P * d, -1), ok, hist
+        return out.reshape(P * d, -1), ok
 
     def consume(carry, buf, src, _hop):
         out, ok = carry
@@ -235,21 +311,30 @@ def exchange_all_gather(flat: jnp.ndarray, axis_name, tables, cfg,
 
 def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
                             tables, cfg, t: TransportConfig,
-                            emit_hist: bool = False):
+                            emit_hist: bool = False,
+                            pod_axis=None, pod_size: int = 1):
     """Reduce-scatter of ``xs [d, seg]`` (row j = this device's summand
     of peer j's output segment). Returns ``(acc f32 [seg], ok)``; with
     ``emit_hist`` additionally the i32[256] histogram of ALL symbols
     this device encoded (every row it contributed).
 
     Every transport quantizes+encodes each segment exactly once and
-    sums dequantized f32 at the destination in ring arrival order —
+    sums dequantized f32 at the destination in the canonical
+    ``(pod distance, local ring distance)`` arrival order —
     bit-identical across transports.
+
+    With ``pod_axis`` bound, ``axis_size`` is the LOCAL size, ``xs``
+    has ``pod_size * axis_size`` rows in pod-major global-rank order,
+    and row ``g`` is the summand for combined rank ``g``.
     """
+    t, pod_axis, P = _resolve_pod(t, pod_axis, pod_size)
     d = axis_size
     h = t.hop_chunks
     pieces, hist = _compress_pieces(xs, h, tables, cfg,
-                                    emit_hist)      # h trees, lead [d]
+                                    emit_hist)    # h trees, lead [P*d]
     my = jax.lax.axis_index(axis_name)
+    q = (jax.lax.axis_index(pod_axis) if pod_axis is not None
+         else jnp.int32(0))
 
     def row_pieces(idx):
         return [_tree_row(pc, idx) for pc in pieces]
@@ -258,8 +343,9 @@ def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
     ok = jnp.bool_(True)
 
     if t.kind == "oneshot":
+        axes = (pod_axis, axis_name) if pod_axis is not None else axis_name
         a2a = lambda a: jax.lax.all_to_all(                 # noqa: E731
-            a, axis_name, split_axis=0, concat_axis=0, tiled=True)
+            a, axes, split_axis=0, concat_axis=0, tiled=True)
         r_pieces = [(comp.WirePayload(*jax.tree.map(a2a, pp)), a2a(ps))
                     for pp, ps in pieces]
         # Decode strictly AFTER the full exchange (that is what makes
@@ -271,11 +357,40 @@ def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
         # against the ring's in-kernel accumulate, and no graph-level
         # fence reliably pins that down (_accumulate_row_pieces); the
         # planner charges one-shot RS for the d dispatches.
-        for s in range(d):
-            idx = jnp.mod(my - s, d)
-            accs, ok = _accumulate_row_pieces(
-                accs, [_tree_row(pc, idx) for pc in r_pieces], tables,
-                cfg, ok)
+        # Arrival order is the canonical (tp, s) nesting; at P == 1 it
+        # is exactly the classic flat order (my - s) mod d.
+        for tp in range(P):
+            for s in range(d):
+                idx = jnp.mod(q - tp, P) * d + jnp.mod(my - s, d)
+                accs, ok = _accumulate_row_pieces(
+                    accs, [_tree_row(pc, idx) for pc in r_pieces],
+                    tables, cfg, ok)
+        if emit_hist:
+            return jnp.concatenate(accs), ok, hist
+        return jnp.concatenate(accs), ok
+
+    if t.kind == "hierarchical":
+        # Hop group tp: slice the d ORIGINAL compressed segments
+        # destined for pod q+tp, bridge them with one distance-tp pod
+        # ppermute (after which this device holds source (q-tp, my)'s
+        # segments for its own pod), then the intra-pod rotated
+        # exchange delivers source ((q-tp) mod P, (my-s) mod d)'s
+        # segment at local step s — the canonical accumulate order.
+        for tp in range(P):
+            start = jnp.mod(q + tp, P) * d
+            grp = [jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, start, d,
+                                                       axis=0), pc)
+                for pc in pieces]
+            if tp > 0:
+                grp = _tree_permute(grp, pod_axis, _shift_perm(P, tp))
+            for s in range(d):
+                unit = [_tree_row(g, jnp.mod(my + s, d)) for g in grp]
+                if s > 0:
+                    unit = _tree_permute(unit, axis_name,
+                                         _shift_perm(d, s))
+                accs, ok = _accumulate_row_pieces(accs, unit, tables,
+                                                  cfg, ok)
         if emit_hist:
             return jnp.concatenate(accs), ok, hist
         return jnp.concatenate(accs), ok
@@ -303,7 +418,8 @@ def exchange_reduce_scatter(xs: jnp.ndarray, axis_name, axis_size: int,
 def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
                         t: TransportConfig,
                         axis_size: Optional[int] = None,
-                        emit_hist: bool = False):
+                        emit_hist: bool = False,
+                        pod_axis=None, pod_size: int = 1):
     """All-to-all of ``rows [d, n]`` (row j -> peer j); returns
     ``(vals f32 [d, n], ok)`` — with ``emit_hist`` additionally the
     i32[256] histogram of all symbols this device encoded — where
@@ -317,13 +433,21 @@ def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
     cost — including the ``s`` link traversals a distance-``s``
     ppermute serializes through — is ``planner.modeled_a2a_ring_time``,
     which drives the ``"auto"`` selection.
+
+    With ``pod_axis`` bound, ``rows`` has ``pod_size * axis_size``
+    rows keyed by pod-major combined rank (``axis_size`` = LOCAL size)
+    and the hierarchical schedule moves each destination-pod group of
+    ``axis_size`` original compressed rows over ONE distance-``tp``
+    pod ppermute before the intra-pod rotated exchange delivers them.
     """
-    d = rows.shape[0]
+    t, pod_axis, P = _resolve_pod(t, pod_axis, pod_size)
+    dt = rows.shape[0]                    # combined group size P * L
     if t.kind == "oneshot":
         c = comp._compress_values(rows, tables, cfg, emit_hist=emit_hist)
         payload, scales = c[0], c[1]
+        axes = (pod_axis, axis_name) if pod_axis is not None else axis_name
         a2a = lambda a: jax.lax.all_to_all(                 # noqa: E731
-            a, axis_name, split_axis=0, concat_axis=0, tiled=True)
+            a, axes, split_axis=0, concat_axis=0, tiled=True)
         r_payload = comp.WirePayload(*jax.tree.map(a2a, payload))
         r_scales = a2a(scales)
         vals, ok = comp._decompress_values(r_payload, r_scales, tables, cfg)
@@ -331,14 +455,46 @@ def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
             return vals, jnp.all(ok), c[2]
         return vals, jnp.all(ok)
 
-    # d is static from rows.shape; an explicit axis_size must agree.
-    assert axis_size is None or int(axis_size) == d, (axis_size, d)
+    # The LOCAL size is static from rows.shape; an explicit axis_size
+    # must agree.
+    d = dt // P
+    assert d * P == dt, (dt, P)
+    assert axis_size is None or int(axis_size) == d, (axis_size, d, P)
     h = t.hop_chunks
     pieces, hist = _compress_pieces(rows, h, tables, cfg,
-                                    emit_hist)       # h trees, lead [d]
+                                    emit_hist)      # h trees, lead [dt]
     my = jax.lax.axis_index(axis_name)
-    out = jnp.zeros((d, h, rows.shape[-1] // h), jnp.float32)
+    out = jnp.zeros((dt, h, rows.shape[-1] // h), jnp.float32)
     ok = jnp.bool_(True)
+
+    if t.kind == "hierarchical":
+        # Same movement as the hierarchical reduce-scatter — hop group
+        # tp bridges the d original rows destined for pod q+tp over one
+        # distance-tp pod ppermute, then the intra-pod rotated exchange
+        # delivers them — but the delivered unit is scattered into the
+        # source's pod-major output row instead of accumulated.
+        q = jax.lax.axis_index(pod_axis)
+        for tp in range(P):
+            start = jnp.mod(q + tp, P) * d
+            grp = [jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, start, d,
+                                                       axis=0), pc)
+                for pc in pieces]
+            if tp > 0:
+                grp = _tree_permute(grp, pod_axis, _shift_perm(P, tp))
+            for s in range(d):
+                src = jnp.mod(q - tp, P) * d + jnp.mod(my - s, d)
+                unit = [_tree_row(g, jnp.mod(my + s, d)) for g in grp]
+                if s > 0:
+                    unit = _tree_permute(unit, axis_name,
+                                         _shift_perm(d, s))
+                for p, (pp, ps) in enumerate(unit):
+                    vals, _ = comp._decompress_values(pp, ps, tables, cfg)
+                    out = jax.lax.dynamic_update_slice(
+                        out, vals.reshape(1, 1, -1),
+                        (src, jnp.int32(p), 0))
+                ok &= _row_pool_ok(unit)
+        return out.reshape(dt, -1), ok
 
     # Own row needs no wire but the same decode (a2a keeps the local
     # row quantized, matching the one-shot path bit for bit).
@@ -352,4 +508,4 @@ def exchange_all_to_all(rows: jnp.ndarray, axis_name, tables, cfg,
             out = jax.lax.dynamic_update_slice(
                 out, vals.reshape(1, 1, -1), (src, jnp.int32(p), 0))
         ok &= _row_pool_ok(unit)
-    return out.reshape(d, -1), ok
+    return out.reshape(dt, -1), ok

@@ -42,6 +42,11 @@ REGISTRY_VERSION = 1
 #: scheme-id is carried in a u32 header field / u8 manifest fields.
 MAX_SCHEME_ID = 0xFFFF
 
+#: Field names of the autotuned-transport cache key, in key order —
+#: the normative spelling documented in docs/transports.md (the docs
+#: consistency test asserts the doc matches this tuple).
+TRANSPORT_CACHE_KEY = ("scheme_id", "axis", "payload_bucket", "is_reduce")
+
 
 def payload_bucket(payload_bytes: int) -> int:
     """Power-of-two bucket of a payload size (``ceil(log2(bytes))``).
@@ -126,6 +131,11 @@ class CodecRegistry:
         # reload.
         self._transport_cache: Dict[Tuple[int, str, int, bool],
                                     "TransportConfig"] = {}
+        # axis name -> {"link", "wire_Bps", "alpha_s"}; measured wire
+        # constants per mesh axis (Channel.measure_wire_Bps), consumed
+        # by the per-link-class AlphaBetaModel the planner prices
+        # hierarchical transports with.
+        self._link_cache: Dict[str, Dict] = {}
 
     # ---- registration ----------------------------------------------------
 
@@ -325,6 +335,41 @@ class CodecRegistry:
         """Read-only view of the tuning cache (tests / diagnostics)."""
         return dict(self._transport_cache)
 
+    # ---- measured per-link-class constants (Channel.autotune) ------------
+
+    def cache_link_constants(self, axis: str, link: str, *,
+                             wire_Bps: float,
+                             alpha_s: Optional[float] = None):
+        """Record measured alpha/beta constants for one mesh axis.
+
+        ``link`` is the axis's link class (``planner.LINK_CLASSES``) —
+        the data axis rides ICI, the pod axis DCN. ``wire_Bps`` is the
+        measured per-hop wire bandwidth (``Channel.measure_wire_Bps``);
+        ``alpha_s`` optionally overrides the class's default latency.
+        Serialized with the registry, so one probe run serves every
+        later session on the same topology
+        (``cached_link_constants``)."""
+        from repro.comm.planner import LINK_CLASSES
+        if link not in LINK_CLASSES:
+            raise ValueError(f"unknown link class {link!r}; "
+                             f"valid classes: {LINK_CLASSES}")
+        wire_Bps = float(wire_Bps)
+        if not wire_Bps > 0:
+            raise ValueError(f"wire_Bps must be positive, got {wire_Bps}")
+        self._link_cache[str(axis)] = {
+            "link": link, "wire_Bps": wire_Bps,
+            "alpha_s": None if alpha_s is None else float(alpha_s)}
+
+    def cached_link_constants(self, axis: str) -> Optional[Dict]:
+        """Measured constants for ``axis`` (``{"link", "wire_Bps",
+        "alpha_s"}``), or ``None`` when that axis was never probed."""
+        e = self._link_cache.get(str(axis))
+        return None if e is None else dict(e)
+
+    def link_cache(self) -> Dict[str, Dict]:
+        """Read-only view of the per-axis link cache."""
+        return {a: dict(e) for a, e in self._link_cache.items()}
+
     # ---- multi-LUT batched decode operands -------------------------------
 
     def stacked_decode_tables(
@@ -382,6 +427,10 @@ class CodecRegistry:
                  "hop_chunks": t.hop_chunks}
                 for (sid, axis, bucket, red), t
                 in sorted(self._transport_cache.items())]
+        if self._link_cache:
+            out["link_cache"] = [
+                {"axis": axis, **e}
+                for axis, e in sorted(self._link_cache.items())]
         return out
 
     def to_json(self) -> str:
@@ -424,6 +473,10 @@ class CodecRegistry:
                      bool(c.get("is_reduce", False)))] = TransportConfig(
                         kind=c["kind"],
                         hop_chunks=int(c.get("hop_chunks", 1)))
+        for c in d.get("link_cache", []):
+            reg.cache_link_constants(
+                c["axis"], c["link"], wire_Bps=c["wire_Bps"],
+                alpha_s=c.get("alpha_s"))
         return reg
 
     @classmethod

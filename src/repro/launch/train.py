@@ -41,16 +41,30 @@ def main():
     ap.add_argument("--reduced", action="store_true",
                     help="small same-family config (CPU verification)")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="leading 'pod' (DCN-tier) mesh axis size. With "
+                         "--pods N > 1 the compressed gradient wire "
+                         "runs ONE pod-bound collective per phase over "
+                         "the combined pod x data group (hierarchical "
+                         "transport: intra-pod ring + one compressed "
+                         "inter-pod bridge per hop group) instead of "
+                         "the sequential per-axis collectives. On CPU, "
+                         "simulate hosts with "
+                         "XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=None)
     ap.add_argument("--global-batch", type=int, default=None)
     ap.add_argument("--comm", default="baseline",
                     choices=["baseline", "qlc"])
     ap.add_argument("--transport", default="auto",
-                    choices=["auto", "oneshot", "ring"],
+                    choices=["auto", "oneshot", "ring", "hierarchical"],
                     help="compressed-collective transport: 'auto' lets "
-                         "the planner's alpha-beta model pick one-shot "
-                         "vs ring (+ hop chunking) per collective/axis")
+                         "the planner's per-link-class alpha-beta model "
+                         "pick one-shot vs ring/hierarchical (+ hop "
+                         "chunking) per collective/axis; 'hierarchical' "
+                         "(with --pods > 1) forces the intra-pod ring + "
+                         "inter-pod bridge schedule")
     ap.add_argument("--moe-wire", default="auto",
                     choices=["auto", "qlc", "raw"],
                     help="expert all_to_all wire for shardmap_a2a MoE "
@@ -90,12 +104,20 @@ def main():
     if args.distributed:
         jax.distributed.initialize()
 
+    if args.pods < 1:
+        raise SystemExit(f"--pods must be >= 1, got {args.pods}")
+    if args.transport == "hierarchical" and args.pods == 1:
+        raise SystemExit(
+            "--transport hierarchical needs --pods > 1 (a pod axis to "
+            "bridge); with one pod it would just be the ring")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = make_reduced(cfg)
-        mesh = make_test_mesh()
+        mesh = make_test_mesh(pods=args.pods)
     else:
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        mesh = make_production_mesh(
+            multi_pod=args.multi_pod,
+            pods=args.pods if args.pods > 1 else None)
     if args.moe_wire == "qlc" and cfg.moe is not None:
         # an explicit compressed expert wire implies real expert-
         # parallel dispatch (the other impls never touch the wire)
@@ -155,13 +177,17 @@ def main():
             registry.register_tables("grads", tables, plan)
             registry.register("params", histogram_of_tree(params),
                               chunk_symbols=plan.chunk_symbols)
+            hierarchical = args.pods > 1 and "pod" in mesh.axis_names
             if args.autotune:
-                _autotune_transports(registry, cfg, mesh, train_cfg)
+                _autotune_transports(registry, cfg, mesh, train_cfg,
+                                     hierarchical=hierarchical)
 
             def build_step():
                 return jax.jit(make_compressed_step(
                     cfg, opt_cfg, train_cfg, mesh, registry,
-                    transport=args.transport, moe_channels=moe_channels,
+                    transport=args.transport,
+                    hierarchical_wire=hierarchical,
+                    moe_channels=moe_channels,
                     telemetry=args.adapt))
 
             step = build_step()
@@ -196,14 +222,23 @@ def main():
     print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
 
 
-def _autotune_transports(registry, model_cfg, mesh, train_cfg):
+def _autotune_transports(registry, model_cfg, mesh, train_cfg,
+                         hierarchical: bool = False):
     """Autotune the step's per-axis transports into the registry.
 
     Builds one ``transport="auto"`` channel per (tensor type, dp axis)
     — the same binding ``make_compressed_step`` opens — and runs
     ``Channel.autotune`` at the flat-gradient payload each axis
-    actually moves; the tuned ``TransportConfig``s land in the
-    registry's cache, which the step's auto channels consult first.
+    actually moves, probing each axis's WIRE bandwidth on the real mesh
+    (``mesh=`` — one timed ppermute per axis, cached per link class in
+    the registry) alongside decode throughput. The tuned
+    ``TransportConfig``s land in the registry's cache, which the
+    step's auto channels consult first.
+
+    ``hierarchical=True`` mirrors the ``--pods`` wire: one POD-BOUND
+    channel per tensor type over the combined pod x data group (the
+    wire probe then measures both the ICI "data" hop and the DCN "pod"
+    bridge) instead of per-axis flat channels.
     """
     from repro.comm.channel import Channel, ChannelSpec
     from repro.training.train_step import dp_axes_in, flat_geometry
@@ -211,6 +246,18 @@ def _autotune_transports(registry, model_cfg, mesh, train_cfg):
     _, n_padded, _, _ = flat_geometry(
         model_cfg, mesh, train_cfg, registry["grads"].config())
     n = n_padded
+    if hierarchical and "pod" in dp_axes and "data" in dp_axes:
+        ld, pd = int(mesh.shape["data"]), int(mesh.shape["pod"])
+        for name, is_reduce in (("grads", True), ("params", False)):
+            ch = Channel(ChannelSpec(codec=name, transport="auto",
+                                     axis="data", axis_size=ld,
+                                     pod_axis="pod", pod_axis_size=pd),
+                         registry=registry)
+            tuned = ch.autotune(4 * (n // (ld * pd)),
+                                is_reduce=is_reduce, mesh=mesh)
+            logging.info("autotuned %s over pod x data (%d x %d): %s",
+                         name, pd, ld, tuned.transport)
+        return
     for ax in (a for a in ("data", "pod") if a in dp_axes):
         d = int(mesh.shape[ax])
         # grads feed the reduce-scatter (charged its per-rank
@@ -219,7 +266,9 @@ def _autotune_transports(registry, model_cfg, mesh, train_cfg):
             ch = Channel(ChannelSpec(codec=name, transport="auto",
                                      axis=ax, axis_size=d),
                          registry=registry)
-            tuned = ch.autotune(4 * (n // d), is_reduce=is_reduce)
+            tuned = ch.autotune(4 * (n // d), is_reduce=is_reduce,
+                                mesh=mesh,
+                                axis_link="dcn" if ax == "pod" else "ici")
             logging.info("autotuned %s over %s (d=%d): %s",
                          name, ax, d, tuned.transport)
         n //= d

@@ -3,5 +3,7 @@
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
 HBM_BW = 819e9                  # bytes/s per chip
 ICI_LINK_BW = 50e9              # bytes/s per link (~ per the brief)
+DCN_LINK_BW = 12.5e9            # bytes/s cross-pod per host (~100 Gb/s NIC)
+DCN_LATENCY_S = 10e-6           # cross-pod first-byte latency (vs ~1us ICI)
 VMEM_BYTES = 16 * 2 ** 20       # per-core VMEM (approx)
 HBM_BYTES = 16 * 2 ** 30        # v5e HBM capacity

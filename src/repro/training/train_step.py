@@ -51,6 +51,7 @@ PARAM_TYPE = "params"    # registry key for the parameter all-gather
 
 def step_channels(codec, comm_cfg: CommConfig = None, *,
                   dp_sizes, rs_order, transport=None, transport_model=None,
+                  pod_axis=None,
                   grad_key: str = GRAD_TYPE, param_key: str = PARAM_TYPE):
     """Open the compressed step's wire channels: one per (collective,
     dp axis) — the single point where codec x transport x axis is bound
@@ -74,6 +75,13 @@ def step_channels(codec, comm_cfg: CommConfig = None, *,
     charged its per-rank accumulate dispatches), or a dict with
     ``grad_key``/``param_key`` entries — per-collective transport
     policies next to the per-collective codec keys.
+
+    ``pod_axis`` (with its size present in ``dp_sizes``) binds every
+    opened channel to that slow second axis: each collective then runs
+    once over the combined pod x local group (``rs_order`` should name
+    only the local axis), and ``"hierarchical"``/``"auto"`` transports
+    ring within the pod while bridging pods with one compressed
+    exchange per hop group — the multi-host wire.
 
     Returns ``(rs_channels, ag_channels, rs_cfg)``: ``{axis: Channel}``
     maps over ``rs_order``, plus the gradient wire's resolved
@@ -112,9 +120,13 @@ def step_channels(codec, comm_cfg: CommConfig = None, *,
             f"{rs_cfg.chunk_symbols} vs {ag_cfg.chunk_symbols}")
 
     def open_axis(codec_, cfg_, t, ax):
+        pod_kw = {}
+        if pod_axis is not None and ax != pod_axis:
+            pod_kw = dict(pod_axis=pod_axis,
+                          pod_axis_size=int(dp_sizes[pod_axis]))
         return Channel(
             ChannelSpec(codec=codec_, cfg=cfg_, transport=t, axis=ax,
-                        axis_size=int(dp_sizes[ax])),
+                        axis_size=int(dp_sizes[ax]), **pod_kw),
             registry=registry, model=transport_model)
 
     rs_ch = {ax: open_axis(rs_codec, rs_cfg, rs_t, ax) for ax in rs_order}
@@ -303,6 +315,7 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
                          param_key: str = PARAM_TYPE,
                          transport=None,
                          transport_model=None,
+                         hierarchical_wire: bool = False,
                          moe_channels=None,
                          telemetry: bool = False) -> Callable:
     """train_step(params, flat_opt_state, batch) for compressed mode.
@@ -332,6 +345,16 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
     ``benchmarks/transport_overlap.py`` measures; default constants
     are the v5e first-order guesses.
 
+    ``hierarchical_wire=True`` (the ``launch/train.py --pods`` path)
+    replaces the per-axis sequential collectives on a pod x data mesh
+    with ONE pod-bound channel per collective: the reduce-scatter and
+    all-gather each run once over the combined group in pod-major rank
+    order, and a ``"hierarchical"`` (or ``"auto"``-chosen) transport
+    rings within the pod while bridging pods with one compressed
+    exchange per hop group. Bit-identical gradients to the one-shot
+    combined-group wire; on a mesh without a ``"pod"`` axis the flag
+    is a no-op.
+
     All wire decisions are bound ONCE at step build time as
     :class:`~repro.comm.channel.Channel` objects — one per
     (collective, dp axis) — via :func:`step_channels`.
@@ -351,11 +374,16 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
     dp_axes = dp_axes_in(mesh, train_cfg)
     dp_sizes = {a: mesh.shape[a] for a in dp_axes}
     dp_total = dp_size_of(mesh, train_cfg)
-    rs_order = tuple(a for a in ("data", "pod") if a in dp_axes)
+    pod_axis = ("pod" if hierarchical_wire and "pod" in dp_axes
+                and "data" in dp_axes else None)
+    if pod_axis is not None:
+        rs_order = ("data",)            # one pod-bound combined group
+    else:
+        rs_order = tuple(a for a in ("data", "pod") if a in dp_axes)
     rs_ch, ag_ch, comm_cfg = step_channels(
         tables, comm_cfg, dp_sizes=dp_sizes, rs_order=rs_order,
         transport=transport, transport_model=transport_model,
-        grad_key=grad_key, param_key=param_key)
+        pod_axis=pod_axis, grad_key=grad_key, param_key=param_key)
 
     p_specs, _ = _manual_param_specs(model_cfg, mesh)
     # Stacked-grad specs: stage 1 (model under auto) may only reference
@@ -415,7 +443,8 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
         seg = g_flat
         ok = jnp.bool_(True)
         ghist = phist = jnp.zeros((256,), jnp.int32)
-        for ax in rs_order:                     # intra-pod, then cross-pod
+        for ax in rs_order:     # intra-pod then cross-pod (flat mode),
+                                # or ONE pod-bound combined group
             if telemetry:
                 (seg, _valid, ok_i), h = rs_ch[ax].reduce_scatter(
                     seg, with_hist=True)
@@ -425,8 +454,12 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
             ok &= ok_i
         seg = seg / dp_total                    # mean over dp
 
-        # exact global grad norm: weight out model-replication
-        idx = jnp.int32(0)
+        # exact global grad norm: weight out model-replication. With a
+        # pod-bound wire the segment owner is the pod-major combined
+        # rank (the channel's rank convention); flat mode keeps the
+        # historic rs_order fold.
+        idx = (jax.lax.axis_index(pod_axis).astype(jnp.int32)
+               if pod_axis is not None else jnp.int32(0))
         for ax in rs_order:
             idx = idx * dp_sizes[ax] + jax.lax.axis_index(ax)
         w_seg = jax.lax.dynamic_slice(
@@ -442,7 +475,7 @@ def make_compressed_step(model_cfg: ModelConfig, opt_cfg: opt.OptConfig,
             p_seg, seg, opt_local, opt_cfg, gnorm)
 
         full = new_seg
-        for ax in reversed(rs_order):           # cross-pod, then intra-pod
+        for ax in reversed(rs_order):   # mirrored: cross-pod first
             if telemetry:
                 full, ok_i, h = ag_ch[ax].all_gather(full, with_hist=True)
                 phist = phist + h

@@ -1,9 +1,13 @@
-"""Helper to run multi-device (fake-device CPU) checks in a subprocess.
+"""Helpers for multi-device subprocess checks and markdown tooling.
 
 jax fixes the device count at first init, so tests needing N>1 devices
-spawn a fresh interpreter with XLA_FLAGS set before importing jax.
+spawn a fresh interpreter with XLA_FLAGS set before importing jax
+(:func:`run_md`). The markdown helpers back ``tests/test_docs.py``:
+the docs/ book's code blocks execute through the same subprocess
+harness.
 """
 import os
+import re
 import subprocess
 import sys
 import textwrap
@@ -33,3 +37,75 @@ def run_md(code: str, n_devices: int = 8, timeout: int = 900) -> str:
             f"multi-device subprocess failed\nSTDOUT:\n{proc.stdout}\n"
             f"STDERR:\n{proc.stderr}")
     return proc.stdout
+
+
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_code_blocks(path: str, lang: str = "python"):
+    """Fenced ```lang blocks of a markdown file as [(lineno, code)].
+
+    ``lineno`` is the 1-based line of the opening fence — enough to
+    point a failure back at the doc. Unterminated fences raise.
+    """
+    blocks, cur, start = [], None, 0
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            m = _FENCE_RE.match(line.strip())
+            if cur is None:
+                if m and m.group(1) == lang:
+                    cur, start = [], i
+            elif line.strip() == "```":
+                blocks.append((start, "".join(cur)))
+                cur = None
+            else:
+                cur.append(line)
+    if cur is not None:
+        raise ValueError(f"{path}:{start}: unterminated ``` fence")
+    return blocks
+
+
+_LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def heading_anchors(path: str):
+    """GitHub-style anchor slugs of a markdown file's headings."""
+    anchors = set()
+    with open(path) as f:
+        in_fence = False
+        for line in f:
+            if line.strip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING_RE.match(line)
+            if m:
+                text = re.sub(r"[`*_]", "", m.group(1)).strip().lower()
+                slug = re.sub(r"[^a-z0-9 -]", "", text)
+                anchors.add(re.sub(r" ", "-", slug))
+    return anchors
+
+
+def markdown_links(path: str):
+    """Intra-repo links of a markdown file as [(lineno, target)].
+
+    External (``http``/``https``/``mailto``) links are skipped — CI
+    must not depend on the network.
+    """
+    links = []
+    with open(path) as f:
+        in_fence = False
+        for i, line in enumerate(f, 1):
+            if line.strip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK_RE.finditer(line):
+                t = m.group(1)
+                if t.startswith(("http://", "https://", "mailto:")):
+                    continue
+                links.append((i, t))
+    return links

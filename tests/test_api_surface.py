@@ -20,13 +20,17 @@ import repro.serving as serving
 EXPECTED = {
     # channel API — the binding seam
     "Channel", "ChannelSpec", "open_channels", "measure_decode_Bps",
+    "measure_wire_Bps",
     # wire format / local codec machinery
     "CommConfig", "CommPlan", "WirePayload", "ReduceScatterResult",
     "wire_bytes", "pad_to_multiple", "resolve_codec", "plan_for_tables",
-    # transport planning
+    # transport planning (PR 10: per-link-class multi-host model)
     "AlphaBetaModel", "TransportConfig", "ONESHOT", "RING",
+    "HIERARCHICAL", "TRANSPORT_KINDS", "LINK_CLASSES",
     "choose_transport", "modeled_oneshot_time", "modeled_ring_time",
     "choose_a2a_transport", "modeled_a2a_ring_time",
+    "modeled_hierarchical_time", "modeled_hierarchical_oneshot_time",
+    "modeled_flat_ring_time",
     "resolve_transport", "transport_crossover_bytes",
     # container wire (self-describing payloads)
     "ContainerHeader", "parse_header", "pack_stream", "stream_headers",
